@@ -1,0 +1,48 @@
+"""Kernel-shape sweep for the Pallas GQMV/GQMM (interpret mode on CPU; the
+BlockSpec tiling is the TPU artifact). Reports per-call time of the XLA
+path (the math the kernels implement) across the shapes the assigned
+architectures actually use."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.quant import quantize_activation, quantize_groupwise
+from repro.kernels import ops
+
+# (label, m, n, gs) from the assigned archs' serve-path projections
+SHAPES = [
+    ("tinyllama_wqkv", 2560, 2048, 256),
+    ("internlm2_w13", 16384, 2048, 256),
+    ("gemma2_w2", 2304, 9216, 256),
+    ("dscoder_w2", 7168, 19200, 256),
+    ("pixtral_wqkv", 6144, 5120, 256),
+]
+
+
+def run():
+    rng = np.random.default_rng(2)
+    for label, m, n, gs in SHAPES:
+        w = quantize_groupwise(jnp.asarray(rng.normal(size=(m, n)).astype(np.float32)), gs)
+        x = quantize_activation(jnp.asarray(rng.normal(size=(n,)).astype(np.float32)), gs)
+        fn = jax.jit(lambda wq, ws, xq, xs: ops.gqmv(wq, ws, xq, xs, group_size=gs, impl="xla"))
+        us = time_fn(fn, w.qvalues, w.scales, x.qvalues, x.scales, iters=3)
+        gops = 2.0 * m * n / (us * 1e-6) / 1e9
+        emit(f"kernels/gqmv/{label}", us, f"{gops:.2f} GOPS")
+
+    # batched GQMM at decode batch sizes
+    for b in (8, 32, 128):
+        m, n, gs = 4096, 4096, 256
+        w = quantize_groupwise(jnp.asarray(rng.normal(size=(m, n)).astype(np.float32)), gs)
+        x = quantize_activation(jnp.asarray(rng.normal(size=(b, n)).astype(np.float32)), gs)
+        fn = jax.jit(lambda wq, ws, xq, xs: ops.gqmm(wq, ws, xq, xs, group_size=gs, impl="xla"))
+        us = time_fn(fn, w.qvalues, w.scales, x.qvalues, x.scales, iters=3)
+        gops = 2.0 * b * m * n / (us * 1e-6) / 1e9
+        emit(f"kernels/gqmm/b{b}", us, f"{gops:.2f} GOPS")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Paper Table II: forward-pass runtime distribution (TinyLlama).
+
+The paper profiles the TinyLlama decode forward pass on the ZCU102 ARM PS at
+positions 63/127/255 and finds matrix computation >97% of runtime. We time
+each component at the paper's exact dimensions (dim=2048, hidden=5632,
+kv_dim=256, 22 layers, batch 1) on this host and report the same breakdown.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.models.common import apply_rope, rmsnorm, swiglu
+
+DIM, HIDDEN, VOCAB, LAYERS = 2048, 5632, 32000, 22
+HEADS, KV_HEADS, HEAD_DIM = 32, 4, 64
+
+
+def run():
+    rng = np.random.default_rng(0)
+    f32 = np.float32
+    x = jnp.asarray(rng.normal(size=(DIM,)).astype(f32))
+
+    # per-layer weights at TinyLlama shapes
+    wqkv = jnp.asarray(rng.normal(size=(DIM + 2 * KV_HEADS * HEAD_DIM, DIM)).astype(f32) * 0.02)
+    wo = jnp.asarray(rng.normal(size=(DIM, DIM)).astype(f32) * 0.02)
+    w13 = jnp.asarray(rng.normal(size=(2 * HIDDEN, DIM)).astype(f32) * 0.02)
+    w2 = jnp.asarray(rng.normal(size=(DIM, HIDDEN)).astype(f32) * 0.02)
+    wcls = jnp.asarray(rng.normal(size=(VOCAB, DIM)).astype(f32) * 0.02)
+    norm_w = jnp.ones((DIM,))
+
+    matmuls = jax.jit(lambda v: wcls @ (w2 @ swiglu(*jnp.split(w13 @ (wo @ (wqkv @ v)[:DIM]), 2))))
+
+    def components(pos):
+        k = jnp.asarray(rng.normal(size=(1, pos + 1, KV_HEADS, HEAD_DIM)).astype(f32))
+        v = jnp.asarray(rng.normal(size=(1, pos + 1, KV_HEADS, HEAD_DIM)).astype(f32))
+        q = jnp.asarray(rng.normal(size=(1, 1, HEADS, HEAD_DIM)).astype(f32))
+
+        def mha(q, k, v):
+            qg = q.reshape(1, 1, KV_HEADS, HEADS // KV_HEADS, HEAD_DIM)
+            s = jnp.einsum("bskgh,btkh->bkgst", qg, k) / HEAD_DIM**0.5
+            a = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bkgst,btkh->bskgh", a, v)
+
+        gate = jnp.asarray(rng.normal(size=(HIDDEN,)).astype(f32))
+        up = jnp.asarray(rng.normal(size=(HIDDEN,)).astype(f32))
+        comps = {
+            # one token's worth of matrix computation (all layers + classifier)
+            "matrix_computation": (jax.jit(lambda a: matmuls(a)), (x,), LAYERS),
+            "multi_head_attention": (jax.jit(mha), (q, k, v), LAYERS),
+            "swiglu": (jax.jit(swiglu), (gate, up), LAYERS),
+            "rope": (jax.jit(lambda t: apply_rope(t, jnp.asarray([[pos]]), 1e4)), (q,), LAYERS),
+            "rmsnorm": (jax.jit(lambda a: rmsnorm(a, norm_w)), (x,), 3 * LAYERS),
+        }
+        return comps
+
+    for pos in (63, 127, 255):
+        rows = []
+        for name, (fn, args, mult) in components(pos).items():
+            us = time_fn(fn, *args) * mult
+            rows.append((name, us))
+        total = sum(us for _, us in rows)
+        for name, us in rows:
+            emit(f"table2/pos{pos}/{name}", us, f"{100*us/total:.2f}%")
+
+
+if __name__ == "__main__":
+    run()

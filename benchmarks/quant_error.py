@@ -1,0 +1,52 @@
+"""Paper Table IV: group-wise quantization error statistics (GS=256).
+
+Paper reports, over all TinyLlama weight groups: max 0.0115, min 0.0,
+mean 2.65e-4, std 1.73e-4, plus mean relative error 3.30% (std 11.57%).
+We quantize TinyLlama-shaped weight tensors (same init family) and report
+the same statistics.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.quant import quantization_error_stats, quantize_groupwise
+
+SHAPES = [  # TinyLlama weight matrices (paper Table I)
+    (32000, 2048),   # embeddings
+    (32000, 2048),   # classifier
+    (2048, 2048), (2048, 2048),        # Wq, Wo
+    (256, 2048), (256, 2048),          # Wk, Wv
+    (5632, 2048), (5632, 2048),        # W1, W3
+    (2048, 5632),                      # W2
+]
+
+
+def run():
+    rng = np.random.default_rng(0)
+    errs, rels = [], []
+    t0 = time.perf_counter()
+    for i, shape in enumerate(SHAPES):
+        w = jnp.asarray((rng.normal(size=shape) * 0.02).astype(np.float32))
+        qt = quantize_groupwise(w, 256)
+        err = np.abs(np.asarray(qt.dequantize()) - np.asarray(w))
+        errs.append(err.ravel())
+        denom = np.abs(np.asarray(w))
+        rels.append((err / np.where(denom > 0, denom, 1.0)).ravel())
+    us = (time.perf_counter() - t0) * 1e6 / len(SHAPES)
+    e = np.concatenate(errs)
+    r = np.concatenate(rels)
+    emit("table4/int8_gs256_max", us, f"{e.max():.4g}")
+    emit("table4/int8_gs256_min", us, f"{e.min():.4g}")
+    emit("table4/int8_gs256_mean", us, f"{e.mean():.4g}")
+    emit("table4/int8_gs256_std", us, f"{e.std():.4g}")
+    emit("table4/rel_err_mean_pct", us, f"{100*r.mean():.2f}%")
+    emit("table4/rel_err_std_pct", us, f"{100*r.std():.2f}%")
+
+
+if __name__ == "__main__":
+    run()

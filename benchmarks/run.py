@@ -1,0 +1,32 @@
+"""Benchmark harness: one module per paper table. CSV: name,us_per_call,derived.
+
+  table2 -> profile_forward  (paper Table II: runtime distribution)
+  table4 -> quant_error      (paper Table IV: quantization error stats)
+  table5 -> quality          (paper Table V: PPL fp32 vs W8A8)
+  table6 -> throughput       (paper Table VI: tok/s, GOPS, scheduling)
+  kernels -> kernel_bench    (GQMV/GQMM kernel-shape sweep, interpret mode)
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, profile_forward, quant_error, quality, throughput
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    suites = {
+        "table2": profile_forward.run,
+        "table4": quant_error.run,
+        "table5": quality.run,
+        "table6": throughput.run,
+        "kernels": kernel_bench.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and only != name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper Table VI: inference speed / GQMV throughput / scheduling ablation.
+
+Paper (TinyLlama on ZCU102): PS baseline 0.201 GOPS / 0.093 tok/s; LlamaF
+4.696 GOPS (23.4x), 1.33-1.48 tok/s (14.3-15.8x), +55.6-57.9% from async
+scheduling, 6.1x tok/s/W.
+
+This container has no FPGA/TPU, so we report three layers of evidence:
+  1. measured host tok/s of the serving engine, fp32 vs W8A8 (structure);
+  2. measured GQMV GOPS at the paper's two kernel shapes (kernel1: n=dim,
+     kernel2: n=hidden_dim);
+  3. DERIVED v5e roofline for full-size TinyLlama batch-1 decode: tok/s from
+     weight-stream bytes (the paper's regime), W32 vs W8A8, plus the
+     async-overlap ablation (serialized transfer+compute vs overlapped),
+     which is the paper's Fig.2 scheduling experiment at the HBM level.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.quant import quantize_activation, quantize_groupwise
+from repro.kernels import ops
+from repro.models.registry import build, load_config
+from repro.serving.engine import InferenceEngine
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def measured_engine_toks():
+    cfg = load_config("tinyllama-1.1b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 16)), dtype=jnp.int32)}
+    steps = 32
+    for name, quant in (("ps_baseline_fp32", False), ("llamaf_w8a8", True)):
+        eng = InferenceEngine(model, params, cache_len=16 + steps, quantize=quant)
+        eng.generate(batch, steps)  # warm/compile
+        t0 = time.perf_counter()
+        eng.generate(batch, steps)
+        dt = time.perf_counter() - t0
+        emit(f"table6/measured_host/{name}", dt * 1e6 / steps, f"{steps/dt:.2f} tok/s")
+
+
+def measured_gqmv_gops():
+    rng = np.random.default_rng(1)
+    for name, (m, n) in (("kernel1_dim", (2048, 2048)), ("kernel2_hidden", (2048, 5632))):
+        w = quantize_groupwise(jnp.asarray(rng.normal(size=(m, n)).astype(np.float32)), 256)
+        x = quantize_activation(jnp.asarray(rng.normal(size=(n,)).astype(np.float32)), 256)
+        fn = jax.jit(lambda wq, ws, xq, xs: ops.gqmv(wq, ws, xq, xs, group_size=256, impl="xla"))
+        us = time_fn(fn, w.qvalues, w.scales, x.qvalues, x.scales)
+        gops = 2.0 * m * n / (us * 1e-6) / 1e9
+        emit(f"table6/measured_gqmv/{name}", us, f"{gops:.2f} GOPS")
+
+
+def derived_v5e_roofline():
+    # full-size TinyLlama: 1.1B params; batch-1 decode reads every weight once
+    n_params = 1.1e9
+    for name, bytes_per_w, extra in (
+        ("w32a32", 4.0, 0.0),
+        ("w8a8_gs256", 1.0, 4.0 / 256),   # int8 + fp32 scale per 256 group
+    ):
+        wbytes = n_params * (bytes_per_w + extra)
+        mem_s = wbytes / HBM_BW
+        comp_s = 2 * n_params / PEAK
+        overlapped = max(mem_s, comp_s)
+        serial = mem_s + comp_s
+        emit(f"table6/derived_v5e/{name}_tok_s", overlapped * 1e6, f"{1/overlapped:.1f} tok/s")
+        emit(f"table6/derived_v5e/{name}_no_overlap_tok_s", serial * 1e6,
+             f"{1/serial:.1f} tok/s (+{100*(serial-overlapped)/overlapped:.1f}% from overlap)")
+    speedup = 4.0 + 0 - 0  # bytes ratio w32/w8a8
+    emit("table6/derived_v5e/quant_speedup", 0.0,
+         f"{(4.0)/(1.0+4.0/256):.2f}x (paper: 14.3-15.8x vs scalar ARM PS)")
+
+
+def run():
+    measured_engine_toks()
+    measured_gqmv_gops()
+    derived_v5e_roofline()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,170 @@
+"""Model / run configuration dataclasses.
+
+One ``ModelConfig`` describes any architecture in the assigned pool; family-
+specific sub-configs (MoE / MLA / SSM) are optional attachments. Every config
+file in this package exports ``CONFIG`` (full size, exact assigned dims) —
+the full configs are only ever *lowered* (dry-run); smoke tests use
+``reduced()`` variants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int
+    num_shared: int = 0            # shared (always-on) experts, deepseek-v2 style
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int
+    q_lora_rank: int               # 0 => direct q projection
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    model_type: str                # decoder_lm | rwkv6 | zamba2 | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+
+    # gemma2 specifics
+    gemma_norms: bool = False      # (1+w) RMSNorm, embed * sqrt(d), post-norms
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    query_scale: Optional[float] = None     # gemma2 query_pre_attn_scalar
+    sliding_window: Optional[int] = None
+    layer_pattern: Optional[str] = None     # "LG" = alternating local/global
+
+    tie_embeddings: bool = False
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # zamba2 hybrid: one SHARED attention block applied every k SSM layers
+    shared_attn_every: int = 0
+
+    # enc-dec (seamless)
+    encoder_layers: int = 0
+
+    # modality frontend stubs (vlm / audio): input_specs() supplies embeddings
+    frontend: Optional[str] = None          # patch_embed | frames
+    num_frontend_tokens: int = 0
+
+    group_size: int = 256                   # paper §III-A GS
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    sub_quadratic: bool = False             # eligible for long_500k
+
+    # ---------------------------------------------------------------------
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 32 so embedding/classifier rows
+        shard evenly over the 16-way model axis (labels never hit the pad)."""
+        return ((self.vocab_size + 31) // 32) * 32
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        changes = dict(
+            num_layers=min(self.num_layers, 2),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            d_ff=256,
+            vocab_size=512,
+            head_dim=32,
+            group_size=32,
+            num_frontend_tokens=min(self.num_frontend_tokens, 4),
+            encoder_layers=min(self.encoder_layers, 2),
+            sliding_window=64 if self.sliding_window else None,
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            param_dtype="float32",
+            compute_dtype="float32",
+        )
+        if self.layer_pattern:
+            changes["layer_pattern"] = self.layer_pattern[: changes["num_layers"]]
+        if self.moe:
+            changes["moe"] = MoEConfig(
+                num_experts=min(self.moe.num_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                d_expert=64,
+                num_shared=min(self.moe.num_shared, 1),
+            )
+        if self.mla:
+            changes["mla"] = MLAConfig(
+                kv_lora_rank=32,
+                q_lora_rank=32 if self.mla.q_lora_rank else 0,
+                qk_nope_dim=16,
+                qk_rope_dim=16,
+                v_head_dim=16,
+            )
+        if self.ssm:
+            changes["ssm"] = SSMConfig(state_dim=16, head_dim=16, expand=2, conv_kernel=4)
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def step_name(self) -> str:
+        return {"train": "train_step", "prefill": "prefill_step", "decode": "serve_step"}[self.kind]
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}

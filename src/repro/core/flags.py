@@ -1,0 +1,58 @@
+"""Perf-variant feature flags (hillclimbing switches).
+
+Every optimization beyond the paper-faithful baseline sits behind a flag so
+§Perf can lower/compile both variants of the same cell:
+
+  deferred_decode_cache  decode steps return only the new K/V rows from the
+                         layer scan; one donated dynamic-update-slice commits
+                         them after the scan (kills the per-layer full-cache
+                         copy the scan-ys baseline dataflow implies)
+  blockwise_attention    chunked online-softmax attention (flash-style) for
+                         train/prefill: O(chunk) score buffers instead of the
+                         full (b, heads, s, t) materialization. TPU deployment
+                         uses the Pallas kernel (kernels/flash_attn.py); the
+                         XLA fallback here is its math-identical reference.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+FLAGS: dict[str, bool | int] = {
+    "deferred_decode_cache": False,
+    "blockwise_attention": False,
+    "attention_chunk": 1024,
+    # KV cache stored (L,B,KV,T,hd) so decode attention contracts the last
+    # axis of both operands — no per-layer transpose materialization.
+    # Implies deferred_decode_cache for the decode path.
+    "kvt_cache_layout": False,
+    # Paper's C1 applied to the KV cache: symmetric int8 per (position, head)
+    # with fp32 scales (group = head_dim). Scales factor out of the score and
+    # context sums exactly like GQMV's group scales. Implies kvt layout.
+    "int8_kv_cache": False,
+    # Prefill is compute-bound (tens of thousands of tokens per weight read),
+    # so W8A8 GQMV buys nothing there and its int32 group-sum buffers cost
+    # real traffic in the XLA path. This flag dequantizes each int8 weight
+    # once per layer and runs the bf16 MXU matmul instead; decode still runs
+    # GQMV. Weights stay int8 in HBM either way (the paper's storage win).
+    "prefill_dequant": False,
+    # Mamba2's chunked SSD (matmul duality): process the time axis in chunks
+    # of ssd_chunk, intra-chunk via MXU matmuls, carry the state once per
+    # chunk instead of once per step (state HBM traffic / ssd_chunk).
+    "chunked_ssd": False,
+    "ssd_chunk": 128,
+}
+
+
+def get(name: str):
+    return FLAGS[name]
+
+
+@contextlib.contextmanager
+def overrides(**kw):
+    old = {k: FLAGS[k] for k in kw}
+    FLAGS.update(kw)
+    try:
+        yield
+    finally:
+        FLAGS.update(old)

@@ -1,0 +1,116 @@
+"""Post-training quantization policy (paper §III-A, Table I).
+
+The paper quantizes: token embeddings, classifier, attention projections,
+FFN matrices. It leaves RMSNorm weights in fp32 ("smaller size leading to
+negligible overhead"). We generalize the same reasoning to the assigned
+architectures: every large (out, in) matmul weight is quantized; small /
+accuracy-critical leaves (norms, MoE routers, SSM decay params, conv
+kernels, biases, RoPE tables) stay in float.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, quantize_groupwise
+
+# Leaf-name patterns that are never quantized (generalizes the paper's
+# RMSNorm exemption).
+EXCLUDE_PATTERNS = (
+    "norm",        # all RMSNorm / LayerNorm weights (paper Table I: "No")
+    "router",      # MoE gates: tiny and routing-accuracy critical
+    "a_log", "dt_bias", "d_skip",   # Mamba2 SSM scan parameters
+    "conv",        # depthwise conv kernels (tiny)
+    "decay", "bonus", "mix", "lora",  # RWKV6 data-dependent decay / token-shift
+    "bias",
+)
+
+MIN_QUANT_DIM = 32  # don't quantize anything smaller than one group
+
+
+from repro.core.treepath import path_str as _tree_path_str
+
+
+def _path_str(path) -> str:
+    return _tree_path_str(path).lower()
+
+
+# Leaves whose CONTRACTION axis is sharded over the model axis when serving
+# tensor-parallel (Megatron row-parallel). Quantization groups must then fit
+# within one shard, so the per-leaf group size divides n/tp. MoE expert
+# leaves are EP-sharded (expert axis), so their contraction stays whole.
+ROW_PARALLEL_KEYS = ("wo", "w2", "wout", "wff2")
+
+
+def _row_parallel(path: str) -> bool:
+    if "experts" in path:
+        return False
+    leafname = path.rsplit("/", 1)[-1]
+    return leafname in ROW_PARALLEL_KEYS
+
+
+def should_quantize(path: str, leaf: Any, group_size: int) -> bool:
+    if not isinstance(leaf, jnp.ndarray | jax.Array):
+        return False
+    if leaf.ndim < 2:
+        return False
+    if any(p in path for p in EXCLUDE_PATTERNS):
+        return False
+    n = leaf.shape[-1]
+    return n % group_size == 0 and n >= MIN_QUANT_DIM
+
+
+def leaf_group_size(path: str, leaf, preferred: int, tp: int = 1) -> int | None:
+    """Per-leaf GS: the largest power of two <= ``preferred`` that divides the
+    per-shard contraction dim (n/tp for row-parallel leaves, n otherwise).
+    Returns None if no GS >= 16 fits (leaf then stays unquantized)."""
+    n = leaf.shape[-1]
+    if _row_parallel(path):
+        if n % tp:
+            return None
+        n //= tp
+    gs = preferred
+    while gs >= 16:
+        if n % gs == 0:
+            return gs
+        gs //= 2
+    return None
+
+
+def quantize_params(params, group_size: int, tp: int = 1):
+    """PTQ driver: replace every quantizable weight leaf with a
+    QuantizedTensor (groups along the trailing/contraction axis).
+
+    ``tp`` is the tensor-parallel degree of the serving mesh; it constrains
+    per-leaf group sizes so groups never straddle shard boundaries."""
+
+    def convert(path, leaf):
+        p = _path_str(path)
+        if not should_quantize(p, leaf, 16):
+            return leaf
+        gs = leaf_group_size(p, leaf, group_size, tp)
+        if gs is None:
+            return leaf
+        return quantize_groupwise(leaf, gs)
+
+    return jax.tree_util.tree_map_with_path(convert, params)
+
+
+def quantized_fraction(params) -> float:
+    """Fraction of parameter bytes stored as int8 after PTQ (for reporting:
+    paper compresses 4.4 GB -> 1.1 GB, i.e. ~97% of bytes quantized)."""
+    q_bytes = tot_bytes = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    ):
+        if isinstance(leaf, QuantizedTensor):
+            b = leaf.nbytes()
+            q_bytes += b
+            tot_bytes += b
+        else:
+            tot_bytes += leaf.size * leaf.dtype.itemsize
+    return q_bytes / max(tot_bytes, 1)

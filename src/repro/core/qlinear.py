@@ -1,0 +1,56 @@
+"""Quantization-aware linear / embedding primitives.
+
+Every weight-bearing matmul in the model zoo goes through ``linear``: when
+the weight leaf is a plain array it is an ordinary (bf16/f32) matmul; when it
+is a :class:`QuantizedTensor` the call becomes the paper's W8A8 GQMV/GQMM
+(run-time activation quantization + group-wise int8 kernel).
+
+Weights follow the paper's (out, in) row-major layout with quantization
+groups along the *in* (contraction) axis.
+
+Kernel-launch fusion (paper C4: concatenated Wq+Wk+Wv, W1+W3) is expressed
+by storing the concatenated matrix as one leaf and splitting the output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flags
+from repro.core.quant import QuantizedTensor
+from repro.kernels import ops
+
+__all__ = ["linear", "embedding_lookup", "split_fused"]
+
+
+def linear(w, x: jax.Array, *, impl: str = "auto") -> jax.Array:
+    """y = x @ W^T for W (out, in); W8A8 path when W is quantized."""
+    if isinstance(w, QuantizedTensor):
+        if flags.get("prefill_dequant"):
+            # compute-bound many-token passes: one dequant + bf16 MXU matmul
+            # beats GQMV's int32 group-sum buffers (flags.py rationale)
+            return jnp.einsum("...i,oi->...o", x, w.dequantize(x.dtype))
+        return ops.quantized_matmul(x, w, impl=impl).astype(x.dtype)
+    return jnp.einsum("...i,oi->...o", x, w.astype(x.dtype))
+
+
+def embedding_lookup(w, ids: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Row gather from a (vocab, d) table; dequantizes gathered rows when the
+    table is int8-quantized (paper quantizes W_embeddings, Table I)."""
+    if isinstance(w, QuantizedTensor):
+        q = jnp.take(w.qvalues, ids, axis=0)                    # (..., d) int8
+        s = jnp.take(w.scales, ids, axis=0)                     # (..., d/GS)
+        g = q.reshape(*q.shape[:-1], w.num_groups, w.group_size).astype(dtype)
+        return (g * s[..., None].astype(dtype)).reshape(q.shape)
+    return jnp.take(w, ids, axis=0).astype(dtype)
+
+
+def split_fused(y: jax.Array, sizes: tuple[int, ...]):
+    """Split the output of a fused projection (paper Alg. 2 lines 4, 12)."""
+    outs, off = [], 0
+    for s in sizes:
+        outs.append(y[..., off:off + s])
+        off += s
+    assert off == y.shape[-1], (off, y.shape)
+    return outs

@@ -1,0 +1,165 @@
+"""Group-wise symmetric INT8 quantization (paper §II-B, §III-A).
+
+Implements the paper's W8A8 scheme:
+
+  Q(r)  = Int(r / S),            S = 2 * max(|r|) / 255        (Eq. 1)
+  r_hat = Q(r) * S                                             (Eq. 2)
+
+with *group-wise* scales: the contraction axis is split into groups of
+``GS`` elements (GS=256 in the paper) and each group gets its own scale.
+
+The quantized weight of a (m, n) matrix is stored exactly like the paper's
+flattened ``wq``/``ws`` arrays, but kept 2-D for JAX/sharding friendliness:
+
+  qvalues : int8   (m, n)        -- row-major, groups contiguous along n
+  scales  : float32 (m, n // GS) -- one scale per (row, group)
+
+Activations are quantized at run time with the same scheme along their
+last axis (paper Alg. 2 lines 3/8/13/16).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_GROUP_SIZE = 256  # paper §III-A: GS=256 divides every TinyLlama dim
+
+__all__ = [
+    "DEFAULT_GROUP_SIZE",
+    "QuantizedTensor",
+    "quantize_groupwise",
+    "dequantize",
+    "quantize_activation",
+    "choose_group_size",
+    "quantization_error_stats",
+]
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """A group-wise symmetric-int8 quantized tensor.
+
+    ``qvalues`` has the original shape; ``scales`` has the same shape with the
+    last axis reduced by ``group_size``. Groups run along the LAST axis, which
+    by convention is the contraction axis of the matmul that consumes this
+    tensor (paper stores W row-major with groups along the column/input dim).
+    """
+
+    qvalues: jax.Array  # int8, shape (..., n)
+    scales: jax.Array   # float32, shape (..., n // group_size)
+    group_size: int
+
+    # -- pytree protocol (keyed, so checkpoint/sharding paths stay readable)
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("qvalues"), self.qvalues), (ga("scales"), self.scales)), (self.group_size,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        qvalues, scales = children
+        return cls(qvalues=qvalues, scales=scales, group_size=aux[0])
+
+    # -- conveniences -------------------------------------------------------
+    @property
+    def shape(self):
+        return self.qvalues.shape
+
+    @property
+    def num_groups(self):
+        return self.scales.shape[-1]
+
+    def astuple(self):
+        return self.qvalues, self.scales
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return dequantize(self, dtype=dtype)
+
+    def nbytes(self) -> int:
+        return int(np.prod(self.qvalues.shape)) + 4 * int(np.prod(self.scales.shape))
+
+
+def _check_group_size(n: int, group_size: int) -> None:
+    if n % group_size != 0:
+        raise ValueError(
+            f"last axis ({n}) must be divisible by group_size ({group_size}); "
+            "pick GS per paper §III-A (GS must divide every quantized dim)"
+        )
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def quantize_groupwise(r: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> QuantizedTensor:
+    """Symmetric int8 group-wise quantization along the last axis (Eq. 1).
+
+    S = 2*max|r|/255 per group, so r/S spans [-127.5, 127.5]; rounding to
+    nearest then clipping to [-127, 127] uses the full signed-int8 range the
+    way the paper's Int() does, without the -128 asymmetry.
+    """
+    n = r.shape[-1]
+    _check_group_size(n, group_size)
+    g = r.reshape(*r.shape[:-1], n // group_size, group_size).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(g), axis=-1)
+    scales = absmax * (2.0 / 255.0)
+    # Avoid 0/0 for all-zero groups; scale value is irrelevant there (q==0).
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(g / safe[..., None]), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(
+        qvalues=q.reshape(r.shape),
+        scales=scales.astype(jnp.float32),
+        group_size=group_size,
+    )
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    """r_hat = Q(r) * S (Eq. 2)."""
+    n = qt.qvalues.shape[-1]
+    g = qt.qvalues.reshape(*qt.qvalues.shape[:-1], qt.num_groups, qt.group_size)
+    out = g.astype(jnp.float32) * qt.scales[..., None]
+    return out.reshape(qt.qvalues.shape).astype(dtype)
+
+
+def quantize_activation(x: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> QuantizedTensor:
+    """Run-time activation quantization (paper Alg. 2 lines 3/8/13/16).
+
+    Same math as weights; a separate entry point so quantization policy can
+    diverge later (e.g. per-tensor activations) without touching weight code.
+    """
+    return quantize_groupwise(x, group_size=group_size)
+
+
+def choose_group_size(dims: list[int], preferred: int = DEFAULT_GROUP_SIZE) -> int:
+    """Pick the largest GS <= preferred that divides every quantized dim.
+
+    Paper picks 256 because every TinyLlama dim divides by it; assigned archs
+    have dims like 5632/14336/10752 where this still holds, but e.g. a 1408
+    FFN (deepseek-v2-lite) needs GS=128. Powers of two only, >= 32.
+    """
+    gs = preferred
+    while gs >= 32:
+        if all(d % gs == 0 for d in dims):
+            return gs
+        gs //= 2
+    raise ValueError(f"no group size in [32, {preferred}] divides all of {dims}")
+
+
+def quantization_error_stats(r: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> dict[str, float]:
+    """Per-element |r_hat - r| statistics (paper Table IV, Eq. 3)."""
+    qt = quantize_groupwise(r, group_size)
+    err = jnp.abs(qt.dequantize() - r.astype(jnp.float32))
+    denom = jnp.where(jnp.abs(r) > 0, jnp.abs(r), 1.0)
+    rel = err / denom
+    return {
+        "max": float(jnp.max(err)),
+        "min": float(jnp.min(err)),
+        "mean": float(jnp.mean(err)),
+        "std": float(jnp.std(err)),
+        "rel_mean_pct": float(100.0 * jnp.mean(rel)),
+        "rel_std_pct": float(100.0 * jnp.std(rel)),
+    }

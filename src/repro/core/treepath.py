@@ -1,0 +1,21 @@
+"""Canonical pytree path -> string conversion shared by policy/ckpt/sharding."""
+
+from __future__ import annotations
+
+from jax.tree_util import DictKey, FlattenedIndexKey, GetAttrKey, SequenceKey
+
+
+def key_str(entry) -> str:
+    if isinstance(entry, DictKey):
+        return str(entry.key)
+    if isinstance(entry, GetAttrKey):
+        return str(entry.name)
+    if isinstance(entry, SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, FlattenedIndexKey):
+        return str(entry.key)
+    return str(entry)
+
+
+def path_str(path) -> str:
+    return "/".join(key_str(p) for p in path)

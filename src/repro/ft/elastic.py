@@ -1,0 +1,74 @@
+"""Fault tolerance & elasticity.
+
+Large-fleet failure model and how each piece maps to this framework:
+
+  failure                         mechanism here
+  ------------------------------- -------------------------------------------
+  pod/host loss mid-run           atomic checkpoints (checkpoint/ckpt.py) +
+                                  ``elastic_mesh()`` rebuilding the mesh from
+                                  the devices that are still alive; restore
+                                  re-lays-out host arrays onto the new mesh
+  slow straggler step             rolling-median step-time flagging in
+                                  train/loop.py (feeds a health controller)
+  data-loss on restart            data iterator state == integer step stored
+                                  in the checkpoint manifest (exact resume)
+  collective hang                 per-step deadline via block_until_ready in
+                                  the driver; a missed deadline triggers
+                                  checkpoint-restart on the surviving mesh
+  inter-pod bandwidth brownout    int8-group gradient compression
+                                  (optim/compress.py) halves/quarters wire
+                                  bytes; hierarchical reduce keeps cross-pod
+                                  traffic to one reduce-scatter per step
+
+Elasticity contract: sharding rules are written against AXIS NAMES
+(dist/sharding.py), never device counts, so any mesh reshape that preserves
+axis names revalidates the same pjit programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+
+
+def plan_mesh(num_devices: int, *, model_parallel: int = 16,
+              multi_pod_threshold: int = 512) -> MeshPlan:
+    """Choose a (pod, data, model) factorization for whatever devices remain.
+
+    model_parallel is capped at the device count; data absorbs the rest;
+    a pod axis appears only when there are enough devices for >1 pod.
+    """
+    mp = math.gcd(model_parallel, num_devices)
+    rest = num_devices // mp
+    if num_devices >= multi_pod_threshold and rest % 2 == 0:
+        return MeshPlan((2, rest // 2, mp), ("pod", "data", "model"))
+    return MeshPlan((rest, mp), ("data", "model"))
+
+
+def elastic_mesh(devices=None, **kw) -> Mesh:
+    """Build the best mesh for the currently-alive device set."""
+    devices = list(devices if devices is not None else jax.devices())
+    plan = plan_mesh(len(devices), **kw)
+    arr = np.array(devices).reshape(plan.shape)
+    return Mesh(arr, plan.axes)
+
+
+def survivors_after_failure(devices, failed_indices: set[int]):
+    """Simulate losing devices (tests); returns the surviving list truncated
+    to the largest power-of-two-friendly count for remeshing."""
+    alive = [d for i, d in enumerate(devices) if i not in failed_indices]
+    # keep the largest count with a clean (data, model) factorization
+    n = len(alive)
+    while n > 0 and math.gcd(n, 16) not in (1, 2, 4, 8, 16):
+        n -= 1
+    return alive[:n]

@@ -1,0 +1,89 @@
+"""Public jit'd entry points for quantized matmul kernels.
+
+Dispatch policy (``impl``):
+  'pallas'    pl.pallas_call, compiled for TPU (Mosaic)
+  'interpret' same kernel body, Pallas interpreter on CPU (validation)
+  'xla'       pure-XLA int8 dot_general path, bit-identical math; used by
+              the distributed models and the dry-run, where the CPU backend
+              cannot compile Mosaic kernels (see DESIGN.md §2)
+  'auto'      pallas on TPU, xla elsewhere
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, quantize_activation
+from repro.kernels import gqmv as _pallas
+from repro.kernels import ref as _ref
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve(impl: str) -> str:
+    return _default_impl() if impl == "auto" else impl
+
+
+@partial(jax.jit, static_argnames=("group_size", "impl"))
+def gqmv(
+    wq: jax.Array,
+    ws: jax.Array,
+    xq: jax.Array,
+    xs: jax.Array,
+    *,
+    group_size: int,
+    impl: str = "auto",
+) -> jax.Array:
+    """out (m,) = groupwise-quantized W (m,n) @ x (n,). Paper Alg. 1/3."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return _ref.gqmv_ref(wq, ws, xq, xs, group_size=group_size)
+    return _pallas.gqmv_pallas(
+        wq, ws, xq, xs, group_size=group_size, interpret=(impl == "interpret")
+    )
+
+
+@partial(jax.jit, static_argnames=("group_size", "impl"))
+def gqmm(
+    wq: jax.Array,
+    ws: jax.Array,
+    xq: jax.Array,
+    xs: jax.Array,
+    *,
+    group_size: int,
+    impl: str = "auto",
+) -> jax.Array:
+    """out (b, m) = batched GQMV; b = tokens for prefill / batch for decode."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return _ref.gqmm_ref(wq, ws, xq, xs, group_size=group_size)
+    return _pallas.gqmm_pallas(
+        wq, ws, xq, xs, group_size=group_size, interpret=(impl == "interpret")
+    )
+
+
+def quantized_matmul(
+    x: jax.Array, w: QuantizedTensor, *, impl: str = "auto"
+) -> jax.Array:
+    """y = x @ dequant(w).T with run-time activation quantization (W8A8).
+
+    ``x`` is float (..., n); weights are a QuantizedTensor (m, n) with groups
+    along n. Returns float32 (..., m). This is the composable entry point the
+    model layers use (paper Alg. 2: "RMSNorm and quantize x; kernel1(...)").
+    """
+    xq = quantize_activation(x, group_size=w.group_size)
+    lead = x.shape[:-1]
+    if lead == ():
+        out = gqmv(w.qvalues, w.scales, xq.qvalues, xq.scales,
+                   group_size=w.group_size, impl=impl)
+        return out
+    flat_q = xq.qvalues.reshape(-1, x.shape[-1])
+    flat_s = xq.scales.reshape(-1, xq.scales.shape[-1])
+    out = gqmm(w.qvalues, w.scales, flat_q, flat_s,
+               group_size=w.group_size, impl=impl)
+    return out.reshape(*lead, w.shape[0])

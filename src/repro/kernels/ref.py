@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the GQMV/GQMM kernels (paper Algorithm 1).
+
+These are the ground truth the Pallas kernels are validated against. They
+follow the paper's arithmetic exactly:
+
+  for each output row i:
+    for each group j (of GS columns):
+      group_sum = sum_k  xq[j*GS+k] * wq[i, j*GS+k]        # int8*int8 -> int32
+      sum      += group_sum * ws[i, j] * xs[j]             # fp32 scaling
+    out[i] = sum
+
+i.e. integer accumulation *within* a group, float scale-and-accumulate
+*across* groups.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def gqmv_ref(
+    wq: jax.Array,   # int8 (m, n)
+    ws: jax.Array,   # float32 (m, n // GS)
+    xq: jax.Array,   # int8 (n,)
+    xs: jax.Array,   # float32 (n // GS,)
+    *,
+    group_size: int,
+) -> jax.Array:
+    """out[m] = GQMV(W, x) per paper Alg. 1. Returns float32 (m,)."""
+    m, n = wq.shape
+    ng = n // group_size
+    wg = wq.reshape(m, ng, group_size).astype(jnp.int32)
+    xg = xq.reshape(ng, group_size).astype(jnp.int32)
+    group_sums = jnp.einsum("mgk,gk->mg", wg, xg)              # int32 (m, ng)
+    scaled = group_sums.astype(jnp.float32) * ws * xs[None, :]  # fp32 (m, ng)
+    return jnp.sum(scaled, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def gqmm_ref(
+    wq: jax.Array,   # int8 (m, n)
+    ws: jax.Array,   # float32 (m, n // GS)
+    xq: jax.Array,   # int8 (b, n)
+    xs: jax.Array,   # float32 (b, n // GS)
+    *,
+    group_size: int,
+) -> jax.Array:
+    """Batched GQMV: out[b, m]. The paper runs batch=1; this is the natural
+    batched generalization (same per-row math for every batch element)."""
+    m, n = wq.shape
+    b = xq.shape[0]
+    ng = n // group_size
+    wg = wq.reshape(m, ng, group_size).astype(jnp.int32)
+    xg = xq.reshape(b, ng, group_size).astype(jnp.int32)
+    group_sums = jnp.einsum("mgk,bgk->bmg", wg, xg)             # int32
+    scaled = group_sums.astype(jnp.float32) * ws[None] * xs[:, None, :]
+    return jnp.sum(scaled, axis=-1)
+
+
+def gqmv_from_qt(w: QuantizedTensor, x: QuantizedTensor) -> jax.Array:
+    assert w.group_size == x.group_size
+    return gqmv_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=w.group_size)
+
+
+def gqmm_from_qt(w: QuantizedTensor, x: QuantizedTensor) -> jax.Array:
+    assert w.group_size == x.group_size
+    return gqmm_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=w.group_size)

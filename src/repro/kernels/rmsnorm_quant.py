@@ -1,0 +1,78 @@
+"""Fused RMSNorm + group-wise int8 activation quantization (Pallas TPU).
+
+Paper Alg. 2 lines 3/11/16: every GQMV is preceded by "RMSNorm and quantize
+x". Unfused, that chain costs 4 HBM round-trips of the activation (read x,
+write normed, read normed, write q+scales); fused in VMEM it is one read +
+one (int8!) write — the decode-path traffic item measured as
+``copy_abs_fusion`` in EXPERIMENTS.md §Perf C.
+
+Layout: x (m, n) with quantization groups along n (GS divides n). One grid
+step processes a (bm, n) row block entirely in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, q_ref, s_ref, *, group_size: int, eps: float):
+    x = x_ref[...].astype(jnp.float32)                    # (bm, n)
+    bm, n = x.shape
+    inv = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    normed = x * inv * w_ref[...].astype(jnp.float32)[None, :]
+    g = normed.reshape(bm, n // group_size, group_size)
+    absmax = jnp.max(jnp.abs(g), axis=-1)
+    scales = absmax * (2.0 / 255.0)
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(g / safe[..., None]), -127, 127).astype(jnp.int8)
+    q_ref[...] = q.reshape(bm, n)
+    s_ref[...] = scales
+
+
+def rmsnorm_quant_pallas(
+    x: jax.Array,     # (m, n)
+    w: jax.Array,     # (n,)
+    *,
+    group_size: int,
+    eps: float = 1e-5,
+    block_m: int = 256,
+    interpret: bool = False,
+):
+    """-> (qvalues int8 (m, n), scales f32 (m, n/GS))."""
+    m, n = x.shape
+    bm = min(block_m, m)
+    while m % bm:
+        bm //= 2
+    ng = n // group_size
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_kernel, group_size=group_size, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, ng), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int8),
+            jax.ShapeDtypeStruct((m, ng), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w)
+
+
+def rmsnorm_quant_ref(x, w, *, group_size: int, eps: float = 1e-5):
+    """Pure-jnp oracle: models/common.rmsnorm + core/quant.quantize_groupwise."""
+    from repro.core.quant import quantize_groupwise
+    from repro.models.common import rmsnorm
+
+    normed = rmsnorm(x.astype(jnp.float32), w, eps)
+    qt = quantize_groupwise(normed, group_size)
+    return qt.qvalues, qt.scales

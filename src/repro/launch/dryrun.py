@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run (deliverable e): lower + compile every
+# (architecture x input shape) cell on the production meshes and record
+# memory/cost/roofline terms. MUST set XLA_FLAGS before any jax import.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec  # noqa: E402
+from repro.core import flags as perf_flags  # noqa: E402
+from repro.core.policy import quantize_params  # noqa: E402
+from repro.dist import logical  # noqa: E402
+from repro.dist import sharding as shd  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.registry import ARCH_IDS, build, input_specs, load_config  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.train.loop import make_train_step  # noqa: E402
+
+RESULTS_PATH = "experiments/dryrun_results.json"
+
+ASSIGNED = [a for a in ARCH_IDS if a != "tinyllama-1.1b"]
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "full-attention arch: 500k decode cache/attn is quadratic-class (DESIGN.md)"
+    return None
+
+
+def count_params(struct) -> int:
+    import math
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(struct)
+               if hasattr(l, "shape") and l.ndim > 0)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec, n_params: int) -> float:
+    """6*N*D (train) / 2*N*D (inference); N = active params for MoE."""
+    n = n_params
+    if cfg.moe:
+        m = cfg.moe
+        expert_p = cfg.num_layers * m.num_experts * 3 * m.d_expert * cfg.d_model
+        active = cfg.num_layers * (m.top_k + m.num_shared) * 3 * m.d_expert * cfg.d_model
+        n = n - expert_p + active
+    if cfg.model_type == "encdec" and shape.kind != "train":
+        n = n  # decoder+cross only dominate; keep total (conservative)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    return (6.0 if shape.kind == "train" else 2.0) * n * tokens
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Returns (fn, example_args, in_shardings, donate) for jit."""
+    model = build(cfg)
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        params = jax.eval_shape(model.init, key)
+        opt = jax.eval_shape(adamw.init, params)
+        batch = input_specs(cfg, shape)
+        p_specs = shd.param_specs(params, mesh, "train")
+        o_specs = adamw.AdamWState(
+            step=P(),
+            m=shd.param_specs(params, mesh, "train"),
+            v=shd.param_specs(params, mesh, "train"),
+        )
+        b_specs = shd.batch_specs(batch, mesh)
+        opt_cfg = adamw.AdamWConfig()
+        step_fn = make_train_step(model, opt_cfg)
+        in_sh = (shd.shardings(p_specs, mesh),
+                 jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                              is_leaf=lambda x: isinstance(x, P)),
+                 shd.shardings(b_specs, mesh))
+        out_sh = (in_sh[0], in_sh[1],
+                  jax.tree.map(lambda _: NamedSharding(mesh, P()), {"loss": 0, "grad_norm": 0, "lr": 0}))
+        return step_fn, (params, opt, batch), in_sh, out_sh, (0, 1), params
+
+    # serving cells run the paper's W8A8 weights
+    params = jax.eval_shape(model.init, key)
+    qparams = jax.eval_shape(
+        lambda p: quantize_params(p, cfg.group_size, tp=mesh.shape["model"]), params
+    )
+    qp_specs = shd.param_specs(qparams, mesh, "serve")
+    qp_sh = shd.shardings(qp_specs, mesh)
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        b_specs = shd.batch_specs(batch, mesh)
+
+        def prefill_step(p, b):
+            return model.prefill(p, b, shape.seq_len)
+
+        cache = jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len, cfg.cdtype()))
+        c_specs = shd.cache_specs(cache, mesh, shape.global_batch)
+        out_sh = (NamedSharding(mesh, shd.logits_spec(mesh, 2, shape.global_batch)), shd.shardings(c_specs, mesh))
+        return prefill_step, (qparams, batch), (qp_sh, shd.shardings(b_specs, mesh)), out_sh, (), qparams
+
+    # decode
+    cache = jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len, cfg.cdtype()))
+    c_specs = shd.cache_specs(cache, mesh, shape.global_batch)
+    c_sh = shd.shardings(c_specs, mesh)
+    tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    dp = shd.dp_axes(mesh)
+    tok_sh = NamedSharding(
+        mesh, P(dp) if shape.global_batch % max(1, int(jnp.prod(jnp.asarray([mesh.shape[a] for a in dp])))) == 0 and dp else P()
+    )
+
+    def serve_step(p, t, c, ps):
+        return model.decode(p, t, c, ps)
+
+    out_sh = (NamedSharding(mesh, shd.logits_spec(mesh, 2, shape.global_batch)), c_sh)
+    return serve_step, (qparams, tok, cache, pos), (qp_sh, tok_sh, c_sh, NamedSharding(mesh, P())), out_sh, (2,), qparams
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "baseline") -> dict:
+    cfg = load_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "step": shape.step_name,
+        "variant": variant,
+    }
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, donate, params_struct = build_cell(cfg, shape, mesh)
+        with mesh, logical.use_mesh_rules(mesh):
+            lowered = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+            ).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            n_params = count_params(params_struct)
+            mf = model_flops(cfg, shape, n_params)
+            rl, rep = hlo_analysis.roofline_from_compiled(
+                compiled, mesh.devices.size, model_flops=mf
+            )
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "num_params": n_params,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            },
+            "roofline": rl.as_dict(),
+            "collectives": {"bytes_by_kind": rep.bytes_by_kind,
+                            "counts": rep.num_collectives},
+        })
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def load_results(path: str) -> dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(path: str, results: dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=RESULTS_PATH)
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--variant", default="baseline",
+                    help="label for this run; non-baseline keys get suffixed")
+    ap.add_argument("--set", action="append", default=[], metavar="FLAG=VAL",
+                    help="perf flag overrides, e.g. --set blockwise_attention=1")
+    args = ap.parse_args()
+
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        perf_flags.FLAGS[k] = int(v) if v.isdigit() else v
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = load_results(args.out)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+                if args.variant != "baseline":
+                    key += f"|{args.variant}"
+                if key in results and results[key]["status"] == "ok" and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[run] {key}", flush=True)
+                rec = run_cell(arch, shape, mp, variant=args.variant)
+                results[key] = rec
+                save_results(args.out, results)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']} step={r['step_s']:.4f}s "
+                             f"mfu={r['mfu']:.3f} compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"[{status}] {key}{extra}", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

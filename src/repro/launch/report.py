@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun_results.json.
+
+    PYTHONPATH=src python -m repro.launch.report [results.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def dryrun_table(results: dict) -> str:
+    rows = ["| cell | mesh | step | status | compile | params | arg bytes/dev | temp bytes/dev | collectives (per-dev bytes) |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        r = results[key]
+        parts = key.split("|")
+        arch, shape = parts[0], parts[1]
+        if len(parts) > 3:
+            arch += f" [{parts[3]}]"
+        if r["status"] == "ok":
+            mem = r["memory"]
+            coll = r["collectives"]["bytes_by_kind"]
+            coll_s = ", ".join(f"{k}:{fmt_bytes(v)}" for k, v in sorted(coll.items())) or "none"
+            rows.append(
+                f"| {arch} x {shape} | {r['mesh']} | {r['step']} | ok | {r['compile_s']}s "
+                f"| {r['num_params']/1e9:.2f}B | {fmt_bytes(mem['argument_bytes'])} "
+                f"| {fmt_bytes(mem['temp_bytes'])} | {coll_s} |")
+        elif r["status"] == "skipped":
+            rows.append(f"| {arch} x {shape} | {r['mesh']} | {r['step']} | SKIP | - | - | - | - | {r['reason'][:60]} |")
+        else:
+            rows.append(f"| {arch} x {shape} | {r['mesh']} | {r['step']} | **ERROR** | - | - | - | - | {r['error'][:60]} |")
+    return "\n".join(rows)
+
+
+def roofline_table(results: dict, mesh_filter: str = "single") -> str:
+    rows = ["| arch x shape | chips | compute | memory | collective | dominant | step | MODEL_FLOPs | useful ratio | MFU |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        r = results[key]
+        if r["status"] != "ok":
+            continue
+        parts = key.split("|")
+        if parts[2] != mesh_filter:
+            continue
+        arch, shape = parts[0], parts[1]
+        if len(parts) > 3:
+            arch += f" [{parts[3]}]"
+        rl = r["roofline"]
+        rows.append(
+            f"| {arch} x {shape} | {rl['chips']} | {fmt_s(rl['compute_s'])} "
+            f"| {fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} "
+            f"| **{rl['dominant']}** | {fmt_s(rl['step_s'])} "
+            f"| {rl['model_flops']:.2e} | {rl['useful_flops_ratio']:.3f} "
+            f"| {rl['mfu']:.4f} |")
+    return "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    print("## Dry-run table (both meshes)\n")
+    print(dryrun_table(results))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(results, "single"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(results, "multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Quantizes the weights with the paper's group-wise W8A8 PTQ, then serves a
+batch of requests (greedy by default, like the paper's SQuAD evaluation).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import build, load_config
+from repro.serving.engine import InferenceEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=64, help="tokens to generate")
+    ap.add_argument("--no-quantize", action="store_true",
+                    help="fp32 'PS baseline' instead of W8A8")
+    ap.add_argument("--sampler", default="greedy", choices=["greedy", "top_p"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = load_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    cache_len = args.prompt_len + args.steps
+    engine = InferenceEngine(model, params, cache_len=cache_len,
+                             quantize=not args.no_quantize)
+    print(f"arch: {cfg.arch_id}  quantized bytes fraction: "
+          f"{engine.quantized_fraction:.3f}")
+
+    rng = np.random.default_rng(args.seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
+        dtype=jnp.int32)}
+    if cfg.model_type == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(args.batch, args.prompt_len, cfg.d_model)).astype(np.float32))
+
+    t0 = time.perf_counter()
+    res = engine.generate(batch, args.steps, sampler=args.sampler,
+                          key=jax.random.PRNGKey(args.seed))
+    jax.block_until_ready(res.tokens)
+    warm = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    res = engine.generate(batch, args.steps, sampler=args.sampler,
+                          key=jax.random.PRNGKey(args.seed + 1))
+    jax.block_until_ready(res.tokens)
+    hot = time.perf_counter() - t0
+
+    toks = args.batch * args.steps
+    print(f"generated {toks} tokens: warm {warm:.2f}s, hot {hot:.2f}s "
+          f"({toks / hot:.2f} tok/s)")
+    print("first sequence:", np.asarray(res.tokens[0])[:16].tolist())
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,550 @@
+"""Attention blocks: GQA (llama-family, gemma2 local/global+softcap) and
+MLA (multi-head latent attention: minicpm3, deepseek-v2).
+
+Each block exposes:
+  init_*          -> param dict (weights in (out, in) layout, quantizable)
+  *_forward       -> full-sequence self-attention (training / naive prefill)
+  *_prefill       -> forward + returns the cache tensors for decode
+  *_decode        -> single-token step against the cache
+
+Projections go through ``linear`` so the same code runs fp32/bf16 (training,
+"PS baseline") or W8A8 GQMV (paper path) depending on the weight leaf type.
+QKV is one fused projection (paper Alg. 2 line 4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import flags
+from repro.core.qlinear import linear, split_fused
+from repro.core.quant import QuantizedTensor
+from repro.dist import logical
+from repro.models.common import (
+    NEG_INF,
+    apply_rope,
+    causal_mask,
+    decode_mask,
+    dense_init,
+    rmsnorm,
+    softcap,
+)
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig) -> dict:
+    kq, ko = jax.random.split(key)
+    dt = cfg.pdtype()
+    return {
+        "wqkv": dense_init(kq, cfg.q_dim + 2 * cfg.kv_dim, cfg.d_model, dt),
+        "wo": dense_init(ko, cfg.d_model, cfg.q_dim, dt),
+    }
+
+
+def _gqa_scale(cfg: ModelConfig) -> float:
+    base = cfg.query_scale if cfg.query_scale is not None else cfg.resolved_head_dim
+    return base ** -0.5
+
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    qkv = linear(p["wqkv"], x)
+    q, k, v = split_fused(qkv, (cfg.q_dim, cfg.kv_dim, cfg.kv_dim))
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mha_blockwise(q, k, v, cfg: ModelConfig, *, causal=True, window=None,
+                   use_window=None):
+    """Chunked online-softmax attention (flash-style), XLA fallback of
+    kernels/flash_attn.py. Streams K/V in chunks of flags.attention_chunk;
+    never materializes the (b,kv,g,s,t) score tensor. Used for train/prefill
+    under flags.blockwise_attention; TPU deployment uses the Pallas kernel."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    tp = logical.size("tp")
+    if kv % tp == 0:
+        q = logical.constrain(q, "dp", None, "tp", None)
+        k = logical.constrain(k, "dp", None, "tp", None)
+        v = logical.constrain(v, "dp", None, "tp", None)
+        cspec = ("dp", "tp", None, None, None)
+    else:
+        cspec = ("dp", None, None, None, None)
+    chunk = int(flags.get("attention_chunk"))
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk //= 2
+    nchunks = t // chunk
+    qg = q.reshape(b, s, kv, g, hd)
+    scale = _gqa_scale(cfg)
+    q_pos = jnp.arange(s)
+
+    def body(carry, ic):
+        m_prev, l_prev, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ic * chunk, chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, ic * chunk, chunk, axis=1)
+        sc = jnp.einsum("bskgh,btkh->bkgst", qg, ks).astype(jnp.float32) * scale
+        sc = logical.constrain(sc, *cspec)
+        if cfg.attn_logit_softcap:
+            sc = softcap(sc, cfg.attn_logit_softcap)
+        k_pos = ic * chunk + jnp.arange(chunk)
+        ok = jnp.ones((s, chunk), bool)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            okw = ok & ((q_pos[:, None] - k_pos[None, :]) < window)
+            ok = okw if use_window is None else jnp.where(use_window, okw, ok)
+        sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p.astype(q.dtype), vs
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, kv, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nchunks))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h * hd)  # (b,s,kv,g,hd)->(b,s,h*hd)
+    return logical.constrain(out, "dp", None, "tp" if kv % tp == 0 else None)
+
+
+def _mha(q, k, v, mask, cfg: ModelConfig):
+    """q: (b,s,H,hd); k,v: (b,t,KV,hd); mask additive (s,t) or (b,s,t).
+
+    Logical sharding: kv-head-parallel when KV divides the model axis, else
+    q-sequence-parallel (train/prefill) or cache-sequence-parallel (decode).
+    Without annotations XLA SPMD replicates the (b,kv,g,s,t) score buffer
+    (measured: 120 GB/layer on deepseek-coder train_4k).
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    tp = logical.size("tp")
+    # batch-1 decode: shard the cache length over the FULL mesh (seq axes)
+    seq_ax = "seq" if (b == 1 and s == 1 and t % max(logical.size("seq"), 1) == 0
+                       and logical.size("seq") > 1) else "tp"
+    mode = "head" if kv % tp == 0 else ("seq" if s % tp == 0 else
+                                        ("cache" if t % tp == 0 else "none"))
+    if b == 1 and s == 1 and seq_ax == "seq":
+        mode = "cache"
+    if mode == "head":
+        q = logical.constrain(q, "dp", None, "tp", None)
+        k = logical.constrain(k, "dp", None, "tp", None)
+        v = logical.constrain(v, "dp", None, "tp", None)
+    elif mode == "seq":
+        q = logical.constrain(q, "dp", "tp", None, None)
+        k = logical.constrain(k, "dp", None, None, None)
+        v = logical.constrain(v, "dp", None, None, None)
+    elif mode == "cache":
+        k = logical.constrain(k, None if seq_ax == "seq" else "dp", seq_ax, None, None)
+        v = logical.constrain(v, None if seq_ax == "seq" else "dp", seq_ax, None, None)
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    score_spec = {
+        "head": ("dp", "tp", None, None, None),
+        "seq": ("dp", None, None, "tp", None),
+        "cache": (None if seq_ax == "seq" else "dp", None, None, None, seq_ax),
+        "none": ("dp", None, None, None, None),
+    }[mode]
+    scores = logical.constrain(scores, *score_spec)
+    scores *= _gqa_scale(cfg)
+    if cfg.attn_logit_softcap:
+        scores = softcap(scores, cfg.attn_logit_softcap)
+    scores = scores + mask[..., None, None, :, :] if mask.ndim == 2 else scores + mask[:, None, None]
+    attn = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    attn = logical.constrain(attn, *score_spec)
+    out = jnp.einsum("bkgst,btkh->bskgh", attn, v)
+    out = out.reshape(b, s, h, hd).reshape(b, s, h * hd)
+    return logical.constrain(
+        out, "dp", "tp" if mode == "seq" else None, "tp" if mode == "head" else None
+    )
+
+
+def _flag_mask(s: int, window, use_window):
+    """(s, s) additive mask; ``use_window`` may be a traced bool selecting the
+    sliding-window variant per layer (gemma2 L/G alternation inside scan)."""
+    full = causal_mask(s, None)
+    if window is None:
+        return full
+    local = causal_mask(s, window)
+    if use_window is None:
+        return local
+    return jnp.where(use_window, local, full)
+
+
+def _flag_decode_mask(cache_len: int, pos, window, use_window):
+    full = decode_mask(cache_len, pos, None)
+    if window is None:
+        return full
+    local = decode_mask(cache_len, pos, window)
+    if use_window is None:
+        return local
+    return jnp.where(use_window, local, full)
+
+
+def gqa_forward(p, x, cfg: ModelConfig, *, window=None, use_window=None, causal=True):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    if flags.get("blockwise_attention") and s > 1:
+        ctx = _mha_blockwise(q, k, v, cfg, causal=causal, window=window,
+                             use_window=use_window)
+    else:
+        mask = _flag_mask(s, window, use_window) if causal else jnp.zeros((s, s), jnp.float32)
+        ctx = _mha(q, k, v, mask, cfg)
+    return linear(p["wo"], ctx)
+
+
+def gqa_prefill(p, x, cfg: ModelConfig, cache_len: int, *, window=None, use_window=None):
+    """Returns (y, (k_cache, v_cache)) with caches padded to cache_len."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    if flags.get("blockwise_attention") and s > 1:
+        ctx = _mha_blockwise(q, k, v, cfg, window=window, use_window=use_window)
+    else:
+        mask = _flag_mask(s, window, use_window)
+        ctx = _mha(q, k, v, mask, cfg)
+    if flags.get("int8_kv_cache"):
+        pad = [(0, 0), (0, 0), (0, cache_len - s), (0, 0)]
+        pad_s = [(0, 0), (0, 0), (0, cache_len - s)]
+        kq, ks = _quantize_rows(k.transpose(0, 2, 1, 3))  # (b,KV,s,hd)/(b,KV,s)
+        vq, vs = _quantize_rows(v.transpose(0, 2, 1, 3))
+        return linear(p["wo"], ctx), (jnp.pad(kq, pad), jnp.pad(ks, pad_s),
+                                      jnp.pad(vq, pad), jnp.pad(vs, pad_s))
+    if flags.get("kvt_cache_layout"):
+        pad = [(0, 0), (0, 0), (0, cache_len - s), (0, 0)]
+        kc = jnp.pad(k.transpose(0, 2, 1, 3), pad)       # (b,KV,T,hd)
+        vc = jnp.pad(v.transpose(0, 2, 1, 3), pad)
+        return linear(p["wo"], ctx), (kc, vc)
+    pad = [(0, 0), (0, cache_len - s), (0, 0), (0, 0)]
+    return linear(p["wo"], ctx), (jnp.pad(k, pad), jnp.pad(v, pad))
+
+
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig, *, window=None, use_window=None):
+    """x: (b, d_model) single token; cache: (k, v) each (b, T, KV, hd);
+    pos: scalar int32 current position. Returns (y, new_cache)."""
+    k_cache, v_cache = cache
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k, v = _qkv(p, x[:, None, :], cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+    mask = _flag_decode_mask(k_cache.shape[1], pos, window, use_window)[None, None, :]
+    ctx = _mha(q, k_cache, v_cache, mask, cfg)                        # (b,1,q_dim)
+    return linear(p["wo"], ctx[:, 0, :]), (k_cache, v_cache)
+
+
+def _quantize_rows(t: jax.Array):
+    """Symmetric int8 over the last axis (head_dim = one group), Eq. 1.
+    t: (..., hd) -> (int8 rows, f32 scales (...))."""
+    absmax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scales = absmax * (2.0 / 255.0)
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / safe[..., None]), -127, 127)
+    return q.astype(jnp.int8), scales
+
+
+def gqa_decode_deferred_int8(p, x, cache, pos, cfg: ModelConfig, *, window=None,
+                             use_window=None):
+    """int8-KV-cache decode (paper's group-wise quantization applied to the
+    cache, kvt layout): scores = (q . k_q) * k_s; ctx = (attn * v_s) . v_q.
+    The per-position scales factor out of the sums exactly like the GQMV
+    group scales factor out of Alg. 1's group sums."""
+    kq_c, ks_c, vq_c, vs_c = cache      # (b,KV,T,hd) int8, (b,KV,T) f32
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    kv_heads = cfg.num_kv_heads
+    h = cfg.num_heads
+    g = h // kv_heads
+    t = kq_c.shape[2]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(p, x[:, None, :], cfg, positions)
+
+    tp = logical.size("tp")
+    tp_t = t % tp == 0
+    cspec = ("dp", None, "tp" if tp_t else None, None)
+    kq_c = logical.constrain(kq_c, *cspec)
+    vq_c = logical.constrain(vq_c, *cspec)
+    qg = q.reshape(b, kv_heads, g, hd)
+    scores = jnp.einsum("bkgh,bkth->bkgt", qg, kq_c.astype(x.dtype)).astype(jnp.float32)
+    scores = scores * ks_c[:, :, None, :]
+    cur = jnp.einsum("bkgh,bkh->bkg", qg, k_new[:, 0]).astype(jnp.float32)
+    scores = jax.lax.dynamic_update_slice(scores, cur[..., None], (0, 0, 0, pos))
+    scores = logical.constrain(scores, "dp", None, None, "tp" if tp_t else None)
+    scores *= _gqa_scale(cfg)
+    if cfg.attn_logit_softcap:
+        scores = softcap(scores, cfg.attn_logit_softcap)
+    scores = scores + _flag_decode_mask(t, pos, window, use_window)[None, None, None, :]
+    attn = jax.nn.softmax(scores, axis=-1)                    # f32 (b,kv,g,t)
+    ctx = jnp.einsum("bkgt,bkth->bkgh",
+                     (attn * vs_c[:, :, None, :]).astype(x.dtype),
+                     vq_c.astype(x.dtype))
+    attn_cur = jax.lax.dynamic_slice(attn, (0, 0, 0, pos), (b, kv_heads, g, 1))
+    ctx = ctx + attn_cur.astype(x.dtype) * v_new[:, 0][:, :, None, :]
+    ctx = ctx.reshape(b, h * hd)
+    kq_n, ks_n = _quantize_rows(k_new[:, 0])                  # (b,kv,hd)/(b,kv)
+    vq_n, vs_n = _quantize_rows(v_new[:, 0])
+    rows = (kq_n[:, :, None, :], ks_n[:, :, None],
+            vq_n[:, :, None, :], vs_n[:, :, None])
+    return linear(p["wo"], ctx), rows
+
+
+def gqa_decode_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None,
+                        use_window=None):
+    """Decode WITHOUT writing the cache: attends over the read-only cache
+    (whose slot at ``pos`` is still zero) plus the freshly-computed K/V row,
+    and returns that row for the caller to commit with ONE donated
+    dynamic-update-slice after the layer scan.
+
+    The baseline path funnels the full per-layer cache through the scan's
+    ys stack — a full cache read+write per step. This variant's per-layer
+    cache traffic is the attention read only (hillclimb: decode cells).
+
+    Supports both cache layouts: (b,T,KV,hd) baseline and (b,KV,T,hd)
+    attention-native (flags.kvt_cache_layout — the dots then contract the
+    trailing axis of both operands, no transpose materialization).
+    """
+    k_cache, v_cache = cache
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    kv_heads = cfg.num_kv_heads
+    kvt = bool(flags.get("kvt_cache_layout"))
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(p, x[:, None, :], cfg, positions)   # (b,1,H/KV,hd)
+
+    h = cfg.num_heads
+    g = h // kv_heads
+    t = k_cache.shape[2] if kvt else k_cache.shape[1]
+    # batch-1: shard the cache length over the FULL mesh ("seq"); else model
+    seq_sz = logical.size("seq")
+    if b == 1 and seq_sz > 1 and t % seq_sz == 0:
+        t_ax, b_ax, tp_t = "seq", None, True
+    else:
+        tp_t = t % logical.size("tp") == 0
+        t_ax, b_ax = ("tp" if tp_t else None), "dp"
+    cache_spec = (b_ax, None, t_ax, None) if kvt else (b_ax, t_ax, None, None)
+    k_cache = logical.constrain(k_cache, *cache_spec)
+    v_cache = logical.constrain(v_cache, *cache_spec)
+    qg = q.reshape(b, kv_heads, g, hd)
+    if kvt:
+        scores = jnp.einsum("bkgh,bkth->bkgt", qg, k_cache).astype(jnp.float32)
+    else:
+        scores = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache).astype(jnp.float32)
+    cur = jnp.einsum("bkgh,bkh->bkg", qg, k_new[:, 0]).astype(jnp.float32)
+    # overwrite the (zero-keyed) slot at pos with the current-token score
+    scores = jax.lax.dynamic_update_slice(scores, cur[..., None], (0, 0, 0, pos))
+    scores = logical.constrain(scores, b_ax, None, None, t_ax if tp_t else None)
+    scores *= _gqa_scale(cfg)
+    if cfg.attn_logit_softcap:
+        scores = softcap(scores, cfg.attn_logit_softcap)
+    mask = _flag_decode_mask(t, pos, window, use_window)
+    scores = scores + mask[None, None, None, :]
+    attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)   # (b,kv,g,t)
+    # v_cache slot at pos is zero, so its contribution is exactly the
+    # explicit current-token term below
+    if kvt:
+        ctx = jnp.einsum("bkgt,bkth->bkgh", attn, v_cache)
+    else:
+        ctx = jnp.einsum("bkgt,btkh->bkgh", attn, v_cache)
+    attn_cur = jax.lax.dynamic_slice(attn, (0, 0, 0, pos), (b, kv_heads, g, 1))
+    ctx = ctx + attn_cur * v_new[:, 0][:, :, None, :]   # (b,kv,g,1)x(b,kv,1,hd)
+    ctx = ctx.reshape(b, h * hd)
+    if kvt:
+        rows = (k_new[:, 0][:, :, None, :], v_new[:, 0][:, :, None, :])  # (b,kv,1,hd)
+    else:
+        rows = (k_new, v_new)                                            # (b,1,kv,hd)
+    return linear(p["wo"], ctx), rows
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    dt = cfg.pdtype()
+    keys = jax.random.split(key, 5)
+    h = cfg.num_heads
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    p = {
+        # fused latent-kv + rope-k projection (paper C4 fusion style)
+        "wdkv": dense_init(keys[0], m.kv_lora_rank + m.qk_rope_dim, cfg.d_model, dt),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dt),
+        "wukv": dense_init(keys[1], h * (m.qk_nope_dim + m.v_head_dim), m.kv_lora_rank, dt),
+        "wo": dense_init(keys[2], cfg.d_model, h * m.v_head_dim, dt),
+    }
+    if m.q_lora_rank:
+        p["wdq"] = dense_init(keys[3], m.q_lora_rank, cfg.d_model, dt)
+        p["q_norm"] = jnp.ones((m.q_lora_rank,), dt)
+        p["wuq"] = dense_init(keys[4], h * qk_dim, m.q_lora_rank, dt)
+    else:
+        p["wq"] = dense_init(keys[3], h * qk_dim, cfg.d_model, dt)
+    return p
+
+
+def _mla_q(p, x, cfg: ModelConfig, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    if m.q_lora_rank:
+        q = linear(p["wuq"], rmsnorm(linear(p["wdq"], x), p["q_norm"], cfg.norm_eps))
+    else:
+        q = linear(p["wq"], x)
+    q = q.reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg: ModelConfig, positions):
+    m = cfg.mla
+    c = linear(p["wdkv"], x)
+    c_kv, k_rope = c[..., : m.kv_lora_rank], c[..., m.kv_lora_rank:]
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _mla_scale(m) -> float:
+    return (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+
+
+def mla_forward(p, x, cfg: ModelConfig, *, window=None):
+    """Naive (materialized) MLA for training/prefill."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    positions = jnp.arange(s)[None, :]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    kv = linear(p["wukv"], c_kv).reshape(b, s, h, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+    tp = logical.size("tp")
+    mode = "head" if h % tp == 0 else ("seq" if s % tp == 0 else "none")
+    hspec = ("dp", None, "tp" if mode == "head" else None, None)
+    q_nope = logical.constrain(q_nope, *hspec)
+    k_nope = logical.constrain(k_nope, *hspec)
+    v = logical.constrain(v, *hspec)
+    scores = (
+        jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+        + jnp.einsum("bshd,btd->bhst", q_rope, k_rope)
+    ).astype(jnp.float32) * _mla_scale(m)
+    sspec = {"head": ("dp", "tp", None, None), "seq": ("dp", None, "tp", None),
+             "none": ("dp", None, None, None)}[mode]
+    scores = logical.constrain(scores, *sspec)
+    scores = scores + causal_mask(s, window)
+    attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    attn = logical.constrain(attn, *sspec)
+    ctx = jnp.einsum("bhst,bthd->bshd", attn, v).reshape(b, s, h * m.v_head_dim)
+    ctx = logical.constrain(ctx, "dp", None, "tp" if mode == "head" else None)
+    return linear(p["wo"], ctx)
+
+
+def mla_prefill(p, x, cfg: ModelConfig, cache_len: int, *, window=None):
+    """Cache = (c_kv, k_rope): the low-rank latent (MLA's memory saving)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    y = mla_forward(p, x, cfg, window=window)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    pad = [(0, 0), (0, cache_len - s), (0, 0)]
+    return y, (jnp.pad(c_kv, pad), jnp.pad(k_rope, pad))
+
+
+def _maybe_dequant(w):
+    return w.dequantize() if isinstance(w, QuantizedTensor) else w
+
+
+def mla_decode_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None):
+    """Absorbed MLA decode WITHOUT writing the latent cache: attends over the
+    read-only cache (slot ``pos`` still zero) plus the current latent row and
+    returns (c_new, r_new) for a single donated commit after the layer scan
+    (same dataflow as gqa_decode_deferred)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    c_cache, r_cache = cache                        # (b,T,kvr) / (b,T,rope)
+    t = c_cache.shape[1]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(p, x[:, None, :], cfg, positions)
+    c_new, r_new = _mla_latent(p, x[:, None, :], cfg, positions)   # (b,1,.)
+
+    seq_sz = logical.size("seq")
+    if b == 1 and seq_sz > 1 and t % seq_sz == 0:
+        t_ax, b_ax = "seq", None
+    else:
+        t_ax = "tp" if t % max(logical.size("tp"), 1) == 0 else None
+        b_ax = "dp"
+    c_cache = logical.constrain(c_cache, b_ax, t_ax, None)
+    r_cache = logical.constrain(r_cache, b_ax, t_ax, None)
+
+    wukv = _maybe_dequant(p["wukv"]).reshape(h, m.qk_nope_dim + m.v_head_dim, m.kv_lora_rank)
+    wuk, wuv = wukv[:, : m.qk_nope_dim, :], wukv[:, m.qk_nope_dim :, :]
+    q_abs = jnp.einsum("bhd,hdc->bhc", q_nope[:, 0], wuk.astype(x.dtype))
+    scores = (
+        jnp.einsum("bhc,btc->bht", q_abs, c_cache)
+        + jnp.einsum("bhd,btd->bht", q_rope[:, 0], r_cache)
+    ).astype(jnp.float32)
+    cur = (
+        jnp.einsum("bhc,bc->bh", q_abs, c_new[:, 0])
+        + jnp.einsum("bhd,bd->bh", q_rope[:, 0], r_new[:, 0])
+    ).astype(jnp.float32)
+    scores = jax.lax.dynamic_update_slice(scores, cur[..., None], (0, 0, pos))
+    scores = logical.constrain(scores, b_ax, None, t_ax)
+    scores = scores * _mla_scale(m) + decode_mask(t, pos, window)[None, None, :]
+    attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    # cache slot at pos is zero -> its contribution is the explicit term
+    ctx = jnp.einsum("bht,btc->bhc", attn, c_cache)
+    attn_cur = jax.lax.dynamic_slice(attn, (0, 0, pos), (b, h, 1))
+    ctx = ctx + attn_cur * c_new[:, 0][:, None, :]
+    out = jnp.einsum("bhc,hvc->bhv", ctx, wuv.astype(x.dtype)).reshape(b, h * m.v_head_dim)
+    return linear(p["wo"], out), (c_new, r_new)
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig, *, window=None):
+    """Absorbed-matrix decode: attends directly over the latent cache without
+    materializing per-position K/V (beyond-paper efficiency; the on-the-fly
+    dequantization of wukv mirrors what the GQMV kernel does in VMEM)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    c_cache, r_cache = cache                       # (b,T,kvr), (b,T,rope)
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(p, x[:, None, :], cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x[:, None, :], cfg, positions)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_kv, pos, axis=1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(r_cache, k_rope, pos, axis=1)
+
+    wukv = _maybe_dequant(p["wukv"]).reshape(h, m.qk_nope_dim + m.v_head_dim, m.kv_lora_rank)
+    wuk, wuv = wukv[:, : m.qk_nope_dim, :], wukv[:, m.qk_nope_dim :, :]
+    c_cache = logical.constrain(c_cache, "dp", "tp", None)   # latent cache: seq-parallel
+    r_cache = logical.constrain(r_cache, "dp", "tp", None)
+    q_abs = jnp.einsum("bhd,hdc->bhc", q_nope[:, 0], wuk.astype(x.dtype))
+    scores = (
+        jnp.einsum("bhc,btc->bht", q_abs, c_cache)
+        + jnp.einsum("bhd,btd->bht", q_rope[:, 0], r_cache)
+    ).astype(jnp.float32) * _mla_scale(m)
+    scores = logical.constrain(scores, "dp", None, "tp")
+    scores = scores + decode_mask(c_cache.shape[1], pos, window)[None, None, :]
+    attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    attn = logical.constrain(attn, "dp", None, "tp")
+    ctx = jnp.einsum("bht,btc->bhc", attn, c_cache)
+    out = jnp.einsum("bhc,hvc->bhv", ctx, wuv.astype(x.dtype)).reshape(b, h * m.v_head_dim)
+    return linear(p["wo"], out), (c_cache, r_cache)

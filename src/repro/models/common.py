@@ -1,0 +1,94 @@
+"""Shared model building blocks: norms, RoPE, activations, init, masks.
+
+Everything is functional: params are plain dict pytrees, layers are pure
+functions. Weight matrices use the paper's (out, in) layout so that the
+quantization groups run along the contraction axis (see core/qlinear.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, out_dim: int, in_dim: int, dtype) -> jax.Array:
+    scale = in_dim ** -0.5
+    return (jax.random.normal(key, (out_dim, in_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5, *, plus_one: bool = False) -> jax.Array:
+    """RMSNorm (paper's unquantized component, Table I). gemma2 stores w-1
+    and applies (1+w) — ``plus_one`` selects that convention."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (x32 * inv * scale).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate-half RoPE. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)                              # (dim/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, dim/2)
+    cos = jnp.cos(angles)[..., None, :]                         # (..., seq, 1, dim/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def causal_mask(seq: int, window: int | None = None) -> jax.Array:
+    """(seq, seq) additive mask; ``window`` enables sliding-window locality
+    (gemma2 local layers)."""
+    q = jnp.arange(seq)[:, None]
+    k = jnp.arange(seq)[None, :]
+    ok = k <= q
+    if window is not None:
+        ok &= (q - k) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def decode_mask(cache_len: int, pos: jax.Array, window: int | None = None) -> jax.Array:
+    """(cache_len,) additive mask for a single decode step at position ``pos``
+    (entries > pos are future/unwritten slots)."""
+    k = jnp.arange(cache_len)
+    ok = k <= pos
+    if window is not None:
+        ok &= (pos - k) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)

@@ -1,0 +1,102 @@
+"""FFN blocks: SwiGLU MLP (fused W1+W3, paper Alg. 2 line 12) and MoE."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import linear, split_fused
+from repro.dist import logical
+from repro.models.common import dense_init, swiglu
+
+
+# ---------------------------------------------------------------------------
+# dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    k1, k2 = jax.random.split(key)
+    dt = cfg.pdtype()
+    f = d_ff or cfg.d_ff
+    return {
+        "w13": dense_init(k1, 2 * f, cfg.d_model, dt),   # fused gate+up (C4)
+        "w2": dense_init(k2, cfg.d_model, f, dt),
+    }
+
+
+def mlp_forward(p, x):
+    f = p["w2"].shape[-1]  # works for both arrays and QuantizedTensor
+    y13 = linear(p["w13"], x)
+    y13 = logical.constrain(y13, *(["dp"] + [None] * (y13.ndim - 2) + ["tp"]))
+    gate, up = split_fused(y13, (f, f))
+    h = logical.constrain(swiglu(gate, up), *(["dp"] + [None] * (y13.ndim - 2) + ["tp"]))
+    return linear(p["w2"], h)
+
+
+# ---------------------------------------------------------------------------
+# MoE (dbrx: 16e top-4; deepseek-v2-lite: 64e top-6 + 2 shared)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    dt = cfg.pdtype()
+    kr, ke, ks = jax.random.split(key, 3)
+    ekeys = jax.random.split(ke, m.num_experts)
+    experts = jax.vmap(lambda k: {
+        "w13": dense_init(jax.random.fold_in(k, 0), 2 * m.d_expert, cfg.d_model, dt),
+        "w2": dense_init(jax.random.fold_in(k, 1), cfg.d_model, m.d_expert, dt),
+    })(ekeys)
+    p = {
+        "router_w": dense_init(kr, m.num_experts, cfg.d_model, jnp.float32),
+        "experts": experts,   # stacked (E, ...) -> expert-parallel shardable
+    }
+    if m.num_shared:
+        p["shared"] = init_mlp(ks, cfg, d_ff=m.d_expert * m.num_shared)
+    return p
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """Dense-dispatch MoE: top-k routing with a one-hot combine einsum.
+
+    All experts compute on all tokens and the combine mask selects — the
+    standard compile-friendly SPMD formulation when experts are sharded over
+    the 'model' axis (EP). Token-dropping dispatch is a serving optimization
+    left to the perf log.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,ed->bse", x.astype(jnp.float32), p["router_w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, m.top_k)            # (b,s,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)    # renormalize
+    # combine weights (b,s,E): sum of top-k one-hots * gate prob
+    combine = jnp.sum(
+        jax.nn.one_hot(top_idx, m.num_experts, dtype=x.dtype) * top_p[..., None].astype(x.dtype),
+        axis=2,
+    )
+
+    def expert_fn(ep, xe):
+        gate, up = split_fused(linear(ep["w13"], xe), (m.d_expert, m.d_expert))
+        return linear(ep["w2"], swiglu(gate, up))
+
+    expert_out = jax.vmap(expert_fn, in_axes=(0, None))(p["experts"], x)  # (E,b,s,d)
+    expert_out = logical.constrain(expert_out, "tp", "dp", None, None)
+    y = jnp.einsum("ebsd,bse->bsd", expert_out, combine)
+    y = logical.constrain(y, "dp", None, None)
+    if m.num_shared:
+        y = y + mlp_forward(p["shared"], x)
+    return y
+
+
+def moe_aux_loss(p, x, cfg: ModelConfig) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (framework substrate)."""
+    m = cfg.moe
+    logits = jnp.einsum("bsd,ed->bse", x.astype(jnp.float32), p["router_w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_idx = jax.lax.top_k(probs, m.top_k)[1]
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_idx, m.num_experts, dtype=jnp.float32), axis=(0, 1, 2)
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    return m.num_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,179 @@
+"""Uniform model API over all architecture families + input_specs.
+
+Every architecture exposes the same five entry points so the training loop,
+serving engine, and dry-run are family-agnostic:
+
+  init(key)                         -> params
+  forward(params, batch)            -> logits (b, s, vocab_padded)
+  init_cache(batch, cache_len, dt)  -> cache pytree
+  prefill(params, batch, cache_len) -> (last logits, cache)
+  decode(params, token, cache, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec as _encdec
+from repro.models import rwkv as _rwkv
+from repro.models import transformer as _tf
+from repro.models import zamba as _zamba
+
+ARCH_IDS = [
+    "tinyllama-1.1b",
+    "pixtral-12b",
+    "rwkv6-7b",
+    "minicpm3-4b",
+    "deepseek-coder-33b",
+    "gemma2-2b",
+    "internlm2-1.8b",
+    "dbrx-132b",
+    "deepseek-v2-lite-16b",
+    "zamba2-7b",
+    "seamless-m4t-large-v2",
+]
+
+
+def load_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable            # (params, batch) -> logits
+    init_cache: Callable         # (batch_size, cache_len, dtype) -> cache
+    prefill: Callable            # (params, batch, cache_len) -> (logits, cache)
+    decode: Callable             # (params, token, cache, pos) -> (logits, cache)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.model_type == "decoder_lm":
+        def forward(params, batch, remat=True):
+            return _tf.lm_forward(
+                params, batch["tokens"], cfg,
+                frontend_embeds=batch.get("patch_embeds"), remat=remat,
+            )
+
+        def prefill(params, batch, cache_len):
+            return _tf.lm_prefill(
+                params, batch["tokens"], cfg, cache_len,
+                frontend_embeds=batch.get("patch_embeds"),
+            )
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: _tf.init_lm(key, cfg),
+            forward=forward,
+            init_cache=lambda b, t, dt: _tf.lm_init_cache(cfg, b, t, dt),
+            prefill=prefill,
+            decode=lambda p, tok, cache, pos: _tf.lm_decode(p, tok, cache, pos, cfg),
+        )
+
+    if cfg.model_type == "rwkv6":
+        return Model(
+            cfg=cfg,
+            init=lambda key: _rwkv.init_rwkv(key, cfg),
+            forward=lambda p, batch, remat=True: _rwkv.rwkv_forward(p, batch["tokens"], cfg),
+            init_cache=lambda b, t, dt: _rwkv.rwkv_init_state(cfg, b, dt),
+            prefill=lambda p, batch, t: _rwkv.rwkv_prefill(p, batch["tokens"], cfg, t),
+            decode=lambda p, tok, cache, pos: _rwkv.rwkv_decode(p, tok, cache, pos, cfg),
+        )
+
+    if cfg.model_type == "zamba2":
+        return Model(
+            cfg=cfg,
+            init=lambda key: _zamba.init_zamba(key, cfg),
+            forward=lambda p, batch, remat=True: _zamba.zamba_forward(
+                p, batch["tokens"], cfg, remat=remat
+            ),
+            init_cache=lambda b, t, dt: _zamba.zamba_init_cache(cfg, b, t, dt),
+            prefill=lambda p, batch, t: _zamba.zamba_prefill(p, batch["tokens"], cfg, t),
+            decode=lambda p, tok, cache, pos: _zamba.zamba_decode(p, tok, cache, pos, cfg),
+        )
+
+    if cfg.model_type == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: _encdec.init_encdec(key, cfg),
+            forward=lambda p, batch, remat=True: _encdec.encdec_forward(p, batch, cfg, remat=remat),
+            init_cache=lambda b, t, dt: _encdec.encdec_init_cache(cfg, b, t, dt),
+            prefill=lambda p, batch, t: _encdec.encdec_prefill(p, batch, cfg, t),
+            decode=lambda p, tok, cache, pos: _encdec.encdec_decode(p, tok, cache, pos, cfg),
+        )
+
+    raise ValueError(f"unknown model_type: {cfg.model_type}")
+
+
+def build_arch(arch_id: str, *, reduced: bool = False) -> Model:
+    cfg = load_config(arch_id)
+    return build(cfg.reduced() if reduced else cfg)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation) + smoke batches
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStructs for the step function inputs of one (arch, shape)
+    cell. ``decode`` kinds describe only (token, pos); the cache struct comes
+    from ``cache_specs``."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), tok), "labels": _sds((b, s), tok)}
+        if cfg.model_type == "encdec":
+            batch["frames"] = _sds((b, s, cfg.d_model), cfg.cdtype())
+        if cfg.frontend == "patch_embed":
+            batch["patch_embeds"] = _sds((b, cfg.num_frontend_tokens, cfg.d_model), cfg.cdtype())
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), tok)}
+        if cfg.model_type == "encdec":
+            # encoder consumes the full source; decoder is primed with BOS-ish
+            # short prompt (64) -- the 32k prefill cost is the encoder pass
+            batch = {"frames": _sds((b, s, cfg.d_model), cfg.cdtype()),
+                     "tokens": _sds((b, 64), tok)}
+        if cfg.frontend == "patch_embed":
+            batch["patch_embeds"] = _sds((b, cfg.num_frontend_tokens, cfg.d_model), cfg.cdtype())
+        return batch
+    # decode: one new token against a cache of seq_len
+    return {"token": _sds((b,), tok), "pos": _sds((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Cache ShapeDtypeStruct tree for decode cells (eval_shape, no alloc)."""
+    model = build(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, cfg.cdtype())
+    )
+
+
+def smoke_batch(cfg: ModelConfig, *, batch: int = 2, seq: int = 16, seed: int = 0):
+    """Small concrete batch for CPU smoke tests (reduced configs)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, size=(batch, seq)).astype(np.int32)
+    out = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(np.roll(toks, -1, axis=1))}
+    if cfg.model_type == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, seq, cfg.d_model)).astype(np.float32)
+        )
+    if cfg.frontend == "patch_embed":
+        out["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.num_frontend_tokens, cfg.d_model)).astype(np.float32)
+        )
+    return out

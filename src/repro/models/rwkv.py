@@ -1,0 +1,234 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay.
+
+Structure per layer: time-mixing (WKV6 recurrence) + channel-mixing (gated
+FFN), both with token-shift. The large mixing matrices (R/K/V/G/O, FFN) are
+quantizable (out, in) weights — the paper's GQMV applies unchanged; the tiny
+data-dependent decay LoRA and token-shift mixes stay fp32 (same exemption
+class as the paper's RMSNorm weights).
+
+State per layer (decode): x_prev for both mixers + per-head (hd x hd) WKV
+matrix — O(1) in sequence length, which is why rwkv6 runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import embedding_lookup, linear
+from repro.dist import logical
+from repro.models.common import dense_init, embed_init, rmsnorm
+
+DECAY_LORA_RANK = 64
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.resolved_head_dim
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv_layer(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = _heads(cfg)
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 10)
+    return {
+        "att_norm": jnp.ones((d,), dt),
+        "mix_r": jnp.full((d,), 0.5, dt),
+        "mix_k": jnp.full((d,), 0.5, dt),
+        "mix_v": jnp.full((d,), 0.5, dt),
+        "mix_g": jnp.full((d,), 0.5, dt),
+        "mix_w": jnp.full((d,), 0.5, dt),
+        "decay_w0": jnp.full((d,), -6.0, dt),
+        "decay_lora_a": dense_init(ks[0], DECAY_LORA_RANK, d, dt),
+        "decay_lora_b": dense_init(ks[1], d, DECAY_LORA_RANK, dt),
+        "bonus_u": (jax.random.normal(ks[2], (h, hd), jnp.float32) * 0.1).astype(dt),
+        "wr": dense_init(ks[3], d, d, dt),
+        "wk": dense_init(ks[4], d, d, dt),
+        "wv": dense_init(ks[5], d, d, dt),
+        "wg": dense_init(ks[6], d, d, dt),
+        "wout": dense_init(ks[7], d, d, dt),
+        "ffn_norm": jnp.ones((d,), dt),
+        "mix_ffn": jnp.full((d,), 0.5, dt),
+        "wffr": dense_init(ks[8], d, d, dt),
+        "wff1": dense_init(ks[9], f, d, dt),
+        "wff2": dense_init(jax.random.fold_in(key, 99), d, f, dt),
+    }
+
+
+def _token_shift(x, x_prev_first):
+    """x: (b, s, d). Shift right by one; position 0 sees x_prev_first."""
+    shifted = jnp.roll(x, 1, axis=1)
+    return shifted.at[:, 0, :].set(x_prev_first)
+
+
+def _ddlerp(x, shifted, mix):
+    return x + (shifted - x) * mix
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay in (0, 1): w = exp(-exp(w0 + lora))."""
+    lora = linear(p["decay_lora_b"], jnp.tanh(linear(p["decay_lora_a"], xw)))
+    return jnp.exp(-jnp.exp((p["decay_w0"] + lora).astype(jnp.float32)))
+
+
+def _wkv_step(state, inputs, u):
+    """One WKV6 step. state: (b,h,hd,hd) [k-dim x v-dim];
+    r,k,v: (b,h,hd); w: (b,h,hd) decay on the k dimension.
+
+    Carry sharding pinned per step (same scan-resharding hazard as the
+    Mamba2 state — see models/ssm.py:_ssd_step)."""
+    r, k, v, w = inputs
+    state = logical.constrain(state, "dp", "tp", None, None)
+    a = jnp.einsum("bhi,bhj->bhij", k, v)                 # outer product
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * a)
+    state = w[..., None] * state + a
+    state = logical.constrain(state, "dp", "tp", None, None)
+    return state, y
+
+
+def time_mix_forward(p, x, cfg: ModelConfig, state=None):
+    """Full-sequence WKV6 via lax.scan over time.
+
+    Returns (y, (x_last, wkv_state)) so the same code serves training
+    (state ignored) and prefill (state kept for decode).
+    """
+    b, s, d = x.shape
+    h, hd = _heads(cfg)
+    if state is None:
+        x_first = jnp.zeros((b, d), x.dtype)
+        wkv0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    else:
+        x_first, wkv0 = state
+
+    shifted = _token_shift(x, x_first)
+    hspec = ("dp", None, "tp", None)
+    r = logical.constrain(linear(p["wr"], _ddlerp(x, shifted, p["mix_r"])).reshape(b, s, h, hd), *hspec)
+    k = logical.constrain(linear(p["wk"], _ddlerp(x, shifted, p["mix_k"])).reshape(b, s, h, hd), *hspec)
+    v = logical.constrain(linear(p["wv"], _ddlerp(x, shifted, p["mix_v"])).reshape(b, s, h, hd), *hspec)
+    g = logical.constrain(linear(p["wg"], _ddlerp(x, shifted, p["mix_g"])), "dp", None, "tp")
+    w = logical.constrain(_decay(p, _ddlerp(x, shifted, p["mix_w"])).reshape(b, s, h, hd), *hspec)
+
+    u = p["bonus_u"].astype(jnp.float32)
+    seq_inputs = jax.tree.map(
+        lambda t: jnp.moveaxis(t.astype(jnp.float32), 1, 0), (r, k, v, w)
+    )
+    wkv_last, ys = jax.lax.scan(lambda c, i: _wkv_step(c, i, u), wkv0, seq_inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm(y.reshape(b, s, h, hd), jnp.ones((hd,), x.dtype), cfg.norm_eps).reshape(b, s, d)
+    out = linear(p["wout"], y * jax.nn.silu(g))
+    return out, (x[:, -1, :], wkv_last)
+
+
+def time_mix_decode(p, x, state, cfg: ModelConfig):
+    """x: (b, d) one token; state: (x_prev, wkv (b,h,hd,hd))."""
+    b, d = x.shape
+    h, hd = _heads(cfg)
+    x_prev, wkv = state
+    r = linear(p["wr"], _ddlerp(x, x_prev, p["mix_r"])).reshape(b, h, hd)
+    k = linear(p["wk"], _ddlerp(x, x_prev, p["mix_k"])).reshape(b, h, hd)
+    v = linear(p["wv"], _ddlerp(x, x_prev, p["mix_v"])).reshape(b, h, hd)
+    g = linear(p["wg"], _ddlerp(x, x_prev, p["mix_g"]))
+    w = _decay(p, _ddlerp(x, x_prev, p["mix_w"])).reshape(b, h, hd)
+    u = p["bonus_u"].astype(jnp.float32)
+    wkv, y = _wkv_step(
+        wkv, (r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), w), u
+    )
+    y = y.reshape(b, h, hd)
+    y = rmsnorm(y, jnp.ones((hd,), x.dtype), cfg.norm_eps).reshape(b, d).astype(x.dtype)
+    return linear(p["wout"], y * jax.nn.silu(g)), (x, wkv)
+
+
+def channel_mix_forward(p, x, state=None):
+    b = x.shape[0]
+    x_first = jnp.zeros((b, x.shape[-1]), x.dtype) if state is None else state
+    shifted = _token_shift(x, x_first)
+    xm = _ddlerp(x, shifted, p["mix_ffn"])
+    kk = jnp.square(jax.nn.relu(linear(p["wff1"], xm)))
+    kk = logical.constrain(kk, *(["dp"] + [None] * (kk.ndim - 2) + ["tp"]))
+    out = jax.nn.sigmoid(linear(p["wffr"], xm)) * linear(p["wff2"], kk)
+    return out, x[:, -1, :]
+
+
+def channel_mix_decode(p, x, x_prev):
+    xm = _ddlerp(x, x_prev, p["mix_ffn"])
+    kk = jnp.square(jax.nn.relu(linear(p["wff1"], xm)))
+    return jax.nn.sigmoid(linear(p["wffr"], xm)) * linear(p["wff2"], kk), x
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, cfg: ModelConfig) -> dict:
+    ke, kl, kc = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    return {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, cfg.pdtype()),
+        "layers": jax.vmap(lambda k: init_rwkv_layer(k, cfg))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype()),
+        "classifier": dense_init(kc, cfg.vocab_padded, cfg.d_model, cfg.pdtype()),
+    }
+
+
+def rwkv_forward(params, tokens, cfg: ModelConfig):
+    """tokens (b, s) -> logits (b, s, vocab_padded)."""
+    x = embedding_lookup(params["embed"], tokens, cfg.cdtype())
+
+    def body(x, lp):
+        att, _ = time_mix_forward(lp, rmsnorm(x, lp["att_norm"], cfg.norm_eps), cfg)
+        x = x + att
+        ffn, _ = channel_mix_forward(lp, rmsnorm(x, lp["ffn_norm"], cfg.norm_eps))
+        return x + ffn, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return linear(params["classifier"], x)
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int, dtype):
+    h, hd = _heads(cfg)
+    return {
+        "att_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((cfg.num_layers, batch, h, hd, hd), jnp.float32),
+        "ffn_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv_prefill(params, tokens, cfg: ModelConfig, cache_len: int):
+    """Run the prompt, returning last-token logits + decode state.
+    cache_len is unused (state is O(1)) but kept for interface parity."""
+    x = embedding_lookup(params["embed"], tokens, cfg.cdtype())
+
+    def body(x, lp):
+        att, (ax, wkv) = time_mix_forward(lp, rmsnorm(x, lp["att_norm"], cfg.norm_eps), cfg)
+        x = x + att
+        ffn, fx = channel_mix_forward(lp, rmsnorm(x, lp["ffn_norm"], cfg.norm_eps))
+        return x + ffn, {"att_x": ax, "wkv": wkv, "ffn_x": fx}
+
+    x, state = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x[:, -1, :], params["final_norm"], cfg.norm_eps)
+    return linear(params["classifier"], x), state
+
+
+def rwkv_decode(params, token, state, pos, cfg: ModelConfig):
+    """token (b,) int32 -> (logits (b, vocab), new state). pos unused
+    (state carries all positional information)."""
+    x = embedding_lookup(params["embed"], token, cfg.cdtype())
+
+    def body(x, scanned):
+        lp, st = scanned
+        att, (ax, wkv) = time_mix_decode(
+            lp, rmsnorm(x, lp["att_norm"], cfg.norm_eps), (st["att_x"], st["wkv"]), cfg
+        )
+        x = x + att
+        ffn, fx = channel_mix_decode(
+            lp, rmsnorm(x, lp["ffn_norm"], cfg.norm_eps), st["ffn_x"]
+        )
+        return x + ffn, {"att_x": ax, "wkv": wkv, "ffn_x": fx}
+
+    x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return linear(params["classifier"], x), new_state

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD) blocks for the zamba2 hybrid.
+
+Scalar-decay-per-head state-space recurrence:
+
+    h_t = exp(-exp(A_log) * dt_t) * h_{t-1} + dt_t * (x_t outer B_t)
+    y_t = h_t @ C_t + D * x_t
+
+In/out projections (the large matrices) are quantizable; SSM scan parameters
+(A_log, dt_bias, D) and the depthwise conv stay fp32 (paper's norm-exemption
+class). Decode state is O(1): (conv tail, h) — zamba2 runs long_500k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import flags
+from repro.core.qlinear import linear, split_fused
+from repro.dist import logical
+from repro.models.common import dense_init, rmsnorm
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim
+    return d_inner, nheads, conv_ch
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d_inner, nheads, conv_ch = ssm_dims(cfg)
+    dt = cfg.pdtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    in_dim = 2 * d_inner + 2 * s.state_dim + nheads  # z, x, B, C, dt (fused)
+    return {
+        "win": dense_init(k1, in_dim, cfg.d_model, dt),
+        "conv_w": (jax.random.normal(k2, (s.conv_kernel, conv_ch), jnp.float32) * 0.1).astype(dt),
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "gate_norm": jnp.ones((d_inner,), dt),
+        "wout": dense_init(k3, cfg.d_model, d_inner, dt),
+    }
+
+
+def _split_in(p, xin, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, _ = ssm_dims(cfg)
+    return split_fused(linear(p["win"], xin), (d_inner, d_inner, s.state_dim, s.state_dim, nheads))
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv. x: (b, s, c); w: (k, c); tail: (b, k-1, c)."""
+    k = w.shape[0]
+    pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype) if tail is None else tail
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out), xp[:, -(k - 1) :, :]
+
+
+def _ssd_step(h, inputs, a_neg):
+    """h: (b, H, hd, N). xs: (b,H,hd); B,C: (b,N); dt: (b,H).
+
+    The carry sharding is pinned every step: without it XLA reshards the
+    state each scan iteration (measured: one collective-permute of the full
+    state per (layer x time step) on zamba2 prefill_32k = 9.8 TB/device)."""
+    xs, B, C, dtv = inputs
+    h = logical.constrain(h, "dp", "tp", None, None)
+    xs = logical.constrain(xs, "dp", "tp", None)
+    decay = jnp.exp(a_neg[None, :] * dtv)                       # (b,H)
+    dx = dtv[..., None] * xs                                    # (b,H,hd)
+    h = h * decay[..., None, None] + jnp.einsum("bhd,bn->bhdn", dx, B)
+    h = logical.constrain(h, "dp", "tp", None, None)
+    y = jnp.einsum("bhdn,bn->bhd", h, C)
+    return h, y
+
+
+def _ssd_chunked(xs, Bv, Cv, dtv, a_neg, h0, chunk: int):
+    """Mamba2's chunked SSD (matmul duality). xs: (b,s,H,hd); B,C: (b,s,N);
+    dt: (b,s,H) (post-softplus, f32). Returns (y (b,s,H,hd), h_last).
+
+    Per chunk of length Q (with P = inclusive cumsum of log-decay):
+      intra:  y[t] += sum_{s<=t} exp(P_t - P_s) * dt_s * (C_t.B_s) * x_s
+      inter:  y[t] += exp(P_t) * C_t . h_in
+      carry:  h_out = exp(P_Q) h_in + sum_s exp(P_Q - P_s) dt_s x_s (x) B_s
+    All contractions are MXU matmuls; the state is carried once per CHUNK,
+    dividing its HBM round-trips by Q vs the per-step recurrence."""
+    b, s, H, hd = xs.shape
+    n = Bv.shape[-1]
+    nchunks = s // chunk
+
+    def ck(t):  # (b, s, ...) -> (b, nchunks, chunk, ...)
+        return t.reshape(b, nchunks, chunk, *t.shape[2:])
+
+    xs_c, B_c, C_c, dt_c = ck(xs), ck(Bv), ck(Cv), ck(dtv)
+
+    def body(h, inputs):
+        xq, Bq, Cq, dtq = inputs                   # (b,Q,H,hd)/(b,Q,N)/(b,Q,H)
+        h = logical.constrain(h, "dp", "tp", None, None)
+        la = a_neg[None, None, :] * dtq            # (b,Q,H) log-decay, <= 0
+        P = jnp.cumsum(la, axis=1)                 # inclusive
+        G = jnp.einsum("btn,bsn->bts", Cq, Bq)     # (b,Q,Q)
+        W = jnp.exp(P[:, :, None, :] - P[:, None, :, :]) * dtq[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        M = jnp.where(tri[None, :, :, None], G[..., None] * W, 0.0)
+        y = jnp.einsum("btsh,bshd->bthd", M, xq)                 # intra
+        y = y + jnp.exp(P)[..., None] * jnp.einsum("bhdn,btn->bthd", h, Cq)
+        wfull = jnp.exp(P[:, -1:, :] - P) * dtq                  # (b,Q,H)
+        h = jnp.exp(P[:, -1, :])[:, :, None, None] * h + jnp.einsum(
+            "bsh,bshd,bsn->bhdn", wfull, xq, Bq
+        )
+        h = logical.constrain(h, "dp", "tp", None, None)
+        return h, y
+
+    seq = jax.tree.map(lambda t: jnp.moveaxis(t, 1, 0), (xs_c, B_c, C_c, dt_c))
+    h_last, ys = jax.lax.scan(body, h0, seq)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, H, hd)
+    return y, h_last
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, state=None):
+    """x: (b, s, d). Returns (y, (conv_tail, h_last))."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_inner, nheads, conv_ch = ssm_dims(cfg)
+    z, xc, Bv, Cv, dtv = _split_in(p, x, cfg)
+    conv_in = jnp.concatenate([xc, Bv, Cv], axis=-1)
+    conv_tail_in = None if state is None else state[0]
+    conv_out, conv_tail = _causal_conv(conv_in, p["conv_w"].astype(x.dtype), conv_tail_in)
+    xc, Bv, Cv = split_fused(conv_out, (d_inner, s_cfg.state_dim, s_cfg.state_dim))
+
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])            # (b,s,H)
+    xs = xc.reshape(b, s, nheads, s_cfg.head_dim).astype(jnp.float32)
+    xs = logical.constrain(xs, "dp", None, "tp", None)
+    a_neg = -jnp.exp(p["a_log"])
+
+    h0 = (
+        jnp.zeros((b, nheads, s_cfg.head_dim, s_cfg.state_dim), jnp.float32)
+        if state is None
+        else state[1]
+    )
+    chunk = int(flags.get("ssd_chunk"))
+    if flags.get("chunked_ssd") and s % chunk == 0 and s > chunk:
+        y, h_last = _ssd_chunked(
+            xs, Bv.astype(jnp.float32), Cv.astype(jnp.float32), dtv,
+            a_neg, h0, chunk,
+        )
+    else:
+        seq = jax.tree.map(
+            lambda t: jnp.moveaxis(t.astype(jnp.float32), 1, 0), (xs, Bv, Cv, dtv)
+        )
+        h_last, ys = jax.lax.scan(lambda c, i: _ssd_step(c, i, a_neg), h0, seq)
+        y = jnp.moveaxis(ys, 0, 1)                               # (b,s,H,hd)
+    y = logical.constrain(y, "dp", None, "tp", None)
+    y = y + p["d_skip"][None, None, :, None] * xs
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return linear(p["wout"], y), (conv_tail, h_last)
+
+
+def mamba2_decode(p, x, state, cfg: ModelConfig):
+    """x: (b, d) one token; state: (conv_tail (b,k-1,c), h (b,H,hd,N))."""
+    s_cfg = cfg.ssm
+    b, d = x.shape
+    d_inner, nheads, conv_ch = ssm_dims(cfg)
+    conv_tail, h = state
+    z, xc, Bv, Cv, dtv = _split_in(p, x[:, None, :], cfg)
+    conv_in = jnp.concatenate([xc, Bv, Cv], axis=-1)
+    conv_out, conv_tail = _causal_conv(conv_in, p["conv_w"].astype(x.dtype), conv_tail)
+    xc, Bv, Cv = split_fused(conv_out[:, 0, :], (d_inner, s_cfg.state_dim, s_cfg.state_dim))
+
+    dt1 = jax.nn.softplus(dtv[:, 0, :].astype(jnp.float32) + p["dt_bias"])   # (b,H)
+    xs = xc.reshape(b, nheads, s_cfg.head_dim).astype(jnp.float32)
+    a_neg = -jnp.exp(p["a_log"])
+    h, y = _ssd_step(h, (xs, Bv.astype(jnp.float32), Cv.astype(jnp.float32), dt1), a_neg)
+    y = y + p["d_skip"][None, :, None] * xs
+    y = y.reshape(b, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z[:, 0, :]), p["gate_norm"], cfg.norm_eps)
+    return linear(p["wout"], y), (conv_tail, h)

@@ -1,0 +1,269 @@
+"""Decoder-only transformer LM covering the dense / MoE / MLA / VLM archs:
+internlm2, deepseek-coder-33b, pixtral-12b (backbone), gemma2-2b,
+minicpm3-4b, dbrx-132b, deepseek-v2-lite-16b, plus the paper's TinyLlama.
+
+Layers are homogeneous and stacked: init via vmap, forward via lax.scan
+(keeps HLO size O(1) in depth — essential for the 62-layer dry-runs).
+Per-layer local/global alternation (gemma2) is a scanned boolean driving the
+mask, not a structural branch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import flags
+from repro.core.qlinear import embedding_lookup, linear
+from repro.dist import logical
+from repro.models import attention as attn
+from repro.models import mlp as mlpmod
+from repro.models.common import dense_init, embed_init, rmsnorm, softcap
+
+
+def _layer_windows(cfg: ModelConfig) -> jax.Array:
+    """(L,) bool: True where the layer uses the sliding window (gemma2 'L')."""
+    if not cfg.layer_pattern or not cfg.sliding_window:
+        return jnp.zeros((cfg.num_layers,), jnp.bool_)
+    pat = (cfg.layer_pattern * cfg.num_layers)[: cfg.num_layers]
+    return jnp.asarray([c == "L" for c in pat])
+
+
+def init_layer(key, cfg: ModelConfig) -> dict:
+    ka, km = jax.random.split(key)
+    dt = cfg.pdtype()
+    p = {
+        "att_norm": jnp.ones((cfg.d_model,), dt) * (0.0 if cfg.gemma_norms else 1.0),
+        "attn": attn.init_mla(ka, cfg) if cfg.mla else attn.init_gqa(ka, cfg),
+        "ffn_norm": jnp.ones((cfg.d_model,), dt) * (0.0 if cfg.gemma_norms else 1.0),
+        "mlp": mlpmod.init_moe(km, cfg) if cfg.moe else mlpmod.init_mlp(km, cfg),
+    }
+    if cfg.gemma_norms:
+        p["post_att_norm"] = jnp.zeros((cfg.d_model,), dt)
+        p["post_ffn_norm"] = jnp.zeros((cfg.d_model,), dt)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    ke, kl, kc = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    params = {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, cfg.pdtype()),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype()) * (0.0 if cfg.gemma_norms else 1.0),
+    }
+    if not cfg.tie_embeddings:
+        params["classifier"] = dense_init(kc, cfg.vocab_padded, cfg.d_model, cfg.pdtype())
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg: ModelConfig, frontend_embeds=None):
+    x = embedding_lookup(params["embed"], tokens, cfg.cdtype())
+    if cfg.gemma_norms:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if frontend_embeds is not None:
+        # VLM stub (pixtral): precomputed patch embeddings replace the first
+        # P positions of the sequence (input_specs supplies them).
+        pfx = frontend_embeds.astype(x.dtype)
+        x = jnp.concatenate([pfx, x[:, pfx.shape[1] :, :]], axis=1)
+    return logical.constrain(x, *(["dp"] + [None] * (x.ndim - 1)))
+
+
+def _logits(params, x, cfg: ModelConfig):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps, plus_one=cfg.gemma_norms)
+    w = params["embed"] if cfg.tie_embeddings else params["classifier"]
+    logits = linear(w, x)
+    logits = logical.constrain(logits, *(["dp"] + [None] * (logits.ndim - 2) + ["tp"]))
+    if cfg.final_logit_softcap:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits
+
+
+def _block(lp, x, cfg: ModelConfig, attn_fn):
+    """One residual block given an attention closure; shared by all paths."""
+    g = cfg.gemma_norms
+    h = rmsnorm(x, lp["att_norm"], cfg.norm_eps, plus_one=g)
+    a = attn_fn(h)
+    if g:
+        a = rmsnorm(a, lp["post_att_norm"], cfg.norm_eps, plus_one=True)
+    x = x + a
+    h = rmsnorm(x, lp["ffn_norm"], cfg.norm_eps, plus_one=g)
+    f = mlpmod.moe_forward(lp["mlp"], h, cfg) if cfg.moe else mlpmod.mlp_forward(lp["mlp"], h)
+    if g:
+        f = rmsnorm(f, lp["post_ffn_norm"], cfg.norm_eps, plus_one=True)
+    return x + f
+
+
+# ---------------------------------------------------------------------------
+# training / scoring forward
+# ---------------------------------------------------------------------------
+
+def lm_forward(params, tokens, cfg: ModelConfig, frontend_embeds=None, *, remat=True):
+    """tokens (b, s) -> logits (b, s, vocab_padded)."""
+    x = _embed(params, tokens, cfg, frontend_embeds)
+    windows = _layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, use_window = scanned
+
+        def attn_fn(h):
+            if cfg.mla:
+                return attn.mla_forward(lp["attn"], h, cfg)
+            return attn.gqa_forward(
+                lp["attn"], h, cfg, window=cfg.sliding_window, use_window=use_window
+            )
+
+        return _block(lp, x, cfg, attn_fn), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, (params["layers"], windows))
+    return _logits(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def lm_init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    if cfg.mla:
+        return {
+            "ckv": jnp.zeros((cfg.num_layers, batch, cache_len, cfg.mla.kv_lora_rank), dtype),
+            "krope": jnp.zeros((cfg.num_layers, batch, cache_len, cfg.mla.qk_rope_dim), dtype),
+        }
+    hd = cfg.resolved_head_dim
+    if flags.get("int8_kv_cache"):
+        qshape = (cfg.num_layers, batch, cfg.num_kv_heads, cache_len, hd)
+        sshape = (cfg.num_layers, batch, cfg.num_kv_heads, cache_len)
+        return {"k_q": jnp.zeros(qshape, jnp.int8), "k_s": jnp.zeros(sshape, jnp.float32),
+                "v_q": jnp.zeros(qshape, jnp.int8), "v_s": jnp.zeros(sshape, jnp.float32)}
+    if flags.get("kvt_cache_layout"):
+        shape = (cfg.num_layers, batch, cfg.num_kv_heads, cache_len, hd)
+    else:
+        shape = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def lm_prefill(params, tokens, cfg: ModelConfig, cache_len: int, frontend_embeds=None):
+    """Prompt pass: returns (last-position logits, populated cache)."""
+    x = _embed(params, tokens, cfg, frontend_embeds)
+    windows = _layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, use_window = scanned
+        cache_out = {}
+
+        def attn_fn(h):
+            if cfg.mla:
+                y, (ckv, krope) = attn.mla_prefill(lp["attn"], h, cfg, cache_len)
+                cache_out["ckv"], cache_out["krope"] = ckv, krope
+                return y
+            out = attn.gqa_prefill(
+                lp["attn"], h, cfg, cache_len,
+                window=cfg.sliding_window, use_window=use_window,
+            )
+            if flags.get("int8_kv_cache"):
+                y, (cache_out["k_q"], cache_out["k_s"],
+                    cache_out["v_q"], cache_out["v_s"]) = out
+            else:
+                y, (cache_out["k"], cache_out["v"]) = out
+            return y
+
+        x = _block(lp, x, cfg, attn_fn)
+        return x, cache_out
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], windows))
+    return _logits(params, x[:, -1, :], cfg), cache
+
+
+def lm_decode(params, token, cache, pos, cfg: ModelConfig):
+    """One decode step. token (b,) int32; pos scalar int32.
+    Returns (logits (b, vocab_padded), new cache).
+
+    With flags.deferred_decode_cache the layer scan emits only the new K/V
+    rows; they are committed with one donated dynamic-update-slice at the
+    end (§Perf decode optimization)."""
+    int8kv = bool(flags.get("int8_kv_cache")) and not cfg.mla
+    kvt = (bool(flags.get("kvt_cache_layout")) or int8kv) and not cfg.mla
+    deferred = bool(flags.get("deferred_decode_cache")) or kvt or (
+        cfg.mla and (flags.get("deferred_decode_cache") or flags.get("kvt_cache_layout")
+                     or flags.get("int8_kv_cache"))
+    )
+    x = embedding_lookup(params["embed"], token, cfg.cdtype())
+    if cfg.gemma_norms:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    windows = _layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, use_window, layer_cache = scanned
+        new_cache = {}
+
+        def attn_fn(h):
+            if cfg.mla:
+                mla_fn = attn.mla_decode_deferred if deferred else attn.mla_decode
+                y, (ckv, krope) = mla_fn(
+                    lp["attn"], h, (layer_cache["ckv"], layer_cache["krope"]), pos, cfg
+                )
+                new_cache["ckv"], new_cache["krope"] = ckv, krope
+                return y
+            if int8kv:
+                c = (layer_cache["k_q"], layer_cache["k_s"],
+                     layer_cache["v_q"], layer_cache["v_s"])
+                y, rows = attn.gqa_decode_deferred_int8(
+                    lp["attn"], h, c, pos, cfg,
+                    window=cfg.sliding_window, use_window=use_window,
+                )
+                (new_cache["k_q"], new_cache["k_s"],
+                 new_cache["v_q"], new_cache["v_s"]) = rows
+                return y
+            c = (layer_cache["k"], layer_cache["v"])
+            decode_fn = attn.gqa_decode_deferred if deferred else attn.gqa_decode
+            y, (k, v) = decode_fn(
+                lp["attn"], h, c, pos, cfg,
+                window=cfg.sliding_window, use_window=use_window,
+            )
+            new_cache["k"], new_cache["v"] = k, v
+            return y
+
+        # decode blocks operate on (b, d): reuse _block via a 1-seq view
+        g = cfg.gemma_norms
+        h = rmsnorm(x, lp["att_norm"], cfg.norm_eps, plus_one=g)
+        a = attn_fn(h)
+        if g:
+            a = rmsnorm(a, lp["post_att_norm"], cfg.norm_eps, plus_one=True)
+        x = x + a
+        h = rmsnorm(x, lp["ffn_norm"], cfg.norm_eps, plus_one=g)
+        if cfg.moe:
+            f = mlpmod.moe_forward(lp["mlp"], h[:, None, :], cfg)[:, 0, :]
+        else:
+            f = mlpmod.mlp_forward(lp["mlp"], h)
+        if g:
+            f = rmsnorm(f, lp["post_ffn_norm"], cfg.norm_eps, plus_one=True)
+        return x + f, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], windows, cache))
+    if deferred and cfg.mla:
+        new_cache = {
+            "ckv": jax.lax.dynamic_update_slice(cache["ckv"], new_cache["ckv"], (0, 0, pos, 0)),
+            "krope": jax.lax.dynamic_update_slice(cache["krope"], new_cache["krope"], (0, 0, pos, 0)),
+        }
+    elif deferred:
+        # commit all layers' new rows with one in-place (donated) update
+        if int8kv:
+            new_cache = {
+                "k_q": jax.lax.dynamic_update_slice(cache["k_q"], new_cache["k_q"], (0, 0, 0, pos, 0)),
+                "k_s": jax.lax.dynamic_update_slice(cache["k_s"], new_cache["k_s"], (0, 0, 0, pos)),
+                "v_q": jax.lax.dynamic_update_slice(cache["v_q"], new_cache["v_q"], (0, 0, 0, pos, 0)),
+                "v_s": jax.lax.dynamic_update_slice(cache["v_s"], new_cache["v_s"], (0, 0, 0, pos)),
+            }
+        else:
+            start = (0, 0, 0, pos, 0) if kvt else (0, 0, pos, 0, 0)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(cache["k"], new_cache["k"], start),
+                "v": jax.lax.dynamic_update_slice(cache["v"], new_cache["v"], start),
+            }
+    return _logits(params, x, cfg), new_cache

@@ -1,0 +1,203 @@
+"""Zamba2 hybrid (arXiv:2411.15242): Mamba2 backbone + a SHARED attention
+block applied every ``shared_attn_every`` SSM layers.
+
+The shared block has ONE parameter set reused at every application (Zamba's
+parameter-saving trick). Structure here: groups of k Mamba2 layers scanned,
+shared GQA+MLP block applied between groups (params closed over, not
+scanned), plus a tail of remaining Mamba2 layers.
+
+Simplification vs the released model (noted in DESIGN.md): Zamba2
+concatenates the original embedding into the shared-block input and applies
+per-application LoRA deltas; we feed the running stream only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import flags
+from repro.core.qlinear import embedding_lookup, linear
+from repro.models import attention as attn
+from repro.models import mlp as mlpmod
+from repro.models.common import dense_init, embed_init, rmsnorm
+from repro.models.ssm import init_mamba2, mamba2_decode, mamba2_forward, ssm_dims
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(groups, per_group, tail): num_layers = groups*per_group + tail."""
+    k = cfg.shared_attn_every
+    return cfg.num_layers // k, k, cfg.num_layers % k
+
+
+def init_zamba(key, cfg: ModelConfig) -> dict:
+    groups, per, tail = _layout(cfg)
+    ke, km, ka, kmlp, kc, kt = jax.random.split(key, 6)
+    mkeys = jax.random.split(km, groups * per).reshape(groups, per, 2)
+    dt = cfg.pdtype()
+
+    def init_mamba_layer(k):
+        return {
+            "norm": jnp.ones((cfg.d_model,), dt),
+            "mamba": init_mamba2(k, cfg),
+        }
+
+    params = {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, dt),
+        # (groups, per, ...) stacked mamba layers
+        "mamba_layers": jax.vmap(jax.vmap(init_mamba_layer))(mkeys),
+        "shared": {
+            "att_norm": jnp.ones((cfg.d_model,), dt),
+            "attn": attn.init_gqa(ka, cfg),
+            "ffn_norm": jnp.ones((cfg.d_model,), dt),
+            "mlp": mlpmod.init_mlp(kmlp, cfg),
+        },
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "classifier": dense_init(kc, cfg.vocab_padded, cfg.d_model, dt),
+    }
+    if tail:
+        tkeys = jax.random.split(kt, tail)
+        params["tail_layers"] = jax.vmap(init_mamba_layer)(tkeys)
+    return params
+
+
+def _shared_block(sp, x, cfg: ModelConfig, attn_fn):
+    h = rmsnorm(x, sp["att_norm"], cfg.norm_eps)
+    x = x + attn_fn(h)
+    h = rmsnorm(x, sp["ffn_norm"], cfg.norm_eps)
+    return x + mlpmod.mlp_forward(sp["mlp"], h)
+
+
+def zamba_forward(params, tokens, cfg: ModelConfig, *, remat=True):
+    x = embedding_lookup(params["embed"], tokens, cfg.cdtype())
+    sp = params["shared"]
+
+    def mamba_body(x, lp):
+        y, _ = mamba2_forward(lp["mamba"], rmsnorm(x, lp["norm"], cfg.norm_eps), cfg)
+        return x + y, None
+
+    mb = jax.checkpoint(mamba_body) if remat else mamba_body
+
+    def group_body(x, glp):
+        x, _ = jax.lax.scan(mb, x, glp)
+        x = _shared_block(sp, x, cfg, lambda h: attn.gqa_forward(sp["attn"], h, cfg))
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, params["mamba_layers"])
+    if "tail_layers" in params:
+        x, _ = jax.lax.scan(mb, x, params["tail_layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return linear(params["classifier"], x)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def zamba_init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    groups, per, tail = _layout(cfg)
+    d_inner, nheads, conv_ch = ssm_dims(cfg)
+    s = cfg.ssm
+    hd = cfg.resolved_head_dim
+
+    def mamba_state(n):
+        return {
+            "conv": jnp.zeros((n, batch, s.conv_kernel - 1, conv_ch), dtype),
+            "h": jnp.zeros((n, batch, nheads, s.head_dim, s.state_dim), jnp.float32),
+        }
+
+    if flags.get("kvt_cache_layout") or flags.get("int8_kv_cache"):
+        kv_shape = (groups, batch, cfg.num_kv_heads, cache_len, hd)
+    else:
+        kv_shape = (groups, batch, cache_len, cfg.num_kv_heads, hd)
+    cache = {
+        "mamba": jax.tree.map(
+            lambda t: t.reshape(groups, per, *t.shape[1:]), mamba_state(groups * per)
+        ),
+        # one KV cache per shared-block application
+        "shared_k": jnp.zeros(kv_shape, dtype),
+        "shared_v": jnp.zeros(kv_shape, dtype),
+    }
+    if tail:
+        cache["tail"] = mamba_state(tail)
+    return cache
+
+
+def zamba_prefill(params, tokens, cfg: ModelConfig, cache_len: int):
+    x = embedding_lookup(params["embed"], tokens, cfg.cdtype())
+    sp = params["shared"]
+
+    def mamba_body(x, lp):
+        y, st = mamba2_forward(lp["mamba"], rmsnorm(x, lp["norm"], cfg.norm_eps), cfg)
+        return x + y, {"conv": st[0], "h": st[1]}
+
+    def group_body(x, glp):
+        x, mstate = jax.lax.scan(mamba_body, x, glp)
+        kv = {}
+
+        def attn_fn(h):
+            # zamba's shared cache supports the kvt layout but not int8
+            with flags.overrides(int8_kv_cache=False):
+                y, (k, v) = attn.gqa_prefill(sp["attn"], h, cfg, cache_len)
+            kv["k"], kv["v"] = k, v
+            return y
+
+        x = _shared_block(sp, x, cfg, attn_fn)
+        return x, {"mamba": mstate, "k": kv["k"], "v": kv["v"]}
+
+    x, gstate = jax.lax.scan(group_body, x, params["mamba_layers"])
+    cache = {"mamba": gstate["mamba"], "shared_k": gstate["k"], "shared_v": gstate["v"]}
+    if "tail_layers" in params:
+        x, tstate = jax.lax.scan(mamba_body, x, params["tail_layers"])
+        cache["tail"] = tstate
+    x = rmsnorm(x[:, -1, :], params["final_norm"], cfg.norm_eps)
+    return linear(params["classifier"], x), cache
+
+
+def zamba_decode(params, token, cache, pos, cfg: ModelConfig):
+    x = embedding_lookup(params["embed"], token, cfg.cdtype())
+    sp = params["shared"]
+    kvt = bool(flags.get("kvt_cache_layout") or flags.get("int8_kv_cache"))
+    deferred = bool(flags.get("deferred_decode_cache")) or kvt
+
+    def mamba_body(x, scanned):
+        lp, st = scanned
+        y, (conv, h) = mamba2_decode(
+            lp["mamba"], rmsnorm(x, lp["norm"], cfg.norm_eps), (st["conv"], st["h"]), cfg
+        )
+        return x + y, {"conv": conv, "h": h}
+
+    def group_body(x, scanned):
+        glp, gst = scanned
+        x, mstate = jax.lax.scan(mamba_body, x, (glp, gst["mamba"]))
+        kv = {}
+
+        def attn_fn(h):
+            decode_fn = attn.gqa_decode_deferred if deferred else attn.gqa_decode
+            with flags.overrides(int8_kv_cache=False,
+                                 kvt_cache_layout=kvt):
+                y, (k, v) = decode_fn(sp["attn"], h, (gst["k"], gst["v"]), pos, cfg)
+            kv["k"], kv["v"] = k, v
+            return y
+
+        h = rmsnorm(x, sp["att_norm"], cfg.norm_eps)
+        x = x + attn_fn(h)
+        h = rmsnorm(x, sp["ffn_norm"], cfg.norm_eps)
+        x = x + mlpmod.mlp_forward(sp["mlp"], h)
+        return x, {"mamba": mstate, "k": kv["k"], "v": kv["v"]}
+
+    gcache = {"mamba": cache["mamba"], "k": cache["shared_k"], "v": cache["shared_v"]}
+    x, gstate = jax.lax.scan(group_body, x, (params["mamba_layers"], gcache))
+    new_k, new_v = gstate["k"], gstate["v"]
+    if deferred:
+        # commit all groups' rows with one in-place update each
+        start = (0, 0, 0, pos, 0) if kvt else (0, 0, pos, 0, 0)
+        new_k = jax.lax.dynamic_update_slice(cache["shared_k"], new_k, start)
+        new_v = jax.lax.dynamic_update_slice(cache["shared_v"], new_v, start)
+    new_cache = {"mamba": gstate["mamba"], "shared_k": new_k, "shared_v": new_v}
+    if "tail_layers" in params:
+        x, tstate = jax.lax.scan(mamba_body, x, (params["tail_layers"], cache["tail"]))
+        new_cache["tail"] = tstate
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return linear(params["classifier"], x), new_cache

@@ -1,0 +1,67 @@
+"""Variable-length request batching for the inference engine.
+
+The step functions take uniform-length batches (one shared position counter
+— the shape the assigned decode cells use). Real traffic is ragged, so the
+engine front-end buckets requests by padded prompt length (powers of two),
+runs one prefill+decode per bucket, and reassembles responses in arrival
+order — continuous-batching-lite. Per-token request joining (true continuous
+batching) needs per-request position counters in the cache update and is
+listed as serving future work in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    tokens: list[int]
+
+
+@dataclasses.dataclass
+class Response:
+    id: int
+    tokens: np.ndarray
+
+
+def bucket_length(n: int, *, minimum: int = 8) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+def pad_bucket(reqs: Sequence[Request], length: int, pad_id: int = 0):
+    """Right-pad to ``length``; returns (tokens (b, length), true lengths)."""
+    toks = np.full((len(reqs), length), pad_id, np.int32)
+    lens = np.zeros((len(reqs),), np.int32)
+    for i, r in enumerate(reqs):
+        toks[i, : len(r.tokens)] = r.tokens
+        lens[i] = len(r.tokens)
+    return toks, lens
+
+
+def serve_ragged(engine, requests: Sequence[Request], max_new_tokens: int,
+                 *, sampler: str = "greedy", key=None) -> list[Response]:
+    """Bucket by padded length, generate per bucket, reassemble by id."""
+    buckets: dict[int, list[Request]] = defaultdict(list)
+    for r in requests:
+        buckets[bucket_length(len(r.tokens))].append(r)
+
+    out: dict[int, Response] = {}
+    for length in sorted(buckets):
+        reqs = buckets[length]
+        toks, _ = pad_bucket(reqs, length)
+        res = engine.generate({"tokens": jnp.asarray(toks)}, max_new_tokens,
+                              sampler=sampler, key=key)
+        gen = np.asarray(res.tokens)
+        for i, r in enumerate(reqs):
+            out[r.id] = Response(id=r.id, tokens=gen[i])
+    return [out[r.id] for r in requests]

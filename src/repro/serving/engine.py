@@ -1,0 +1,106 @@
+"""Inference engine: prefill + scanned decode with W8A8 or float weights.
+
+Mirrors the paper's serving structure (Alg. 2): the "transformer controller"
+is the jitted scan below, the quantized weights feed GQMV/GQMM via the
+linear() dispatch, and batch-1 real-time decoding is the faithful setting
+(batched decode is the TPU-native generalization).
+
+Fault-tolerance hooks: ``snapshot()``/``restore()`` expose the generation
+state (cache + position + tokens) so a preempted decode can resume on a
+rebuilt mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import quantize_params, quantized_fraction
+from repro.models.registry import Model
+from repro.serving.sampling import make_sampler
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jax.Array         # (b, max_new_tokens) sampled tokens
+    logits_last: jax.Array    # (b, vocab) final-step logits
+    steps: int
+
+
+class InferenceEngine:
+    """Uniform-length batched generation over any registry Model.
+
+    quantize=True applies the paper's PTQ (W8A8 group-wise) to the weights;
+    quantize=False is the "PS baseline" (same math, float weights).
+    """
+
+    def __init__(self, model: Model, params, *, cache_len: int,
+                 quantize: bool = False, tp: int = 1, eos_id: int | None = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        if quantize:
+            params = quantize_params(params, self.cfg.group_size, tp=tp)
+        self.params = params
+        self.quantized_fraction = quantized_fraction(params)
+        self._generate_jit: dict[tuple, Callable] = {}
+
+    # -- one-step APIs (used by benchmarks and the dry-run) -----------------
+    def prefill(self, batch):
+        return self.model.prefill(self.params, batch, self.cache_len)
+
+    def decode_step(self, token, cache, pos):
+        return self.model.decode(self.params, token, cache, pos)
+
+    # -- full generation -----------------------------------------------------
+    def _build_generate(self, max_new_tokens: int, sampler_name: str, prompt_len: int):
+        sampler = make_sampler(sampler_name)
+        model, cache_len = self.model, self.cache_len
+
+        @jax.jit
+        def run(params, batch, key):
+            logits, cache = model.prefill(params, batch, cache_len)
+            tok0 = sampler(logits, key)
+
+            def step(carry, k):
+                tok, cache, pos, done = carry
+                logits, cache = model.decode(params, tok, cache, pos)
+                nxt = sampler(logits, k)
+                if self.eos_id is not None:
+                    nxt = jnp.where(done, self.eos_id, nxt)
+                    done = done | (nxt == self.eos_id)
+                return (nxt, cache, pos + 1, done), (nxt, logits)
+
+            done0 = jnp.zeros(tok0.shape, jnp.bool_)
+            keys = jax.random.split(key, max_new_tokens)
+            (_, cache, _, _), (toks, logit_seq) = jax.lax.scan(
+                step, (tok0, cache, jnp.int32(prompt_len), done0), keys
+            )
+            tokens = jnp.concatenate([tok0[None], toks[:-1]], axis=0)
+            return jnp.moveaxis(tokens, 0, 1), logit_seq[-1]
+
+        return run
+
+    def generate(self, batch, max_new_tokens: int, *, sampler: str = "greedy",
+                 key=None) -> GenerationResult:
+        prompt_len = batch["tokens"].shape[1]
+        sig = (max_new_tokens, sampler, prompt_len)
+        if sig not in self._generate_jit:
+            self._generate_jit[sig] = self._build_generate(*sig)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        toks, logits = self._generate_jit[sig](self.params, batch, key)
+        return GenerationResult(tokens=toks, logits_last=logits, steps=max_new_tokens)
+
+    # -- fault tolerance ------------------------------------------------------
+    @staticmethod
+    def snapshot(cache, pos, tokens) -> dict[str, Any]:
+        return {"cache": jax.device_get(cache), "pos": int(pos),
+                "tokens": jax.device_get(tokens)}
+
+    def restore(self, snap):
+        return jax.device_put(snap["cache"]), jnp.int32(snap["pos"]), jnp.asarray(snap["tokens"])

@@ -1,0 +1,32 @@
+"""Token sampling strategies (paper §II-A: greedy + top-p)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array, key=None) -> jax.Array:
+    """(b, V) -> (b,) int32. The paper's evaluation setting (§V-C)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def top_p(logits: jax.Array, key, p: float = 0.9, temperature: float = 1.0) -> jax.Array:
+    """Nucleus sampling [Holtzman et al., 2020] (paper ref [15])."""
+    logits = logits / temperature
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # smallest set whose cumulative prob >= p; always keep the top token
+    cutoff_idx = jnp.sum(cum < p, axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+    filtered = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return jax.random.categorical(key, filtered, axis=-1).astype(jnp.int32)
+
+
+def make_sampler(name: str, **kw):
+    if name == "greedy":
+        return greedy
+    if name == "top_p":
+        return lambda logits, key: top_p(logits, key, **kw)
+    raise ValueError(f"unknown sampler {name}")

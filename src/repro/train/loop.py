@@ -1,0 +1,126 @@
+"""Training loop substrate: loss, train_step factory, checkpointed driver.
+
+The paper is inference-only; training here is framework substrate (bf16/f32
+weights). The int8 group-quantized gradient all-reduce (optim/compress.py)
+is the paper's quantization idea applied to training communication and is
+switchable per run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.models.registry import Model
+from repro.optim import adamw
+from repro.optim.compress import compressed_psum
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array, ignore_id: int = -1) -> jax.Array:
+    """Mean token cross-entropy; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits = model.forward(params, batch)
+        loss = lm_loss(logits, batch["labels"])
+        return loss, {"loss": loss}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    *, compress_axis: str | None = None) -> Callable:
+    """Returns train_step(params, opt_state, batch[, residuals]).
+
+    With ``compress_axis`` set (e.g. "pod" inside shard_map), gradients are
+    int8-group-compressed with error feedback before the cross-axis psum.
+    """
+    loss_fn = make_loss_fn(model)
+
+    if compress_axis is None:
+        def train_step(params, opt_state, batch):
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            params, opt_state, metrics = adamw.apply(opt_cfg, params, grads, opt_state)
+            return params, opt_state, {**aux, **metrics}
+
+        return train_step
+
+    def train_step(params, opt_state, batch, residuals):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        grads, residuals = compressed_psum(grads, compress_axis, residuals=residuals)
+        params, opt_state, metrics = adamw.apply(opt_cfg, params, grads, opt_state)
+        return params, opt_state, residuals, {**aux, **metrics}
+
+    return train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    # straggler mitigation: steps slower than stall_factor x the rolling
+    # median get flagged (on real fleets this feeds the health controller)
+    stall_factor: float = 3.0
+
+
+def run_loop(model: Model, params, data_iter, opt_cfg: adamw.AdamWConfig,
+             loop_cfg: LoopConfig, *, train_step=None, resume: bool = True,
+             log: Callable[[str], None] = print):
+    """Single-host driver with checkpoint/restart + straggler flagging.
+    Returns (params, opt_state, history)."""
+    opt_state = adamw.init(params)
+    start_step = 0
+    if resume and ckpt.latest_step(loop_cfg.ckpt_dir) is not None:
+        state = {"params": params, "opt": opt_state}
+        state, step, extra = ckpt.restore(loop_cfg.ckpt_dir, state)
+        params, opt_state = state["params"], state["opt"]
+        start_step = step
+        log(f"[resume] restored step {step} from {loop_cfg.ckpt_dir}")
+
+    step_fn = train_step or jax.jit(make_train_step(model, opt_cfg))
+    history: list[dict[str, Any]] = []
+    durations: list[float] = []
+
+    for step in range(start_step, loop_cfg.total_steps):
+        batch = jax.tree.map(jnp.asarray, data_iter.batch_at(step))
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        durations.append(dt)
+        med = sorted(durations)[len(durations) // 2]
+        straggler = len(durations) > 5 and dt > loop_cfg.stall_factor * med
+        rec = {"step": step + 1, "loss": float(metrics["loss"]),
+               "grad_norm": float(metrics["grad_norm"]), "sec": dt,
+               "straggler": straggler}
+        history.append(rec)
+        if straggler:
+            log(f"[straggler] step {rec['step']} took {dt:.2f}s (median {med:.2f}s)")
+        if (step + 1) % loop_cfg.log_every == 0:
+            log(f"step {rec['step']:5d}  loss {rec['loss']:.4f}  "
+                f"gnorm {rec['grad_norm']:.3f}  {dt*1e3:.0f} ms")
+        if (step + 1) % loop_cfg.ckpt_every == 0 or step + 1 == loop_cfg.total_steps:
+            ckpt.save(loop_cfg.ckpt_dir, step + 1,
+                      {"params": params, "opt": opt_state},
+                      extra={"data_step": step + 1})
+            ckpt.retain(loop_cfg.ckpt_dir, loop_cfg.ckpt_keep)
+
+    return params, opt_state, history

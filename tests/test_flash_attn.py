@@ -1,0 +1,84 @@
+"""Flash-attention Pallas kernel vs naive softmax oracle (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention_pallas
+
+
+def naive(q, k, v, *, group, scale, causal=True, window=None, softcap=None):
+    """(bh,s,hd) x (bkv,t,hd) oracle with GQA broadcast."""
+    bh, s, hd = q.shape
+    bkv, t, _ = k.shape
+    kf = jnp.repeat(k, group, axis=0)
+    vf = jnp.repeat(v, group, axis=0)
+    scores = jnp.einsum("hsd,htd->hst", q, kf).astype(jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= (qp - kp) < window
+    scores = jnp.where(ok[None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hst,htd->hsd", attn, vf).astype(q.dtype)
+
+
+def _mk(bh, bkv, s, t, hd, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(bkv, t, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(bkv, t, hd)).astype(np.float32))
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,t,hd,bq,bk", [
+    (128, 128, 64, 32, 32),
+    (256, 256, 32, 64, 128),
+    (64, 64, 128, 64, 64),
+])
+def test_flash_causal_matches_naive(s, t, hd, bq, bk):
+    q, k, v = _mk(4, 4, s, t, hd, seed=s + hd)
+    got = flash_attention_pallas(q, k, v, group=1, scale=hd**-0.5,
+                                 block_q=bq, block_k=bk, interpret=True)
+    want = naive(q, k, v, group=1, scale=hd**-0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_gqa_broadcast():
+    # 8 q heads over 2 kv heads (group=4), 2 batches -> bh=16, bkv=4
+    q, k, v = _mk(16, 4, 64, 64, 32, seed=7)
+    got = flash_attention_pallas(q, k, v, group=4, scale=32**-0.5,
+                                 block_q=32, block_k=32, interpret=True)
+    want = naive(q, k, v, group=4, scale=32**-0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_sliding_window_and_softcap():
+    q, k, v = _mk(2, 2, 128, 128, 32, seed=9)
+    got = flash_attention_pallas(q, k, v, group=1, scale=32**-0.5, window=32,
+                                 softcap=50.0, block_q=32, block_k=32, interpret=True)
+    want = naive(q, k, v, group=1, scale=32**-0.5, window=32, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_non_causal():
+    q, k, v = _mk(2, 2, 64, 64, 32, seed=11)
+    got = flash_attention_pallas(q, k, v, group=1, scale=32**-0.5, causal=False,
+                                 block_q=32, block_k=32, interpret=True)
+    want = naive(q, k, v, group=1, scale=32**-0.5, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_block_shape_invariance():
+    q, k, v = _mk(2, 2, 128, 128, 32, seed=13)
+    a = flash_attention_pallas(q, k, v, group=1, scale=0.2, block_q=32,
+                               block_k=64, interpret=True)
+    b = flash_attention_pallas(q, k, v, group=1, scale=0.2, block_q=128,
+                               block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,125 @@
+"""Pallas GQMV/GQMM kernels vs the pure-jnp oracle (paper Alg. 1).
+
+Kernels execute in interpret mode (CPU container); shapes/dtypes/GS swept.
+"""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.quant import quantize_activation, quantize_groupwise
+from repro.kernels import ops
+from repro.kernels.gqmv import gqmm_pallas, gqmv_pallas
+from repro.kernels.ref import gqmm_ref, gqmv_ref
+
+
+def _mk(m, n, gs, seed=0, b=None):
+    rng = np.random.default_rng(seed)
+    w = quantize_groupwise(
+        jnp.asarray(rng.normal(size=(m, n)).astype(np.float32)), gs
+    )
+    shape = (n,) if b is None else (b, n)
+    x = quantize_activation(
+        jnp.asarray(rng.normal(size=shape).astype(np.float32)), gs
+    )
+    return w, x
+
+
+GQMV_SHAPES = [
+    # (m, n, GS) - includes paper-exact TinyLlama dims (2048, 5632, GS=256)
+    (8, 64, 32),
+    (128, 256, 256),
+    (256, 2048, 256),     # kernel1 column size = dim (paper §III-B)
+    (2048, 5632, 256),    # kernel2 column size = hidden_dim (paper §III-B)
+    (96, 384, 128),
+    (512, 512, 64),
+]
+
+
+@pytest.mark.parametrize("m,n,gs", GQMV_SHAPES)
+def test_gqmv_matches_ref(m, n, gs):
+    w, x = _mk(m, n, gs, seed=m + n)
+    got = gqmv_pallas(w.qvalues, w.scales, x.qvalues, x.scales,
+                      group_size=gs, interpret=True)
+    want = gqmv_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,gs,b", [
+    (64, 128, 32, 4),
+    (128, 512, 256, 16),
+    (256, 2048, 256, 8),
+    (32, 256, 64, 1),
+    (2048, 5632, 256, 2),
+])
+def test_gqmm_matches_ref(m, n, gs, b):
+    w, x = _mk(m, n, gs, seed=m + n + b, b=b)
+    got = gqmm_pallas(w.qvalues, w.scales, x.qvalues, x.scales,
+                      group_size=gs, interpret=True)
+    want = gqmm_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_m,block_n", [(8, 64), (16, 128), (32, 256)])
+def test_gqmv_block_shape_sweep(block_m, block_n):
+    """Block shape is a tuning knob; result must be invariant to it."""
+    w, x = _mk(64, 512, 64, seed=7)
+    want = gqmv_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=64)
+    got = gqmv_pallas(w.qvalues, w.scales, x.qvalues, x.scales, group_size=64,
+                      block_m=block_m, block_n=block_n, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=1e-4)
+
+
+def test_gqmv_against_fp32_matmul():
+    """GQMV approximates the fp32 matmul within dequantization error."""
+    rng = np.random.default_rng(11)
+    wf = rng.normal(scale=0.05, size=(256, 1024)).astype(np.float32)
+    xf = rng.normal(size=(1024,)).astype(np.float32)
+    w = quantize_groupwise(jnp.asarray(wf), 256)
+    x = quantize_activation(jnp.asarray(xf), 256)
+    got = gqmv_pallas(w.qvalues, w.scales, x.qvalues, x.scales,
+                      group_size=256, interpret=True)
+    exact = wf @ xf
+    # relative Frobenius error small (paper Table IV: mean element error 2.65e-4)
+    rel = np.linalg.norm(np.asarray(got) - exact) / np.linalg.norm(exact)
+    assert rel < 0.02, rel
+
+
+def test_ops_dispatch_xla_equals_interpret():
+    w, x = _mk(128, 512, 128, seed=5)
+    a = ops.gqmv(w.qvalues, w.scales, x.qvalues, x.scales,
+                 group_size=128, impl="xla")
+    b = ops.gqmv(w.qvalues, w.scales, x.qvalues, x.scales,
+                 group_size=128, impl="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=1e-4)
+
+
+def test_quantized_matmul_shapes():
+    rng = np.random.default_rng(9)
+    w = quantize_groupwise(jnp.asarray(rng.normal(size=(96, 256)).astype(np.float32)), 64)
+    y1 = ops.quantized_matmul(jnp.ones((256,)), w, impl="xla")
+    y2 = ops.quantized_matmul(jnp.ones((4, 256)), w, impl="xla")
+    y3 = ops.quantized_matmul(jnp.ones((2, 3, 256)), w, impl="xla")
+    assert y1.shape == (96,)
+    assert y2.shape == (4, 96)
+    assert y3.shape == (2, 3, 96)
+    np.testing.assert_allclose(np.asarray(y3[0, 0]), np.asarray(y1), rtol=1e-5)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    mi=st.integers(1, 4),
+    gi=st.integers(1, 4),
+    gs=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_gqmv_pallas_vs_ref(mi, gi, gs, seed):
+    m, n = 8 * mi, gs * gi
+    w, x = _mk(m, n, gs, seed=seed)
+    got = gqmv_pallas(w.qvalues, w.scales, x.qvalues, x.scales,
+                      group_size=gs, interpret=True)
+    want = gqmv_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=1e-4)

@@ -1,0 +1,70 @@
+"""PTQ policy tests: per-leaf group sizes, TP shard alignment, exclusions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import (
+    leaf_group_size,
+    quantize_params,
+    quantized_fraction,
+    should_quantize,
+)
+from repro.core.quant import QuantizedTensor
+
+
+def test_leaf_group_size_plain():
+    w = jnp.zeros((128, 2048))
+    assert leaf_group_size("layers/attn/wqkv", w, 256) == 256
+    assert leaf_group_size("layers/attn/wqkv", jnp.zeros((128, 1408)), 256) == 128
+
+
+def test_leaf_group_size_row_parallel_tp():
+    # deepseek-coder wo: contraction 7168 sharded 16 ways -> 448/shard -> GS 64
+    w = jnp.zeros((7168, 7168))
+    assert leaf_group_size("layers/attn/wo", w, 256, tp=16) == 64
+    # w2 contraction 19200/16=1200 -> largest pow2 dividing is 16
+    assert leaf_group_size("layers/mlp/w2", jnp.zeros((7168, 19200)), 256, tp=16) == 16
+    # expert weights are EP-sharded, contraction whole
+    assert leaf_group_size("layers/mlp/experts/w2", jnp.zeros((6144, 10752)), 256, tp=16) == 256
+
+
+def test_exclusions():
+    assert not should_quantize("layers/att_norm", jnp.zeros((24, 2048)), 256)
+    assert not should_quantize("layers/mlp/router_w", jnp.zeros((16, 6144)), 256)
+    assert not should_quantize("layers/mamba/conv_w", jnp.zeros((4, 7296)), 256)
+    assert not should_quantize("layers/decay_lora_a", jnp.zeros((64, 4096)), 256)
+    assert should_quantize("layers/attn/wqkv", jnp.zeros((4096, 2048)), 256)
+
+
+def test_quantize_params_tp_alignment():
+    params = {
+        "wo": jnp.asarray(np.random.default_rng(0).normal(size=(64, 448 * 16)).astype(np.float32)),
+        "wqkv": jnp.asarray(np.random.default_rng(1).normal(size=(64, 2048)).astype(np.float32)),
+    }
+    qp = quantize_params(params, 256, tp=16)
+    # wo: per-shard contraction 448 -> GS 64; scales count divisible by 16
+    assert qp["wo"].group_size == 64
+    assert qp["wo"].scales.shape[-1] % 16 == 0
+    assert qp["wqkv"].group_size == 256
+
+
+def test_quantized_fraction_counts_scales():
+    params = {"w": jnp.ones((64, 256)), "norm": jnp.ones((256,))}
+    qp = quantize_params(params, 256)
+    frac = quantized_fraction(qp)
+    w_bytes = 64 * 256 + 4 * 64  # int8 + scales
+    total = w_bytes + 256 * 4
+    assert abs(frac - w_bytes / total) < 1e-6
+
+
+def test_quantize_params_under_eval_shape():
+    """The dry-run quantizes ShapeDtypeStructs via eval_shape — must work."""
+    params = {"w13": jax.ShapeDtypeStruct((512, 256), jnp.float32),
+              "norm": jax.ShapeDtypeStruct((256,), jnp.float32)}
+    q = jax.eval_shape(lambda p: quantize_params(p, 128, tp=4), params)
+    assert isinstance(q["w13"], QuantizedTensor)
+    assert q["w13"].qvalues.dtype == jnp.int8
+    assert q["w13"].scales.shape == (512, 2)
+    assert q["norm"].dtype == jnp.float32

@@ -1,0 +1,42 @@
+"""Fused RMSNorm+quantize Pallas kernel vs composed oracle."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels.rmsnorm_quant import rmsnorm_quant_pallas, rmsnorm_quant_ref
+
+
+@pytest.mark.parametrize("m,n,gs", [(8, 128, 32), (64, 512, 256), (32, 2048, 256), (16, 256, 64)])
+def test_matches_ref(m, n, gs):
+    rng = np.random.default_rng(m + n)
+    x = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    q, s = rmsnorm_quant_pallas(x, w, group_size=gs, interpret=True)
+    qr, sr = rmsnorm_quant_ref(x, w, group_size=gs)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+    # rounding at exactly .5 boundaries may differ by 1 ulp of int8
+    assert np.mean(np.asarray(q) != np.asarray(qr)) < 1e-3
+
+
+def test_block_invariance():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
+    w = jnp.ones((256,))
+    a = rmsnorm_quant_pallas(x, w, group_size=64, block_m=8, interpret=True)
+    b = rmsnorm_quant_pallas(x, w, group_size=64, block_m=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+
+@settings(deadline=None, max_examples=10)
+@given(mi=st.integers(1, 4), gs=st.sampled_from([32, 64]), seed=st.integers(0, 2**31 - 1))
+def test_property_bounds(mi, gs, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8 * mi, 2 * gs)).astype(np.float32))
+    w = jnp.ones((2 * gs,))
+    q, s = rmsnorm_quant_pallas(x, w, group_size=gs, interpret=True)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+    assert bool(jnp.all(s >= 0))

@@ -1,0 +1,203 @@
+"""Perf-variant (flags) correctness: optimized paths must be numerically
+equivalent to the baseline paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flags
+from repro.models.registry import build, load_config, smoke_batch
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "internlm2-1.8b", "gemma2-2b"])
+def test_deferred_decode_matches_baseline(arch):
+    cfg = load_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, batch=2, seq=6)
+    logits_p, cache = model.prefill(params, batch, 12)
+
+    tok = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    base_logits, base_cache = model.decode(params, tok, cache, jnp.int32(6))
+    with flags.overrides(deferred_decode_cache=True):
+        opt_logits, opt_cache = model.decode(params, tok, cache, jnp.int32(6))
+
+    np.testing.assert_allclose(np.asarray(opt_logits), np.asarray(base_logits),
+                               rtol=2e-3, atol=2e-3)
+    for key in ("k", "v"):
+        np.testing.assert_allclose(np.asarray(opt_cache[key]),
+                                   np.asarray(base_cache[key]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_deferred_decode_multi_step(arch="tinyllama-1.1b"):
+    """Three consecutive deferred steps == three baseline steps."""
+    cfg = load_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = smoke_batch(cfg, batch=1, seq=4)
+    _, cache_a = model.prefill(params, batch, 10)
+    cache_b = jax.tree.map(jnp.copy, cache_a)
+
+    tok = jnp.asarray([3], jnp.int32)
+    for step in range(3):
+        pos = jnp.int32(4 + step)
+        la, cache_a = model.decode(params, tok, cache_a, pos)
+        with flags.overrides(deferred_decode_cache=True):
+            lb, cache_b = model.decode(params, tok, cache_b, pos)
+        np.testing.assert_allclose(np.asarray(lb), np.asarray(la), rtol=2e-3, atol=2e-3)
+        tok = jnp.argmax(la, -1).astype(jnp.int32)
+
+
+def test_flags_override_restores():
+    assert flags.get("deferred_decode_cache") is False
+    with flags.overrides(deferred_decode_cache=True):
+        assert flags.get("deferred_decode_cache") is True
+    assert flags.get("deferred_decode_cache") is False
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "gemma2-2b"])
+def test_blockwise_attention_matches_baseline(arch):
+    """Chunked online-softmax forward == naive full-softmax forward."""
+    cfg = load_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    batch = smoke_batch(cfg, batch=2, seq=32)
+    base = model.forward(params, batch, remat=False)
+    with flags.overrides(blockwise_attention=True, attention_chunk=8):
+        opt = model.forward(params, batch, remat=False)
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(base), rtol=3e-3, atol=3e-3)
+
+
+def test_blockwise_prefill_matches_baseline():
+    cfg = load_config("internlm2-1.8b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    batch = smoke_batch(cfg, batch=1, seq=16)
+    base_logits, base_cache = model.prefill(params, batch, 24)
+    with flags.overrides(blockwise_attention=True, attention_chunk=4):
+        opt_logits, opt_cache = model.prefill(params, batch, 24)
+    np.testing.assert_allclose(np.asarray(opt_logits), np.asarray(base_logits),
+                               rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(np.asarray(opt_cache["k"]), np.asarray(base_cache["k"]),
+                               rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "internlm2-1.8b"])
+def test_kvt_cache_layout_matches_baseline(arch):
+    """(B,KV,T,hd) cache layout + deferred commit == baseline decode."""
+    cfg = load_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    batch = smoke_batch(cfg, batch=2, seq=6)
+    base_logits, base_cache = model.prefill(params, batch, 12)
+    tok = jnp.argmax(base_logits, -1).astype(jnp.int32)
+    ref_logits, _ = model.decode(params, tok, base_cache, jnp.int32(6))
+
+    with flags.overrides(kvt_cache_layout=True):
+        kvt_plogits, kvt_cache = model.prefill(params, batch, 12)
+        np.testing.assert_allclose(np.asarray(kvt_plogits), np.asarray(base_logits),
+                                   rtol=2e-3, atol=2e-3)
+        opt_logits, opt_cache = model.decode(params, tok, kvt_cache, jnp.int32(6))
+        # second step exercises the committed rows
+        tok2 = jnp.argmax(opt_logits, -1).astype(jnp.int32)
+        opt2, _ = model.decode(params, tok2, opt_cache, jnp.int32(7))
+    np.testing.assert_allclose(np.asarray(opt_logits), np.asarray(ref_logits),
+                               rtol=2e-3, atol=2e-3)
+    # baseline second step for comparison
+    _, base_cache2 = model.decode(params, tok, base_cache, jnp.int32(6))
+    ref2, _ = model.decode(params, tok2, base_cache2, jnp.int32(7))
+    np.testing.assert_allclose(np.asarray(opt2), np.asarray(ref2), rtol=2e-3, atol=2e-3)
+
+
+def test_int8_kv_cache_matches_baseline():
+    """int8-quantized KV cache decode tracks the fp32-cache decode closely
+    (paper Table IV error scale) and generation stays consistent."""
+    cfg = load_config("internlm2-1.8b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    batch = smoke_batch(cfg, batch=2, seq=6)
+    ref_plogits, ref_cache = model.prefill(params, batch, 12)
+    tok = jnp.argmax(ref_plogits, -1).astype(jnp.int32)
+    ref1, ref_cache = model.decode(params, tok, ref_cache, jnp.int32(6))
+
+    with flags.overrides(int8_kv_cache=True):
+        q_plogits, q_cache = model.prefill(params, batch, 12)
+        np.testing.assert_allclose(np.asarray(q_plogits), np.asarray(ref_plogits),
+                                   rtol=0.1, atol=0.1)
+        q1, q_cache = model.decode(params, tok, q_cache, jnp.int32(6))
+        tok2 = jnp.argmax(q1, -1).astype(jnp.int32)
+        q2, _ = model.decode(params, tok2, q_cache, jnp.int32(7))
+    # quantized-cache logits track fp32-cache logits within int8 error
+    rel = np.linalg.norm(np.asarray(q1) - np.asarray(ref1)) / np.linalg.norm(np.asarray(ref1))
+    assert rel < 0.05, rel
+    assert bool(jnp.all(jnp.isfinite(q2)))
+    assert q_cache["k_q"].dtype == jnp.int8
+
+
+def test_zamba_deferred_decode_matches_baseline():
+    cfg = load_config("zamba2-7b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    batch = smoke_batch(cfg, batch=2, seq=6)
+    plogits, cache = model.prefill(params, batch, 12)
+    tok = jnp.argmax(plogits, -1).astype(jnp.int32)
+    ref, _ = model.decode(params, tok, cache, jnp.int32(6))
+    with flags.overrides(kvt_cache_layout=True):
+        p2, cache2 = model.prefill(params, batch, 12)
+        np.testing.assert_allclose(np.asarray(p2), np.asarray(plogits), rtol=2e-3, atol=2e-3)
+        opt, cache2 = model.decode(params, tok, cache2, jnp.int32(6))
+        tok2 = jnp.argmax(opt, -1).astype(jnp.int32)
+        opt2, _ = model.decode(params, tok2, cache2, jnp.int32(7))
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(ref), rtol=2e-3, atol=2e-3)
+    assert bool(jnp.all(jnp.isfinite(opt2)))
+
+
+def test_chunked_ssd_matches_scan():
+    """Mamba2 chunked-SSD (matmul duality) == per-step recurrence."""
+    cfg = load_config("zamba2-7b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(8))
+    batch = smoke_batch(cfg, batch=2, seq=32)
+    base = model.forward(params, batch, remat=False)
+    with flags.overrides(chunked_ssd=True, ssd_chunk=8):
+        opt = model.forward(params, batch, remat=False)
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(base), rtol=5e-3, atol=5e-3)
+
+
+def test_chunked_ssd_prefill_state_matches():
+    """Chunked prefill leaves the same SSM state as the step recurrence,
+    so decode continues correctly."""
+    cfg = load_config("zamba2-7b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(9))
+    batch = smoke_batch(cfg, batch=1, seq=16)
+    _, cache_a = model.prefill(params, batch, 20)
+    with flags.overrides(chunked_ssd=True, ssd_chunk=4):
+        _, cache_b = model.prefill(params, batch, 20)
+    np.testing.assert_allclose(np.asarray(cache_b["mamba"]["h"]),
+                               np.asarray(cache_a["mamba"]["h"]), rtol=5e-3, atol=5e-3)
+    tok = jnp.asarray([1], jnp.int32)
+    la, _ = model.decode(params, tok, cache_a, jnp.int32(16))
+    lb, _ = model.decode(params, tok, cache_b, jnp.int32(16))
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(la), rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ["minicpm3-4b", "deepseek-v2-lite-16b"])
+def test_mla_deferred_decode_matches_baseline(arch):
+    cfg = load_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(10))
+    batch = smoke_batch(cfg, batch=2, seq=6)
+    plogits, cache = model.prefill(params, batch, 12)
+    tok = jnp.argmax(plogits, -1).astype(jnp.int32)
+    ref, ref_cache = model.decode(params, tok, cache, jnp.int32(6))
+    with flags.overrides(deferred_decode_cache=True):
+        opt, opt_cache = model.decode(params, tok, cache, jnp.int32(6))
+        tok2 = jnp.argmax(opt, -1).astype(jnp.int32)
+        opt2, _ = model.decode(params, tok2, opt_cache, jnp.int32(7))
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(ref), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(opt_cache["ckv"]), np.asarray(ref_cache["ckv"]),
+                               rtol=2e-3, atol=2e-3)
+    assert bool(jnp.all(jnp.isfinite(opt2)))
