@@ -7,10 +7,17 @@
   kernels -> kernel_bench    (GQMV/GQMM kernel-shape sweep, interpret mode)
 """
 
+import os
 import sys
 
+# Allow both `python benchmarks/run.py` and `python -m benchmarks.run`.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-def main() -> None:
+
+def main() -> int:
     from benchmarks import kernel_bench, profile_forward, quant_error, quality, throughput
 
     only = sys.argv[1] if len(sys.argv) > 1 else None
@@ -21,12 +28,16 @@ def main() -> None:
         "table6": throughput.run,
         "kernels": kernel_bench.run,
     }
+    if only is not None and only not in suites:
+        print(f"unknown suite {only!r}; valid: {', '.join(suites)}", file=sys.stderr)
+        return 2
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if only and only != name:
             continue
         fn()
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

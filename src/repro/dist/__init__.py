@@ -1,0 +1,17 @@
+"""Distribution layer: logical axes + path-keyed placement policy.
+
+Two sub-modules, deliberately small and dependency-free so every model
+family (transformer/GQA, MLA, MoE, SSM, RWKV, enc-dec) can import them
+without touching device state:
+
+  logical   logical axis names ("dp"/"tp"/"seq") bound to physical mesh
+            axes by a context manager; ``constrain`` pins activation
+            shardings inside jit and degrades to a no-op off-mesh.
+  sharding  parameter/cache/batch PartitionSpec policy keyed on pytree
+            paths — the elasticity contract (ft/elastic.py) is that rules
+            name AXES, never device counts.
+"""
+
+from repro.dist import logical, sharding
+
+__all__ = ["logical", "sharding"]

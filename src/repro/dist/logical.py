@@ -1,0 +1,104 @@
+"""Logical sharding axes for model code.
+
+Model code annotates activations with LOGICAL names — "dp" (data/batch),
+"tp" (tensor/model), "seq" (sequence spread over the whole mesh for the
+batch-1 long-context decode path) — and this module binds them to whatever
+physical mesh is active:
+
+    with mesh, logical.use_mesh_rules(mesh):
+        step = jax.jit(...)
+
+Outside ``use_mesh_rules`` (CPU smoke tests, single-process examples)
+``size()`` returns 1 and ``constrain`` is the identity, so every model runs
+unsharded with zero code changes. Inside a mesh, ``constrain`` drops any
+axis whose size does not divide the corresponding dimension instead of
+erroring — the same degrade-don't-fail contract as sharding.param_spec.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+_ACTIVE: "_Rules | None" = None
+
+
+class _Rules:
+    """Logical-name -> physical-axes binding for one mesh."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        names = tuple(mesh.axis_names)
+        dp = tuple(a for a in names if a != MODEL_AXIS)
+        tp = (MODEL_AXIS,) if MODEL_AXIS in names else ()
+        # "seq" spreads one dimension over the FULL mesh (batch-1 decode).
+        self.axes = {"dp": dp, "tp": tp, "seq": dp + tp}
+
+    def size(self, name: str) -> int:
+        return int(math.prod(self.mesh.shape[a] for a in self.axes.get(name, ())))
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh):
+    """Bind logical names to ``mesh`` for the enclosed scope (re-entrant)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = _Rules(mesh)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def active_mesh():
+    """The mesh bound by the innermost ``use_mesh_rules``, or None."""
+    return _ACTIVE.mesh if _ACTIVE is not None else None
+
+
+def size(name: str) -> int:
+    """Total device count behind logical axis ``name`` (1 when off-mesh)."""
+    return _ACTIVE.size(name) if _ACTIVE is not None else 1
+
+
+def spec(shape, *axes) -> P:
+    """Resolve logical ``axes`` against the active rules for ``shape``.
+
+    Each entry is a logical name or None. An axis is dropped (-> None) when
+    no rules are active, the name is unknown, its size is 1, it does not
+    divide the dimension, or its physical axes were already consumed by an
+    earlier dimension (a mesh axis may shard at most one dim).
+    """
+    if _ACTIVE is None:
+        return P(*([None] * len(shape)))
+    used: set[str] = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        phys = _ACTIVE.axes.get(ax, ()) if ax else ()
+        sz = math.prod(_ACTIVE.mesh.shape[a] for a in phys) if phys else 1
+        if not phys or sz <= 1 or dim % sz or any(a in used for a in phys):
+            out.append(None)
+            continue
+        used.update(phys)
+        out.append(phys[0] if len(phys) == 1 else phys)
+    out += [None] * (len(shape) - len(out))
+    return P(*out)
+
+
+def constrain(x, *axes):
+    """``with_sharding_constraint`` keyed on logical axis names.
+
+    Identity when no mesh rules are active; otherwise pins ``x`` to the
+    resolved PartitionSpec (see ``spec`` for the drop rules). ``axes`` may
+    be shorter than ``x.ndim``; missing trailing entries mean unsharded.
+    """
+    if _ACTIVE is None:
+        return x
+    if len(axes) > x.ndim:
+        raise ValueError(f"{len(axes)} axes for rank-{x.ndim} value")
+    s = spec(x.shape, *axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_ACTIVE.mesh, s))

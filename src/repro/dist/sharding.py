@@ -1,0 +1,221 @@
+"""Placement policy: pytree paths + shapes -> PartitionSpecs.
+
+The rules are written against mesh AXIS NAMES ("data", "model", optional
+leading "pod"), never device counts — the elasticity contract that lets one
+set of pjit programs revalidate on any surviving mesh (ft/elastic.py).
+
+Parameter rules (Megatron-style, path-keyed):
+
+  column-parallel (wqkv, w13, wq, ...; (..., out, in))
+        out -> model; in -> data (FSDP, TRAIN ONLY — serving keeps weights
+        fully materialized along the contraction so GQMV shards stay local)
+  row-parallel (wo, w2, wout, wff2)
+        in -> model; out -> data (train-only FSDP)
+  MoE experts (path contains "experts"; (..., E, out, in))
+        E -> model (expert parallel); the within-expert contraction is NEVER
+        sharded so quantization groups stay whole; FSDP (data) still applies
+  quantized leaves (qvalues / scales under a weight)
+        qvalues inherit the parent weight's rule unchanged; scales inherit
+        it except the trailing GROUP axis, which follows "model" only when
+        the parent contraction does (row-parallel serve) and never takes
+        FSDP — the LlamaF invariant that a quantization group is never split
+        across shards (core/policy.py sizes groups to n/tp for this reason)
+  embed: vocab -> model, d_model -> data (train only); norms, routers,
+  SSM scan params, conv kernels, token-shift mixes, biases: replicated.
+
+Any assignment whose axis size does not divide the dimension degrades to
+None (unsharded) instead of erroring, so reduced/CPU configs and odd dims
+run everywhere.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.treepath import path_str
+
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+# Weights whose CONTRACTION (trailing) axis is model-sharded when serving;
+# shared with the quantization group-size policy (core/policy.py).
+ROW_PARALLEL = ("wo", "w2", "wout", "wff2")
+
+# Leaf-name fragments that are always replicated (norms + the paper's
+# "small/accuracy-critical" exemption class; mirrors policy.EXCLUDE_PATTERNS).
+REPLICATED = ("norm", "router", "a_log", "dt_bias", "d_skip", "conv",
+              "decay", "bonus", "mix", "bias", "lora")
+
+QUANT_LEAVES = ("qvalues", "scales")
+
+
+def _sizes(mesh) -> dict[str, int]:
+    return {a: int(mesh.shape[a]) for a in mesh.axis_names}
+
+
+def _fit(dim: int, axis: str | None, sizes: dict[str, int]) -> str | None:
+    """axis if it exists, is >1-way, and divides dim; else None."""
+    if axis is None:
+        return None
+    n = sizes.get(axis, 1)
+    return axis if n > 1 and dim % n == 0 else None
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """All data-parallel-like axes (everything except the model axis)."""
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+
+
+def _dp_size(mesh) -> int:
+    s = _sizes(mesh)
+    return int(math.prod(s[a] for a in dp_axes(mesh)))
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_spec(path: str, shape, *, mesh, mode: str = "train") -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``path`` is the '/'-joined pytree path (core/treepath.py), ``shape`` the
+    leaf shape, ``mode`` "train" (adds FSDP over the data axis) or "serve".
+    """
+    sizes = _sizes(mesh)
+    parts = [p for p in str(path).split("/") if p]
+    leaf = parts[-1].lower() if parts else ""
+    quant_leaf = leaf if leaf in QUANT_LEAVES else None
+    name = (parts[-2].lower() if len(parts) >= 2 else "") if quant_leaf else leaf
+    ndim = len(shape)
+    spec: list[Any] = [None] * ndim
+    train = mode == "train"
+
+    if ndim < 2 or any(pat in name for pat in REPLICATED):
+        return P(*spec)
+
+    if name == "embed":
+        # (vocab, d_model): vocab -> model; embedding dim -> train-only FSDP.
+        spec[-2] = _fit(shape[-2], MODEL_AXIS, sizes)
+        if quant_leaf != "scales":  # group axis of a quantized embed: whole
+            spec[-1] = _fit(shape[-1], DATA_AXIS if train else None, sizes)
+        return P(*spec)
+
+    if name in ROW_PARALLEL:
+        out_ax: str | None = DATA_AXIS if train else None
+        in_ax: str | None = MODEL_AXIS
+    else:  # column-parallel default for every large (..., out, in) matrix
+        out_ax = MODEL_AXIS
+        in_ax = DATA_AXIS if train else None
+
+    if "experts" in parts:
+        # Expert-parallel: the stacked E axis (just before out/in) takes the
+        # model axis; the per-expert matmul axes must not reuse it, and the
+        # within-expert contraction stays whole (groups never split).
+        out_ax = None if out_ax == MODEL_AXIS else out_ax
+        in_ax = None if in_ax == MODEL_AXIS else in_ax
+        if ndim >= 3:
+            spec[ndim - 3] = _fit(shape[ndim - 3], MODEL_AXIS, sizes)
+
+    spec[-2] = _fit(shape[-2], out_ax, sizes)
+    if quant_leaf == "scales":
+        # Trailing axis is the GROUP axis: model-follow only (no FSDP).
+        spec[-1] = _fit(shape[-1], in_ax if in_ax == MODEL_AXIS else None, sizes)
+    else:
+        spec[-1] = _fit(shape[-1], in_ax, sizes)
+    return P(*spec)
+
+
+def param_specs(params, mesh, mode: str = "train"):
+    """param_spec over a whole parameter pytree (QuantizedTensor leaves
+    descend to their qvalues/scales children via the keyed pytree paths)."""
+
+    def one(path, leaf):
+        return param_spec(path_str(path), leaf.shape, mesh=mesh, mode=mode)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# caches / batches / outputs
+# ---------------------------------------------------------------------------
+
+def cache_spec(name: str, shape, *, mesh, batch: int) -> P:
+    """KV/state-cache placement: batch -> data, the axis after it (sequence
+    for KV caches, heads for RWKV/SSM states) -> model. The batch-1
+    long-context case spreads the sequence over the FULL mesh instead —
+    there is no batch to shard, and a 512k cache is the dominant tensor.
+    ``name`` is the leaf name (unused by the positional rule; kept so
+    family-specific overrides stay one keyed branch away)."""
+    del name
+    sizes = _sizes(mesh)
+    ndim = len(shape)
+    spec: list[Any] = [None] * ndim
+    # Locate the batch dim. Every cache leaf leads with at least one stack
+    # axis (layers or layer-groups), so the search starts at index 1 — a
+    # leading L equal to the batch size must not be mistaken for the batch.
+    if ndim >= 3:
+        search = range(1, max(2, ndim - 2))
+        b_idx = next((i for i in search if shape[i] == batch), 1)
+    else:
+        b_idx = 0 if ndim and shape[0] == batch else min(1, ndim - 1)
+    if batch > 1:
+        spec[b_idx] = _fit(batch, DATA_AXIS, sizes)
+    seq_idx = b_idx + 1
+    if seq_idx < ndim:
+        d = shape[seq_idx]
+        full = int(math.prod(sizes.values()))
+        if batch == 1 and full > 1 and d % full == 0 and len(sizes) > 1:
+            spec[seq_idx] = tuple(mesh.axis_names)
+        else:
+            spec[seq_idx] = _fit(d, MODEL_AXIS, sizes)
+    return P(*spec)
+
+
+def cache_specs(cache, mesh, batch: int):
+    """cache_spec over a cache pytree keyed by each leaf's name."""
+
+    def one(path, leaf):
+        nm = path_str(path).rsplit("/", 1)[-1]
+        return cache_spec(nm, leaf.shape, mesh=mesh, batch=batch)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def batch_specs(batch, mesh):
+    """Data-parallel input batches: leading axis over every non-model axis
+    when it divides evenly, else fully replicated (divisibility-checked so
+    odd eval batches never error)."""
+    dp = dp_axes(mesh)
+    dp_sz = _dp_size(mesh)
+
+    def one(leaf):
+        shape = leaf.shape
+        if shape and dp and dp_sz > 1 and shape[0] % dp_sz == 0:
+            return P(dp, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(one, batch)
+
+
+def logits_spec(mesh, ndim: int, batch: int) -> P:
+    """Output logits: batch -> dp axes (when divisible), vocab -> model.
+    The vocab axis is vocab_padded (multiple of 32) so it shards evenly on
+    the production meshes; XLA pads gracefully if it ever does not."""
+    sizes = _sizes(mesh)
+    dp = dp_axes(mesh)
+    dp_sz = _dp_size(mesh)
+    first = dp if (dp and dp_sz > 1 and batch % dp_sz == 0) else None
+    last = MODEL_AXIS if sizes.get(MODEL_AXIS, 1) > 1 else None
+    return P(first, *([None] * (ndim - 2)), last)
+
+
+def shardings(specs, mesh):
+    """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

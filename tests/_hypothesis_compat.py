@@ -1,0 +1,70 @@
+"""Real hypothesis when installed, else a deterministic stand-in.
+
+The container bakes in the jax toolchain but not hypothesis; the fallback
+``given`` draws ``max_examples`` pseudo-random examples from the declared
+strategies with a fixed seed, so the property tests still sweep shapes and
+scales (just without shrinking / example databases).
+"""
+
+from __future__ import annotations
+
+import random
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda r: r.choice(options))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    st = _Strategies()
+
+    def settings(**kw):
+        def deco(fn):
+            fn._max_examples = kw.get("max_examples", 10)
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 10))
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples", 10)
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

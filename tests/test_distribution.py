@@ -1,9 +1,12 @@
 """Distribution-layer tests: partition rules, HLO analyzer, mesh planning,
 plus one real (tiny-mesh) sharded train step for end-to-end validity."""
 
+import os
 import subprocess
 import sys
 from types import SimpleNamespace
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 import jax
 import jax.numpy as jnp
@@ -170,8 +173,8 @@ def test_dryrun_cli_single_cell(tmp_path):
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "internlm2-1.8b",
          "--shape", "prefill_32k", "--mesh", "single", "--out", str(out)],
         capture_output=True, text=True, timeout=1200,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
-        cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin")},
+        cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stdout + proc.stderr
     import json

@@ -3,9 +3,12 @@ half the fleet, resume on a 4-device mesh — the checkpoint reshards onto the
 surviving devices and the loss curve continues (subprocess because device
 count is fixed at first jax init)."""
 
+import os
 import subprocess
 import sys
 import textwrap
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = textwrap.dedent("""
     import os, sys, json
@@ -35,15 +38,21 @@ SCRIPT = textwrap.dedent("""
                               LoopConfig(total_steps=steps, ckpt_every=4,
                                          ckpt_dir=ckdir, log_every=100),
                               train_step=step, log=lambda s: None)
-    print(json.dumps([(h["step"], h["loss"]) for h in hist]))
+        # fresh-init loss on the first batch this run trained on: the
+        # reset-detection baseline (params above were never updated here)
+        from repro.train.loop import make_loss_fn
+        first_batch = jax.tree.map(jnp.asarray, data.batch_at(hist[0]["step"] - 1))
+        fresh = float(make_loss_fn(model)(params, first_batch)[0])
+    print(json.dumps({"hist": [(h["step"], h["loss"]) for h in hist],
+                      "fresh_first_loss": fresh}))
 """)
 
 
 def _run(devices: int, steps: int, ckdir: str):
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT, str(devices), str(steps), ckdir],
-        capture_output=True, text=True, timeout=900, cwd="/root/repo",
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        capture_output=True, text=True, timeout=900, cwd=REPO_ROOT,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin")},
     )
     assert proc.returncode == 0, proc.stdout + proc.stderr
     import json
@@ -52,9 +61,14 @@ def _run(devices: int, steps: int, ckdir: str):
 
 def test_elastic_restart_reshards(tmp_path):
     ck = str(tmp_path / "elastic")
-    hist1 = _run(8, 8, ck)            # 2x4 mesh, checkpoints at steps 4, 8
+    res1 = _run(8, 8, ck)             # 2x4 mesh, checkpoints at steps 4, 8
+    hist1 = res1["hist"]
     assert hist1[-1][0] == 8
-    hist2 = _run(4, 12, ck)           # "pod loss": resume on 1x4 mesh
+    res2 = _run(4, 12, ck)            # "pod loss": resume on 1x4 mesh
+    hist2 = res2["hist"]
     assert hist2[0][0] == 9           # resumed, not restarted
-    # loss continues from the checkpointed trajectory (no reset to ~ln(V))
-    assert hist2[0][1] < hist1[0][1], (hist1[0], hist2[0])
+    # restored params beat a fresh re-init ON THE SAME BATCH: the checkpoint
+    # trajectory continued rather than resetting to ~ln(V) (same-batch
+    # comparison — per-batch difficulty varies more than 8 steps of progress,
+    # so any cross-batch loss comparison here would be unreliable)
+    assert hist2[0][1] < res2["fresh_first_loss"], (res2["fresh_first_loss"], hist2[0])

@@ -3,12 +3,11 @@
 Kernels execute in interpret mode (CPU container); shapes/dtypes/GS swept.
 """
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.quant import quantize_activation, quantize_groupwise
 from repro.kernels import ops

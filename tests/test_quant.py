@@ -1,12 +1,10 @@
 """Unit + property tests for the group-wise W8A8 quantization substrate."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.quant import (
     QuantizedTensor,
