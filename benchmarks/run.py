@@ -5,6 +5,7 @@
   table5 -> quality          (paper Table V: PPL fp32 vs W8A8)
   table6 -> throughput       (paper Table VI: tok/s, GOPS, scheduling)
   kernels -> kernel_bench    (GQMV/GQMM kernel-shape sweep, interpret mode)
+  ragged -> throughput       (ragged trace: bucket-serial vs continuous slots)
 """
 
 import os
@@ -27,6 +28,7 @@ def main() -> int:
         "table5": quality.run,
         "table6": throughput.run,
         "kernels": kernel_bench.run,
+        "ragged": throughput.run_ragged,
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; valid: {', '.join(suites)}", file=sys.stderr)

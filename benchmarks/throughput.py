@@ -26,10 +26,21 @@ from benchmarks.common import emit, time_fn
 from repro.core.quant import quantize_activation, quantize_groupwise
 from repro.kernels import ops
 from repro.models.registry import build, load_config
+from repro.serving.batching import Request, SlotScheduler, serve_bucketed
 from repro.serving.engine import InferenceEngine
 
 HBM_BW = 819e9
 PEAK = 197e12
+
+# ragged trace: prompt lengths spread thinly across six power-of-two
+# buckets, decode budgets mixed within every bucket — real traffic's shape.
+# Bucket-serial decode drags each under-filled bucket to its longest
+# budget (rows that finished keep burning decode steps); the slot
+# scheduler frees a slot the moment its request completes and refills it.
+RAGGED_LENGTHS = [2, 5, 9, 14, 17, 30, 33, 60, 65, 120, 130, 250]
+RAGGED_BUDGETS = [32, 3, 28, 4, 24, 6, 32, 3, 28, 4, 24, 6]
+RAGGED_SLOTS = 6
+RAGGED_CHUNK = 4
 
 
 def measured_engine_toks():
@@ -79,10 +90,58 @@ def derived_v5e_roofline():
          f"{(4.0)/(1.0+4.0/256):.2f}x (paper: 14.3-15.8x vs scalar ARM PS)")
 
 
+def ragged_throughput():
+    """Measured useful tok/s on a ragged trace: bucket-serial baseline vs
+    the slot scheduler (continuous batching). Same requests, same greedy
+    sampling, same per-request budgets — the delta is pure scheduling.
+    Both run the deferred decode-cache commit (§Perf), so step cost is not
+    dominated by the scan's full-cache copy."""
+    from repro.core import flags
+
+    cfg = load_config("tinyllama-1.1b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(i, rng.integers(1, cfg.vocab_size, size=(n,)).astype(int).tolist(),
+                max_new=m)
+        for i, (n, m) in enumerate(zip(RAGGED_LENGTHS, RAGGED_BUDGETS))
+    ]
+    cache_len = max(RAGGED_LENGTHS) + max(RAGGED_BUDGETS) + 64
+    total = sum(RAGGED_BUDGETS)                # useful tokens delivered
+    with flags.overrides(deferred_decode_cache=True):
+        engine = InferenceEngine(model, params, cache_len=cache_len)
+        sched = SlotScheduler(engine, slots=RAGGED_SLOTS, chunk=RAGGED_CHUNK)
+
+        runs = {
+            "bucket_serial": lambda: serve_bucketed(engine, reqs, max(RAGGED_BUDGETS)),
+            "continuous_slots": lambda: sched.serve(reqs, max(RAGGED_BUDGETS)),
+        }
+        results = {}
+        for name, fn in runs.items():
+            fn()                               # warm/compile
+            dt = float("inf")
+            for _ in range(3):                 # best-of-3: host-noise robust
+                t0 = time.perf_counter()
+                out = fn()
+                dt = min(dt, time.perf_counter() - t0)
+            assert [r.tokens.shape[0] for r in out] == RAGGED_BUDGETS
+            results[name] = total / dt
+            emit(f"ragged/measured_host/{name}", dt * 1e6 / total,
+                 f"{total/dt:.2f} tok/s")
+    emit("ragged/measured_host/speedup", 0.0,
+         f"{results['continuous_slots']/results['bucket_serial']:.2f}x "
+         "continuous vs bucket-serial")
+
+
 def run():
     measured_engine_toks()
     measured_gqmv_gops()
     derived_v5e_roofline()
+
+
+def run_ragged():
+    ragged_throughput()
 
 
 if __name__ == "__main__":

@@ -28,6 +28,11 @@ def main(argv=None):
                     help="fp32 'PS baseline' instead of W8A8")
     ap.add_argument("--sampler", default="greedy", choices=["greedy", "top_p"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ragged", action="store_true",
+                    help="serve a mixed-length trace through serve_ragged "
+                         "(continuous-batching scheduler where supported)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots for --ragged continuous batching")
     args = ap.parse_args(argv)
 
     cfg = load_config(args.arch)
@@ -37,12 +42,38 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed))
 
     cache_len = args.prompt_len + args.steps
+    if args.ragged:
+        from repro.serving.batching import bucket_length
+
+        # ragged prompts are padded up to power-of-two buckets
+        cache_len = max(cache_len, bucket_length(args.prompt_len))
     engine = InferenceEngine(model, params, cache_len=cache_len,
                              quantize=not args.no_quantize)
     print(f"arch: {cfg.arch_id}  quantized bytes fraction: "
           f"{engine.quantized_fraction:.3f}")
 
     rng = np.random.default_rng(args.seed)
+
+    if args.ragged:
+        from repro.serving.batching import Request, serve_ragged
+
+        lengths = rng.integers(2, args.prompt_len + 1, size=(args.batch,))
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=(n,)).tolist())
+                for i, n in enumerate(lengths)]
+        mode = "continuous" if engine.model.supports_lengths else "bucketed"
+        serve_ragged(engine, reqs, args.steps, sampler=args.sampler,
+                     slots=args.slots, mode=mode)        # warm/compile
+        t0 = time.perf_counter()
+        out = serve_ragged(engine, reqs, args.steps, sampler=args.sampler,
+                           slots=args.slots, mode=mode,
+                           key=jax.random.PRNGKey(args.seed + 1))
+        hot = time.perf_counter() - t0
+        toks = sum(r.tokens.shape[0] for r in out)
+        print(f"ragged ({mode}, lengths {sorted(lengths.tolist())}): "
+              f"{toks} tokens in {hot:.2f}s ({toks / hot:.2f} tok/s)")
+        print("first sequence:", out[0].tokens[:16].tolist())
+        return out
+
     batch = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
         dtype=jnp.int32)}

@@ -28,9 +28,92 @@ from repro.models.common import (
     causal_mask,
     decode_mask,
     dense_init,
+    length_mask,
     rmsnorm,
     softcap,
 )
+
+# ---------------------------------------------------------------------------
+# per-request decode positions
+#
+# Every decode entry point accepts ``pos`` as either a scalar (uniform batch,
+# the original contract) or a (b,) vector of per-request positions (ragged
+# continuous batching). The helpers below keep one code path for RoPE rows,
+# score updates at the current column, and per-row cache commits.
+# ---------------------------------------------------------------------------
+
+def _pos_rows(pos, b: int):
+    """(b, 1) int32 RoPE position rows from scalar or (b,) ``pos``."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return pos.reshape(b, 1) if pos.ndim else jnp.full((b, 1), pos, jnp.int32)
+
+
+def _commit_bt(cache, rows, pos):
+    """Write rows (b, 1, ...) into cache (b, T, ...) at time ``pos``."""
+    if jnp.asarray(pos).ndim:
+        return cache.at[jnp.arange(cache.shape[0]), pos].set(rows[:, 0])
+    return jax.lax.dynamic_update_slice_in_dim(cache, rows, pos, axis=1)
+
+
+def _commit_bkt(cache, rows, pos):
+    """Write rows (b, KV, 1, ...) into cache (b, KV, T, ...) at ``pos``."""
+    if jnp.asarray(pos).ndim:
+        b, kv = cache.shape[:2]
+        return cache.at[
+            jnp.arange(b)[:, None], jnp.arange(kv)[None, :], pos[:, None]
+        ].set(rows[:, :, 0])
+    start = (0, 0, pos) + (0,) * (cache.ndim - 3)
+    return jax.lax.dynamic_update_slice(cache, rows, start)
+
+
+def _col_update(scores, cur, pos):
+    """scores (b, ..., t): overwrite column ``pos`` (per-row when vector)
+    with cur (b, ...)."""
+    if jnp.asarray(pos).ndim:
+        idx = (jnp.arange(scores.shape[0]),) + (slice(None),) * (scores.ndim - 2) + (pos,)
+        return scores.at[idx].set(cur)
+    return jax.lax.dynamic_update_slice(
+        scores, cur[..., None], (0,) * (scores.ndim - 1) + (pos,)
+    )
+
+
+def _col_at(attn, pos):
+    """attn (b, ..., t) -> (b, ..., 1) column at ``pos`` (per-row when vector)."""
+    if jnp.asarray(pos).ndim:
+        idx = (jnp.arange(attn.shape[0]),) + (slice(None),) * (attn.ndim - 2) + (pos,)
+        return attn[idx][..., None]
+    return jax.lax.dynamic_slice(
+        attn, (0,) * (attn.ndim - 1) + (pos,), attn.shape[:-1] + (1,)
+    )
+
+
+def _bcast_decode_mask(m):
+    """decode mask (t,) or (b, t) -> broadcastable over (b, s=1, t) scores."""
+    return m[None, None, :] if m.ndim == 1 else m[:, None, :]
+
+
+def commit_layers_bt(cache, rows, pos):
+    """Deferred-decode commit, (L, b, T, ...) layout: write rows (L, b, 1, ...)
+    at time ``pos`` — one donated dynamic-update-slice (scalar pos) or one
+    per-row scatter (vector pos, ragged batches)."""
+    if jnp.asarray(pos).ndim:
+        return cache.at[:, jnp.arange(cache.shape[1]), pos].set(rows[:, :, 0])
+    return jax.lax.dynamic_update_slice(
+        cache, rows, (0, 0, pos) + (0,) * (cache.ndim - 3)
+    )
+
+
+def commit_layers_bkt(cache, rows, pos):
+    """Deferred-decode commit, (L, b, KV, T, ...) layout (kvt / int8 caches)."""
+    if jnp.asarray(pos).ndim:
+        b, kv = cache.shape[1], cache.shape[2]
+        return cache.at[
+            :, jnp.arange(b)[:, None], jnp.arange(kv)[None, :], pos[:, None]
+        ].set(rows[:, :, :, 0])
+    return jax.lax.dynamic_update_slice(
+        cache, rows, (0, 0, 0, pos) + (0,) * (cache.ndim - 4)
+    )
+
 
 # ---------------------------------------------------------------------------
 # GQA
@@ -64,7 +147,7 @@ def _qkv(p, x, cfg: ModelConfig, positions):
 
 
 def _mha_blockwise(q, k, v, cfg: ModelConfig, *, causal=True, window=None,
-                   use_window=None):
+                   use_window=None, lengths=None):
     """Chunked online-softmax attention (flash-style), XLA fallback of
     kernels/flash_attn.py. Streams K/V in chunks of flags.attention_chunk;
     never materializes the (b,kv,g,s,t) score tensor. Used for train/prefill
@@ -105,7 +188,12 @@ def _mha_blockwise(q, k, v, cfg: ModelConfig, *, causal=True, window=None,
         if window is not None:
             okw = ok & ((q_pos[:, None] - k_pos[None, :]) < window)
             ok = okw if use_window is None else jnp.where(use_window, okw, ok)
-        sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+        if lengths is not None:
+            # ragged prefill: hide right-pad keys per row -> (b, s, chunk)
+            okb = ok[None] & (k_pos[None, None, :] < lengths[:, None, None])
+            sc = jnp.where(okb[:, None, None], sc, NEG_INF)
+        else:
+            sc = jnp.where(ok[None, None, None], sc, NEG_INF)
         m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(sc - m_new[..., None])
@@ -212,15 +300,30 @@ def gqa_forward(p, x, cfg: ModelConfig, *, window=None, use_window=None, causal=
     return linear(p["wo"], ctx)
 
 
-def gqa_prefill(p, x, cfg: ModelConfig, cache_len: int, *, window=None, use_window=None):
-    """Returns (y, (k_cache, v_cache)) with caches padded to cache_len."""
+def gqa_prefill(p, x, cfg: ModelConfig, cache_len: int, *, window=None, use_window=None,
+                lengths=None):
+    """Returns (y, (k_cache, v_cache)) with caches padded to cache_len.
+
+    ``lengths`` (b,) marks each row's true prompt length in a right-padded
+    ragged batch: keys at positions >= lengths[i] are masked out so pad
+    tokens never leak into valid positions' attention, and pad K/V rows are
+    zeroed before caching — decode's `k <= pos` mask hides them until the
+    per-request decode positions overwrite them in order, and the deferred
+    decode paths' cache-slot-at-pos-is-zero invariant keeps holding."""
     b, s, _ = x.shape
     positions = jnp.arange(s)[None, :]
     q, k, v = _qkv(p, x, cfg, positions)
+    if lengths is not None:
+        valid = (jnp.arange(s)[None, :] < lengths[:, None])[..., None, None]
+        k = jnp.where(valid, k, 0)
+        v = jnp.where(valid, v, 0)
     if flags.get("blockwise_attention") and s > 1:
-        ctx = _mha_blockwise(q, k, v, cfg, window=window, use_window=use_window)
+        ctx = _mha_blockwise(q, k, v, cfg, window=window, use_window=use_window,
+                             lengths=lengths)
     else:
         mask = _flag_mask(s, window, use_window)
+        if lengths is not None:
+            mask = mask[None] + length_mask(lengths, s)[:, None, :]   # (b, s, s)
         ctx = _mha(q, k, v, mask, cfg)
     if flags.get("int8_kv_cache"):
         pad = [(0, 0), (0, 0), (0, cache_len - s), (0, 0)]
@@ -240,14 +343,14 @@ def gqa_prefill(p, x, cfg: ModelConfig, cache_len: int, *, window=None, use_wind
 
 def gqa_decode(p, x, cache, pos, cfg: ModelConfig, *, window=None, use_window=None):
     """x: (b, d_model) single token; cache: (k, v) each (b, T, KV, hd);
-    pos: scalar int32 current position. Returns (y, new_cache)."""
+    pos: scalar int32 or (b,) per-request positions. Returns (y, new_cache)."""
     k_cache, v_cache = cache
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
-    q, k, v = _qkv(p, x[:, None, :], cfg, positions)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
-    mask = _flag_decode_mask(k_cache.shape[1], pos, window, use_window)[None, None, :]
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k, v = _qkv(p, x[:, None, :], cfg, _pos_rows(pos, b))
+    k_cache = _commit_bt(k_cache, k, pos)
+    v_cache = _commit_bt(v_cache, v, pos)
+    mask = _bcast_decode_mask(_flag_decode_mask(k_cache.shape[1], pos, window, use_window))
     ctx = _mha(q, k_cache, v_cache, mask, cfg)                        # (b,1,q_dim)
     return linear(p["wo"], ctx[:, 0, :]), (k_cache, v_cache)
 
@@ -275,8 +378,8 @@ def gqa_decode_deferred_int8(p, x, cache, pos, cfg: ModelConfig, *, window=None,
     h = cfg.num_heads
     g = h // kv_heads
     t = kq_c.shape[2]
-    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
-    q, k_new, v_new = _qkv(p, x[:, None, :], cfg, positions)
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x[:, None, :], cfg, _pos_rows(pos, b))
 
     tp = logical.size("tp")
     tp_t = t % tp == 0
@@ -287,17 +390,18 @@ def gqa_decode_deferred_int8(p, x, cache, pos, cfg: ModelConfig, *, window=None,
     scores = jnp.einsum("bkgh,bkth->bkgt", qg, kq_c.astype(x.dtype)).astype(jnp.float32)
     scores = scores * ks_c[:, :, None, :]
     cur = jnp.einsum("bkgh,bkh->bkg", qg, k_new[:, 0]).astype(jnp.float32)
-    scores = jax.lax.dynamic_update_slice(scores, cur[..., None], (0, 0, 0, pos))
+    scores = _col_update(scores, cur, pos)
     scores = logical.constrain(scores, "dp", None, None, "tp" if tp_t else None)
     scores *= _gqa_scale(cfg)
     if cfg.attn_logit_softcap:
         scores = softcap(scores, cfg.attn_logit_softcap)
-    scores = scores + _flag_decode_mask(t, pos, window, use_window)[None, None, None, :]
+    dm = _flag_decode_mask(t, pos, window, use_window)
+    scores = scores + (dm[None, None, None, :] if dm.ndim == 1 else dm[:, None, None, :])
     attn = jax.nn.softmax(scores, axis=-1)                    # f32 (b,kv,g,t)
     ctx = jnp.einsum("bkgt,bkth->bkgh",
                      (attn * vs_c[:, :, None, :]).astype(x.dtype),
                      vq_c.astype(x.dtype))
-    attn_cur = jax.lax.dynamic_slice(attn, (0, 0, 0, pos), (b, kv_heads, g, 1))
+    attn_cur = _col_at(attn, pos)
     ctx = ctx + attn_cur.astype(x.dtype) * v_new[:, 0][:, :, None, :]
     ctx = ctx.reshape(b, h * hd)
     kq_n, ks_n = _quantize_rows(k_new[:, 0])                  # (b,kv,hd)/(b,kv)
@@ -327,8 +431,8 @@ def gqa_decode_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None,
     hd = cfg.resolved_head_dim
     kv_heads = cfg.num_kv_heads
     kvt = bool(flags.get("kvt_cache_layout"))
-    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
-    q, k_new, v_new = _qkv(p, x[:, None, :], cfg, positions)   # (b,1,H/KV,hd)
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x[:, None, :], cfg, _pos_rows(pos, b))  # (b,1,H/KV,hd)
 
     h = cfg.num_heads
     g = h // kv_heads
@@ -350,13 +454,13 @@ def gqa_decode_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None,
         scores = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache).astype(jnp.float32)
     cur = jnp.einsum("bkgh,bkh->bkg", qg, k_new[:, 0]).astype(jnp.float32)
     # overwrite the (zero-keyed) slot at pos with the current-token score
-    scores = jax.lax.dynamic_update_slice(scores, cur[..., None], (0, 0, 0, pos))
+    scores = _col_update(scores, cur, pos)
     scores = logical.constrain(scores, b_ax, None, None, t_ax if tp_t else None)
     scores *= _gqa_scale(cfg)
     if cfg.attn_logit_softcap:
         scores = softcap(scores, cfg.attn_logit_softcap)
     mask = _flag_decode_mask(t, pos, window, use_window)
-    scores = scores + mask[None, None, None, :]
+    scores = scores + (mask[None, None, None, :] if mask.ndim == 1 else mask[:, None, None, :])
     attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)   # (b,kv,g,t)
     # v_cache slot at pos is zero, so its contribution is exactly the
     # explicit current-token term below
@@ -364,7 +468,7 @@ def gqa_decode_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None,
         ctx = jnp.einsum("bkgt,bkth->bkgh", attn, v_cache)
     else:
         ctx = jnp.einsum("bkgt,btkh->bkgh", attn, v_cache)
-    attn_cur = jax.lax.dynamic_slice(attn, (0, 0, 0, pos), (b, kv_heads, g, 1))
+    attn_cur = _col_at(attn, pos)
     ctx = ctx + attn_cur * v_new[:, 0][:, :, None, :]   # (b,kv,g,1)x(b,kv,1,hd)
     ctx = ctx.reshape(b, h * hd)
     if kvt:
@@ -427,8 +531,9 @@ def _mla_scale(m) -> float:
     return (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
 
 
-def mla_forward(p, x, cfg: ModelConfig, *, window=None):
-    """Naive (materialized) MLA for training/prefill."""
+def mla_forward(p, x, cfg: ModelConfig, *, window=None, lengths=None):
+    """Naive (materialized) MLA for training/prefill. ``lengths`` (b,) masks
+    right-pad keys per row (ragged prefill)."""
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.num_heads
@@ -450,7 +555,11 @@ def mla_forward(p, x, cfg: ModelConfig, *, window=None):
     sspec = {"head": ("dp", "tp", None, None), "seq": ("dp", None, "tp", None),
              "none": ("dp", None, None, None)}[mode]
     scores = logical.constrain(scores, *sspec)
-    scores = scores + causal_mask(s, window)
+    mask = causal_mask(s, window)
+    if lengths is not None:
+        mask = mask[None] + length_mask(lengths, s)[:, None, :]       # (b, s, s)
+        mask = mask[:, None]                                          # (b, 1, s, s)
+    scores = scores + mask
     attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     attn = logical.constrain(attn, *sspec)
     ctx = jnp.einsum("bhst,bthd->bshd", attn, v).reshape(b, s, h * m.v_head_dim)
@@ -458,12 +567,17 @@ def mla_forward(p, x, cfg: ModelConfig, *, window=None):
     return linear(p["wo"], ctx)
 
 
-def mla_prefill(p, x, cfg: ModelConfig, cache_len: int, *, window=None):
-    """Cache = (c_kv, k_rope): the low-rank latent (MLA's memory saving)."""
+def mla_prefill(p, x, cfg: ModelConfig, cache_len: int, *, window=None, lengths=None):
+    """Cache = (c_kv, k_rope): the low-rank latent (MLA's memory saving).
+    ``lengths`` (b,): mask + zero right-pad latent rows (see gqa_prefill)."""
     b, s, _ = x.shape
     positions = jnp.arange(s)[None, :]
-    y = mla_forward(p, x, cfg, window=window)
+    y = mla_forward(p, x, cfg, window=window, lengths=lengths)
     c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    if lengths is not None:
+        valid = (jnp.arange(s)[None, :] < lengths[:, None])[..., None]
+        c_kv = jnp.where(valid, c_kv, 0)
+        k_rope = jnp.where(valid, k_rope, 0)
     pad = [(0, 0), (0, cache_len - s), (0, 0)]
     return y, (jnp.pad(c_kv, pad), jnp.pad(k_rope, pad))
 
@@ -482,7 +596,8 @@ def mla_decode_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None):
     h = cfg.num_heads
     c_cache, r_cache = cache                        # (b,T,kvr) / (b,T,rope)
     t = c_cache.shape[1]
-    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = _pos_rows(pos, b)
     q_nope, q_rope = _mla_q(p, x[:, None, :], cfg, positions)
     c_new, r_new = _mla_latent(p, x[:, None, :], cfg, positions)   # (b,1,.)
 
@@ -506,13 +621,14 @@ def mla_decode_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None):
         jnp.einsum("bhc,bc->bh", q_abs, c_new[:, 0])
         + jnp.einsum("bhd,bd->bh", q_rope[:, 0], r_new[:, 0])
     ).astype(jnp.float32)
-    scores = jax.lax.dynamic_update_slice(scores, cur[..., None], (0, 0, pos))
+    scores = _col_update(scores, cur, pos)
     scores = logical.constrain(scores, b_ax, None, t_ax)
-    scores = scores * _mla_scale(m) + decode_mask(t, pos, window)[None, None, :]
+    dm = decode_mask(t, pos, window)
+    scores = scores * _mla_scale(m) + (dm[None, None, :] if dm.ndim == 1 else dm[:, None, :])
     attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     # cache slot at pos is zero -> its contribution is the explicit term
     ctx = jnp.einsum("bht,btc->bhc", attn, c_cache)
-    attn_cur = jax.lax.dynamic_slice(attn, (0, 0, pos), (b, h, 1))
+    attn_cur = _col_at(attn, pos)
     ctx = ctx + attn_cur * c_new[:, 0][:, None, :]
     out = jnp.einsum("bhc,hvc->bhv", ctx, wuv.astype(x.dtype)).reshape(b, h * m.v_head_dim)
     return linear(p["wo"], out), (c_new, r_new)
@@ -526,11 +642,12 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig, *, window=None):
     b = x.shape[0]
     h = cfg.num_heads
     c_cache, r_cache = cache                       # (b,T,kvr), (b,T,rope)
-    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = _pos_rows(pos, b)
     q_nope, q_rope = _mla_q(p, x[:, None, :], cfg, positions)
     c_kv, k_rope = _mla_latent(p, x[:, None, :], cfg, positions)
-    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_kv, pos, axis=1)
-    r_cache = jax.lax.dynamic_update_slice_in_dim(r_cache, k_rope, pos, axis=1)
+    c_cache = _commit_bt(c_cache, c_kv, pos)
+    r_cache = _commit_bt(r_cache, k_rope, pos)
 
     wukv = _maybe_dequant(p["wukv"]).reshape(h, m.qk_nope_dim + m.v_head_dim, m.kv_lora_rank)
     wuk, wuv = wukv[:, : m.qk_nope_dim, :], wukv[:, m.qk_nope_dim :, :]
@@ -542,7 +659,8 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig, *, window=None):
         + jnp.einsum("bhd,btd->bht", q_rope[:, 0], r_cache)
     ).astype(jnp.float32) * _mla_scale(m)
     scores = logical.constrain(scores, "dp", None, "tp")
-    scores = scores + decode_mask(c_cache.shape[1], pos, window)[None, None, :]
+    dm = decode_mask(c_cache.shape[1], pos, window)
+    scores = scores + (dm[None, None, :] if dm.ndim == 1 else dm[:, None, :])
     attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     attn = logical.constrain(attn, "dp", None, "tp")
     ctx = jnp.einsum("bht,btc->bhc", attn, c_cache)

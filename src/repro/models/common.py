@@ -85,10 +85,26 @@ def causal_mask(seq: int, window: int | None = None) -> jax.Array:
 
 
 def decode_mask(cache_len: int, pos: jax.Array, window: int | None = None) -> jax.Array:
-    """(cache_len,) additive mask for a single decode step at position ``pos``
-    (entries > pos are future/unwritten slots)."""
+    """Additive mask for a single decode step (entries > pos are future or
+    still-unwritten slots). ``pos`` scalar -> (cache_len,); ``pos`` (b,)
+    per-request positions -> (b, cache_len) row-wise masks.
+
+    Cache slots in (length_i, pos_i] hold the tokens decode itself wrote (it
+    overwrites right-pad slots in order), so `k <= pos_i` alone is a correct
+    per-request mask for ragged batches."""
+    pos = jnp.asarray(pos)
     k = jnp.arange(cache_len)
+    if pos.ndim:
+        k = k[None, :]
+        pos = pos[:, None]
     ok = k <= pos
     if window is not None:
         ok &= (pos - k) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def length_mask(lengths: jax.Array, kv_len: int) -> jax.Array:
+    """(b, kv_len) additive mask hiding right-pad keys at positions >= each
+    row's true length (ragged prefill)."""
+    ok = jnp.arange(kv_len)[None, :] < lengths[:, None]
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)

@@ -53,6 +53,13 @@ class Model:
     init_cache: Callable         # (batch_size, cache_len, dtype) -> cache
     prefill: Callable            # (params, batch, cache_len) -> (logits, cache)
     decode: Callable             # (params, token, cache, pos) -> (logits, cache)
+    # Ragged-serving contract: prefill honors batch["lengths"] (per-row true
+    # prompt lengths in a right-padded batch: pad keys masked, first-token
+    # logits gathered at lengths[i]-1) and decode accepts a (b,) position
+    # vector. Families with sequential prefill state (rwkv6, zamba2's SSM
+    # backbone, encdec) cannot skip pad tokens mid-recurrence, so the serving
+    # front-end batches them by exact length instead.
+    supports_lengths: bool = False
 
 
 def build(cfg: ModelConfig) -> Model:
@@ -67,6 +74,7 @@ def build(cfg: ModelConfig) -> Model:
             return _tf.lm_prefill(
                 params, batch["tokens"], cfg, cache_len,
                 frontend_embeds=batch.get("patch_embeds"),
+                lengths=batch.get("lengths"),
             )
 
         return Model(
@@ -76,6 +84,7 @@ def build(cfg: ModelConfig) -> Model:
             init_cache=lambda b, t, dt: _tf.lm_init_cache(cfg, b, t, dt),
             prefill=prefill,
             decode=lambda p, tok, cache, pos: _tf.lm_decode(p, tok, cache, pos, cfg),
+            supports_lengths=True,
         )
 
     if cfg.model_type == "rwkv6":

@@ -148,8 +148,14 @@ def lm_init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def lm_prefill(params, tokens, cfg: ModelConfig, cache_len: int, frontend_embeds=None):
-    """Prompt pass: returns (last-position logits, populated cache)."""
+def lm_prefill(params, tokens, cfg: ModelConfig, cache_len: int, frontend_embeds=None,
+               lengths=None):
+    """Prompt pass: returns (last-position logits, populated cache).
+
+    ``lengths`` (b,) enables ragged right-padded prompts: attention masks pad
+    keys (and zeroes their cached K/V rows), and the returned logits are
+    gathered per row at position lengths[i]-1 instead of the shared last
+    column — the fix for sampling the first token from pad-position logits."""
     x = _embed(params, tokens, cfg, frontend_embeds)
     windows = _layer_windows(cfg)
 
@@ -159,12 +165,13 @@ def lm_prefill(params, tokens, cfg: ModelConfig, cache_len: int, frontend_embeds
 
         def attn_fn(h):
             if cfg.mla:
-                y, (ckv, krope) = attn.mla_prefill(lp["attn"], h, cfg, cache_len)
+                y, (ckv, krope) = attn.mla_prefill(lp["attn"], h, cfg, cache_len,
+                                                   lengths=lengths)
                 cache_out["ckv"], cache_out["krope"] = ckv, krope
                 return y
             out = attn.gqa_prefill(
                 lp["attn"], h, cfg, cache_len,
-                window=cfg.sliding_window, use_window=use_window,
+                window=cfg.sliding_window, use_window=use_window, lengths=lengths,
             )
             if flags.get("int8_kv_cache"):
                 y, (cache_out["k_q"], cache_out["k_s"],
@@ -177,16 +184,23 @@ def lm_prefill(params, tokens, cfg: ModelConfig, cache_len: int, frontend_embeds
         return x, cache_out
 
     x, cache = jax.lax.scan(body, x, (params["layers"], windows))
-    return _logits(params, x[:, -1, :], cfg), cache
+    if lengths is None:
+        last = x[:, -1, :]
+    else:
+        last = x[jnp.arange(x.shape[0]), lengths - 1]
+    return _logits(params, last, cfg), cache
 
 
 def lm_decode(params, token, cache, pos, cfg: ModelConfig):
-    """One decode step. token (b,) int32; pos scalar int32.
+    """One decode step. token (b,) int32; pos scalar int32 OR (b,) int32
+    per-request positions (ragged continuous batching: each row's RoPE
+    angle, decode mask, and cache-commit slot follow its own counter).
     Returns (logits (b, vocab_padded), new cache).
 
     With flags.deferred_decode_cache the layer scan emits only the new K/V
-    rows; they are committed with one donated dynamic-update-slice at the
-    end (§Perf decode optimization)."""
+    rows; they are committed with one donated dynamic-update-slice (scalar
+    pos) or one per-row scatter (vector pos) at the end (§Perf decode
+    optimization)."""
     int8kv = bool(flags.get("int8_kv_cache")) and not cfg.mla
     kvt = (bool(flags.get("kvt_cache_layout")) or int8kv) and not cfg.mla
     deferred = bool(flags.get("deferred_decode_cache")) or kvt or (
@@ -248,22 +262,22 @@ def lm_decode(params, token, cache, pos, cfg: ModelConfig):
     x, new_cache = jax.lax.scan(body, x, (params["layers"], windows, cache))
     if deferred and cfg.mla:
         new_cache = {
-            "ckv": jax.lax.dynamic_update_slice(cache["ckv"], new_cache["ckv"], (0, 0, pos, 0)),
-            "krope": jax.lax.dynamic_update_slice(cache["krope"], new_cache["krope"], (0, 0, pos, 0)),
+            "ckv": attn.commit_layers_bt(cache["ckv"], new_cache["ckv"], pos),
+            "krope": attn.commit_layers_bt(cache["krope"], new_cache["krope"], pos),
         }
     elif deferred:
         # commit all layers' new rows with one in-place (donated) update
         if int8kv:
             new_cache = {
-                "k_q": jax.lax.dynamic_update_slice(cache["k_q"], new_cache["k_q"], (0, 0, 0, pos, 0)),
-                "k_s": jax.lax.dynamic_update_slice(cache["k_s"], new_cache["k_s"], (0, 0, 0, pos)),
-                "v_q": jax.lax.dynamic_update_slice(cache["v_q"], new_cache["v_q"], (0, 0, 0, pos, 0)),
-                "v_s": jax.lax.dynamic_update_slice(cache["v_s"], new_cache["v_s"], (0, 0, 0, pos)),
+                "k_q": attn.commit_layers_bkt(cache["k_q"], new_cache["k_q"], pos),
+                "k_s": attn.commit_layers_bkt(cache["k_s"], new_cache["k_s"], pos),
+                "v_q": attn.commit_layers_bkt(cache["v_q"], new_cache["v_q"], pos),
+                "v_s": attn.commit_layers_bkt(cache["v_s"], new_cache["v_s"], pos),
             }
         else:
-            start = (0, 0, 0, pos, 0) if kvt else (0, 0, pos, 0, 0)
+            commit = attn.commit_layers_bkt if kvt else attn.commit_layers_bt
             new_cache = {
-                "k": jax.lax.dynamic_update_slice(cache["k"], new_cache["k"], start),
-                "v": jax.lax.dynamic_update_slice(cache["v"], new_cache["v"], start),
+                "k": commit(cache["k"], new_cache["k"], pos),
+                "v": commit(cache["v"], new_cache["v"], pos),
             }
     return _logits(params, x, cfg), new_cache

@@ -191,10 +191,11 @@ def zamba_decode(params, token, cache, pos, cfg: ModelConfig):
     x, gstate = jax.lax.scan(group_body, x, (params["mamba_layers"], gcache))
     new_k, new_v = gstate["k"], gstate["v"]
     if deferred:
-        # commit all groups' rows with one in-place update each
-        start = (0, 0, 0, pos, 0) if kvt else (0, 0, pos, 0, 0)
-        new_k = jax.lax.dynamic_update_slice(cache["shared_k"], new_k, start)
-        new_v = jax.lax.dynamic_update_slice(cache["shared_v"], new_v, start)
+        # commit all groups' rows with one in-place update each (per-row
+        # scatter when pos is a (b,) vector — ragged batches)
+        commit = attn.commit_layers_bkt if kvt else attn.commit_layers_bt
+        new_k = commit(cache["shared_k"], new_k, pos)
+        new_v = commit(cache["shared_v"], new_v, pos)
     new_cache = {"mamba": gstate["mamba"], "shared_k": new_k, "shared_v": new_v}
     if "tail_layers" in params:
         x, tstate = jax.lax.scan(mamba_body, x, (params["tail_layers"], cache["tail"]))

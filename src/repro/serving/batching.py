@@ -1,28 +1,48 @@
 """Variable-length request batching for the inference engine.
 
-The step functions take uniform-length batches (one shared position counter
-— the shape the assigned decode cells use). Real traffic is ragged, so the
-engine front-end buckets requests by padded prompt length (powers of two),
-runs one prefill+decode per bucket, and reassembles responses in arrival
-order — continuous-batching-lite. Per-token request joining (true continuous
-batching) needs per-request position counters in the cache update and is
-listed as serving future work in DESIGN.md.
+Real traffic is ragged. Two serving modes, both length-aware:
+
+- **bucketed** — requests are right-padded to power-of-two buckets and each
+  bucket runs one prefill+decode. True lengths ride along in the batch
+  (``batch["lengths"]``): prefill masks pad keys, the first token is sampled
+  from each row's logits at ``lengths[i]-1``, and decode runs per-request
+  position counters, so a padded row decodes exactly like its unpadded self.
+- **continuous** (``SlotScheduler``) — a fixed-width decode batch of slots.
+  Finished slots (EOS or budget exhausted) are refilled from the queue by a
+  single-request prefill written into the slot's cache row, so the decode
+  pipeline stays full across mixed-length traffic instead of draining one
+  bucket at a time. Decode runs in jitted chunks of ``chunk`` steps between
+  admission points (continuous-batching-lite: a slot that finishes mid-chunk
+  idles until the chunk boundary).
+
+Families whose prefill carries sequential state through every token (rwkv6,
+zamba2's SSM backbone, enc-dec) cannot mask pads out of a recurrence; for
+them the bucketed mode groups by exact length (no pads, always correct) and
+the continuous mode is unavailable.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving.sampling import make_sampler
 
 
 @dataclasses.dataclass
 class Request:
     id: int
     tokens: list[int]
+    # per-request decode budget; None falls back to the serve call's
+    # max_new_tokens. Mixed budgets are where continuous batching pays off:
+    # bucketed decode drags every row to its bucket's longest budget, the
+    # slot scheduler frees and refills each slot at its own.
+    max_new: int | None = None
 
 
 @dataclasses.dataclass
@@ -48,20 +68,229 @@ def pad_bucket(reqs: Sequence[Request], length: int, pad_id: int = 0):
     return toks, lens
 
 
-def serve_ragged(engine, requests: Sequence[Request], max_new_tokens: int,
-                 *, sampler: str = "greedy", key=None) -> list[Response]:
-    """Bucket by padded length, generate per bucket, reassemble by id."""
+# ---------------------------------------------------------------------------
+# bucketed mode
+# ---------------------------------------------------------------------------
+
+def serve_bucketed(engine, requests: Sequence[Request], max_new_tokens: int,
+                   *, sampler: str = "greedy", key=None) -> list[Response]:
+    """Bucket requests, generate per bucket, reassemble in arrival order.
+
+    Length-aware families bucket by padded power-of-two length and pass the
+    true lengths through to the engine; recurrent families group by exact
+    length so no pad token ever enters the recurrence."""
+    ragged = engine.model.supports_lengths
     buckets: dict[int, list[Request]] = defaultdict(list)
     for r in requests:
-        buckets[bucket_length(len(r.tokens))].append(r)
+        n = len(r.tokens)
+        buckets[bucket_length(n) if ragged else n].append(r)
 
+    base_key = key if key is not None else jax.random.PRNGKey(0)
     out: dict[int, Response] = {}
     for length in sorted(buckets):
         reqs = buckets[length]
-        toks, _ = pad_bucket(reqs, length)
-        res = engine.generate({"tokens": jnp.asarray(toks)}, max_new_tokens,
-                              sampler=sampler, key=key)
+        toks, lens = pad_bucket(reqs, length)
+        budgets = [r.max_new if r.max_new is not None else max_new_tokens
+                   for r in reqs]
+        # one generate per bucket runs to the bucket's longest budget; rows
+        # with smaller budgets are decoded past their end and trimmed — the
+        # serialization+overrun cost the slot scheduler removes
+        res = engine.generate(
+            {"tokens": jnp.asarray(toks)}, max(budgets), sampler=sampler,
+            # independent PRNG stream per bucket — one shared key would make
+            # every bucket sample the same per-step randomness
+            key=jax.random.fold_in(base_key, length),
+            lengths=lens if ragged else None,
+        )
         gen = np.asarray(res.tokens)
         for i, r in enumerate(reqs):
-            out[r.id] = Response(id=r.id, tokens=gen[i])
+            out[r.id] = Response(id=r.id, tokens=gen[i, : budgets[i]])
     return [out[r.id] for r in requests]
+
+
+# ---------------------------------------------------------------------------
+# continuous mode
+# ---------------------------------------------------------------------------
+
+class SlotScheduler:
+    """Slot-based continuous batching over one engine.
+
+    Holds the jitted decode-chunk and per-bucket prefill programs, so a
+    long-lived scheduler serves successive traces with no recompilation.
+    Responses always contain exactly ``max_new_tokens`` tokens; sequences
+    that hit EOS early are padded with EOS (parity with the bucketed mode).
+    """
+
+    def __init__(self, engine, *, slots: int = 4, chunk: int = 4,
+                 sampler: str = "greedy"):
+        if not engine.model.supports_lengths:
+            raise ValueError(
+                f"{engine.cfg.arch_id}: continuous batching needs length-aware "
+                "prefill and per-request decode positions (decoder_lm families)"
+            )
+        self.engine = engine
+        self.slots = slots
+        self.chunk = chunk
+        self._sampler = make_sampler(sampler)
+        self._prefill_jit: dict[int, callable] = {}
+
+        model, sample = engine.model, self._sampler
+
+        @jax.jit
+        def decode_chunk(params, tok, cache, pos, keys):
+            def step(carry, k):
+                tok, cache, pos = carry
+                logits, cache = model.decode(params, tok, cache, pos)
+                nxt = sample(logits, k)
+                return (nxt, cache, pos + 1), nxt
+
+            (tok, cache, pos), toks = jax.lax.scan(step, (tok, cache, pos), keys)
+            return toks, cache, pos
+
+        @jax.jit
+        def insert(cache, rows, slots):
+            # every decoder_lm cache layout keeps batch on axis 1 of each
+            # (layers, b, ...) leaf; the prefill rows replace whole slots
+            return jax.tree.map(
+                lambda big, small: big.at[:, slots].set(small), cache, rows
+            )
+
+        self._decode_chunk = decode_chunk
+        self._insert = insert
+
+    def _prefill_fn(self, length: int):
+        """Jitted batched prefill+sample, cached per padded bucket length
+        (retraces per admission-group size via jit's shape cache)."""
+        if length not in self._prefill_jit:
+            model, cache_len, sample = self.engine.model, self.engine.cache_len, self._sampler
+
+            @jax.jit
+            def prefill_group(params, toks, lens, key):
+                logits, cache = model.prefill(
+                    params, {"tokens": toks, "lengths": lens}, cache_len
+                )
+                return sample(logits, key), cache
+
+            self._prefill_jit[length] = prefill_group
+        return self._prefill_jit[length]
+
+    def serve(self, requests: Sequence[Request], max_new_tokens: int,
+              *, key=None) -> list[Response]:
+        engine, B, chunk = self.engine, self.slots, self.chunk
+        eos = engine.eos_id
+
+        def budget(r: Request) -> int:
+            return r.max_new if r.max_new is not None else max_new_tokens
+
+        for r in requests:
+            need = max(bucket_length(len(r.tokens)), len(r.tokens) + budget(r))
+            if need > engine.cache_len:
+                raise ValueError(
+                    f"request {r.id}: len={len(r.tokens)} + "
+                    f"max_new={budget(r)} needs {need} cache slots "
+                    f"but cache_len={engine.cache_len}"
+                )
+
+        cache = engine.model.init_cache(B, engine.cache_len, engine.cfg.cdtype())
+        pending = deque(requests)
+        slot_req: list[Request | None] = [None] * B
+        slot_toks: list[list[int]] = [[] for _ in range(B)]
+        tok = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        out: dict[int, Response] = {}
+        key = key if key is not None else jax.random.PRNGKey(0)
+
+        def finish(s: int):
+            r = slot_req[s]
+            n = budget(r)
+            t = slot_toks[s][:n]
+            if eos is not None and eos in t:
+                t = t[: t.index(eos) + 1]
+            t = t + [eos if eos is not None else 0] * (n - len(t))
+            out[r.id] = Response(id=r.id, tokens=np.asarray(t, np.int32))
+            slot_req[s] = None
+            slot_toks[s] = []
+
+        while pending or any(r is not None for r in slot_req):
+            # refill free slots: one batched prefill per bucket length, one
+            # scatter-insert per group (keeps host round-trips off the
+            # per-request path)
+            free = [s for s in range(B) if slot_req[s] is None]
+            admitted: dict[int, list[Request]] = defaultdict(list)
+            take = [pending.popleft() for _ in range(min(len(free), len(pending)))]
+            for r in take:
+                admitted[bucket_length(len(r.tokens))].append(r)
+            for length, group in admitted.items():
+                slots_g, free = free[: len(group)], free[len(group):]
+                toks_np, lens_np = pad_bucket(group, length)
+                key, kp = jax.random.split(key)
+                t0, rows = self._prefill_fn(length)(
+                    engine.params, jnp.asarray(toks_np), jnp.asarray(lens_np), kp
+                )
+                cache = self._insert(cache, rows, jnp.asarray(slots_g, jnp.int32))
+                t0 = np.asarray(t0)
+                for s, r, t in zip(slots_g, group, t0):
+                    slot_req[s], slot_toks[s] = r, [int(t)]
+                    tok[s], pos[s] = int(t), len(r.tokens)
+                    if budget(r) <= 1 or (eos is not None and int(t) == eos):
+                        finish(s)
+
+            if not any(r is not None for r in slot_req):
+                if pending:
+                    continue
+                break
+
+            key, kc = jax.random.split(key)
+            toks_d, cache, pos_d = self._decode_chunk(
+                engine.params, jnp.asarray(tok), cache, jnp.asarray(pos),
+                jax.random.split(kc, chunk),
+            )
+            toks_np = np.asarray(toks_d)                # (chunk, B)
+            tok = np.asarray(toks_np[-1]).copy()
+            pos = np.asarray(pos_d).copy()
+            for s in range(B):
+                if slot_req[s] is None:
+                    continue
+                n = budget(slot_req[s])
+                slot_toks[s].extend(int(t) for t in toks_np[:, s])
+                done = len(slot_toks[s]) >= n
+                if eos is not None and eos in slot_toks[s][:n]:
+                    done = True
+                if done:
+                    finish(s)
+
+        return [out[r.id] for r in requests]
+
+
+def serve_continuous(engine, requests: Sequence[Request], max_new_tokens: int,
+                     *, sampler: str = "greedy", key=None, slots: int = 4,
+                     chunk: int = 4) -> list[Response]:
+    """Continuous batching through a per-engine cached ``SlotScheduler``."""
+    cache = getattr(engine, "_slot_schedulers", None)
+    if cache is None:
+        cache = engine._slot_schedulers = {}
+    sig = (slots, chunk, sampler)
+    if sig not in cache:
+        cache[sig] = SlotScheduler(engine, slots=slots, chunk=chunk, sampler=sampler)
+    return cache[sig].serve(requests, max_new_tokens, key=key)
+
+
+def serve_ragged(engine, requests: Sequence[Request], max_new_tokens: int,
+                 *, sampler: str = "greedy", key=None, mode: str = "auto",
+                 slots: int = 4, chunk: int = 4) -> list[Response]:
+    """Serve a ragged request set; responses come back in arrival order.
+
+    mode="continuous" runs the slot scheduler (length-aware families),
+    mode="bucketed" the per-bucket generate loop, mode="auto" picks
+    continuous when the family supports it."""
+    if not requests:
+        return []
+    if mode == "auto":
+        mode = "continuous" if engine.model.supports_lengths else "bucketed"
+    if mode == "continuous":
+        return serve_continuous(engine, requests, max_new_tokens,
+                                sampler=sampler, key=key, slots=slots, chunk=chunk)
+    if mode == "bucketed":
+        return serve_bucketed(engine, requests, max_new_tokens,
+                              sampler=sampler, key=key)
+    raise ValueError(f"unknown serving mode {mode!r}")

@@ -18,6 +18,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policy import quantize_params, quantized_fraction
 from repro.models.registry import Model
@@ -55,17 +56,29 @@ class InferenceEngine:
         return self.model.prefill(self.params, batch, self.cache_len)
 
     def decode_step(self, token, cache, pos):
+        """pos: scalar int32 or (b,) per-request position vector."""
         return self.model.decode(self.params, token, cache, pos)
 
     # -- full generation -----------------------------------------------------
-    def _build_generate(self, max_new_tokens: int, sampler_name: str, prompt_len: int):
+    def _build_generate(self, max_new_tokens: int, sampler_name: str,
+                        prompt_len: int, ragged: bool):
         sampler = make_sampler(sampler_name)
         model, cache_len = self.model, self.cache_len
 
         @jax.jit
         def run(params, batch, key):
+            # independent streams for the first sample and the decode steps —
+            # reusing `key` for both correlated tok0 with step 1's sample
+            key0, key_steps = jax.random.split(key)
             logits, cache = model.prefill(params, batch, cache_len)
-            tok0 = sampler(logits, key)
+            tok0 = sampler(logits, key0)
+            # ragged rows continue at their own true lengths (per-row scatter
+            # commits); uniform batches keep the scalar position counter and
+            # its donated dynamic-update-slice commit fast path
+            if ragged:
+                pos0 = batch["lengths"].astype(jnp.int32)
+            else:
+                pos0 = jnp.int32(prompt_len)
 
             def step(carry, k):
                 tok, cache, pos, done = carry
@@ -76,10 +89,13 @@ class InferenceEngine:
                     done = done | (nxt == self.eos_id)
                 return (nxt, cache, pos + 1, done), (nxt, logits)
 
-            done0 = jnp.zeros(tok0.shape, jnp.bool_)
-            keys = jax.random.split(key, max_new_tokens)
+            if self.eos_id is not None:
+                done0 = tok0 == self.eos_id   # prompt may emit EOS immediately
+            else:
+                done0 = jnp.zeros(tok0.shape, jnp.bool_)
+            keys = jax.random.split(key_steps, max_new_tokens)
             (_, cache, _, _), (toks, logit_seq) = jax.lax.scan(
-                step, (tok0, cache, jnp.int32(prompt_len), done0), keys
+                step, (tok0, cache, pos0, done0), keys
             )
             tokens = jnp.concatenate([tok0[None], toks[:-1]], axis=0)
             return jnp.moveaxis(tokens, 0, 1), logit_seq[-1]
@@ -87,9 +103,32 @@ class InferenceEngine:
         return run
 
     def generate(self, batch, max_new_tokens: int, *, sampler: str = "greedy",
-                 key=None) -> GenerationResult:
+                 key=None, lengths=None) -> GenerationResult:
+        """``lengths`` (b,) enables ragged right-padded prompts: row i's pads
+        are masked in prefill, its first token is sampled from the logits at
+        lengths[i]-1, and decode runs on per-request position counters."""
+        if lengths is not None:
+            lengths = jnp.asarray(lengths, jnp.int32)
+            batch = dict(batch, lengths=lengths)
+        elif "lengths" in batch:
+            lengths = jnp.asarray(batch["lengths"], jnp.int32)
+        if lengths is not None and not self.model.supports_lengths:
+            raise ValueError(
+                f"{self.cfg.arch_id}: model family does not support ragged "
+                "lengths; batch by exact length instead (see serving/batching.py)"
+            )
         prompt_len = batch["tokens"].shape[1]
-        sig = (max_new_tokens, sampler, prompt_len)
+        # validate up front: dynamic_update_slice clamps at the cache boundary,
+        # which would silently overwrite the last slot instead of failing
+        start_max = prompt_len if lengths is None else int(np.max(np.asarray(lengths)))
+        need = max(prompt_len, start_max + max_new_tokens)
+        if need > self.cache_len:
+            raise ValueError(
+                f"KV cache overflow: prompt_len={prompt_len} (max start "
+                f"{start_max}) + max_new_tokens={max_new_tokens} needs "
+                f"{need} slots but cache_len={self.cache_len}"
+            )
+        sig = (max_new_tokens, sampler, prompt_len, lengths is not None)
         if sig not in self._generate_jit:
             self._generate_jit[sig] = self._build_generate(*sig)
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -99,8 +138,9 @@ class InferenceEngine:
     # -- fault tolerance ------------------------------------------------------
     @staticmethod
     def snapshot(cache, pos, tokens) -> dict[str, Any]:
-        return {"cache": jax.device_get(cache), "pos": int(pos),
+        return {"cache": jax.device_get(cache), "pos": np.asarray(pos),
                 "tokens": jax.device_get(tokens)}
 
     def restore(self, snap):
-        return jax.device_put(snap["cache"]), jnp.int32(snap["pos"]), jnp.asarray(snap["tokens"])
+        return (jax.device_put(snap["cache"]), jnp.asarray(snap["pos"], jnp.int32),
+                jnp.asarray(snap["tokens"]))
