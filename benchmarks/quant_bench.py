@@ -1,0 +1,86 @@
+"""`quant` suite: per-format PTQ comparison on TinyLlama decode shapes.
+
+For every registered weight format (int8 = paper W8A8, int4 = packed
+sub-byte) reports:
+
+  bits-per-weight       stored bits per logical weight incl. fp32 scales
+  weight MB per step    bytes DMA'd from HBM for one decode step's matmuls
+                        (the paper's §II-B bandwidth axis; int4 must move
+                        >= 1.8x fewer bytes than int8)
+  decode us/call        measured batch-1 GQMV wall time per projection
+                        (XLA path — the portable backend; Pallas-interpret
+                        is a correctness harness, not a timing one)
+  Table-IV error stats  round-trip |r_hat - r| statistics (Eq. 3), plus a
+                        NAIVE per-tensor int4 row showing what group-wise
+                        scales buy at 4 bits
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.quant import available_formats, quantization_error_stats, quantize
+from repro.kernels import ops
+
+# The three distinct decode-step matmul shapes of TinyLlama (paper Table I);
+# kernel1 (d, d), kernel2-style (4d-ish, d) and its transpose cover the
+# attention + FFN traffic without re-timing duplicate shapes.
+SHAPES = [(2048, 2048), (5632, 2048), (2048, 5632)]
+GS = 256
+
+
+def _naive_int4_per_tensor(r: np.ndarray) -> np.ndarray:
+    """One symmetric scale for the WHOLE tensor (the baseline group-wise
+    scales beat): S = 2*max|r|/15, round-clip to [-7, 7]."""
+    s = 2.0 * np.abs(r).max() / 15.0
+    q = np.clip(np.round(r / s), -7, 7)
+    return (q * s).astype(np.float32)
+
+
+def run():
+    rng = np.random.default_rng(0)
+    weights_f = [
+        jnp.asarray((rng.normal(size=shape) * 0.02).astype(np.float32))
+        for shape in SHAPES
+    ]
+    xs = [
+        jnp.asarray(rng.normal(size=(shape[1],)).astype(np.float32))
+        for shape in SHAPES
+    ]
+
+    step_bytes = {}
+    for fmt in available_formats():
+        qws = [quantize(w, GS, fmt) for w in weights_f]
+        bpw = qws[0].bits_per_weight()
+        step_bytes[fmt] = sum(q.nbytes() for q in qws)
+
+        mm = jax.jit(lambda x, w: ops.quantized_matmul(x, w, impl="xla"))
+        us = sum(time_fn(mm, x, q) for x, q in zip(xs, qws)) / len(SHAPES)
+        emit(f"quant/{fmt}/bits_per_weight", 0.0, f"{bpw:.3f}")
+        emit(f"quant/{fmt}/weight_mb_per_step", 0.0,
+             f"{step_bytes[fmt] / 1e6:.2f}MB")
+        emit(f"quant/{fmt}/decode_gqmv", us, "us/call mean over shapes")
+
+        stats = quantization_error_stats(weights_f[0], GS, fmt)
+        for k in ("max", "mean", "std"):
+            emit(f"quant/{fmt}/err_{k}", 0.0, f"{stats[k]:.4g}")
+        emit(f"quant/{fmt}/rel_err_mean_pct", 0.0,
+             f"{stats['rel_mean_pct']:.2f}%")
+
+    if {"int8", "int4"} <= set(step_bytes):
+        ratio = step_bytes["int8"] / step_bytes["int4"]
+        emit("quant/int4_vs_int8_weight_bytes", 0.0, f"{ratio:.2f}x fewer")
+
+    # group-wise int4 vs naive per-tensor int4 (what Table IV looks like
+    # without per-group scales at 4 bits)
+    w0 = np.asarray(weights_f[0])
+    naive_err = np.abs(_naive_int4_per_tensor(w0) - w0)
+    emit("quant/int4_naive_per_tensor/err_mean", 0.0, f"{naive_err.mean():.4g}")
+    emit("quant/int4_naive_per_tensor/err_max", 0.0, f"{naive_err.max():.4g}")
+
+
+if __name__ == "__main__":
+    run()

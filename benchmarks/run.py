@@ -6,6 +6,7 @@
   table6 -> throughput       (paper Table VI: tok/s, GOPS, scheduling)
   kernels -> kernel_bench    (GQMV/GQMM kernel-shape sweep, interpret mode)
   ragged -> throughput       (ragged trace: bucket-serial vs continuous slots)
+  quant -> quant_bench       (per-format bytes/weight, decode us/call, errors)
 """
 
 import os
@@ -19,7 +20,14 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 
 def main() -> int:
-    from benchmarks import kernel_bench, profile_forward, quant_error, quality, throughput
+    from benchmarks import (
+        kernel_bench,
+        profile_forward,
+        quant_bench,
+        quant_error,
+        quality,
+        throughput,
+    )
 
     only = sys.argv[1] if len(sys.argv) > 1 else None
     suites = {
@@ -29,6 +37,7 @@ def main() -> int:
         "table6": throughput.run,
         "kernels": kernel_bench.run,
         "ragged": throughput.run_ragged,
+        "quant": quant_bench.run,
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; valid: {', '.join(suites)}", file=sys.stderr)

@@ -8,6 +8,13 @@ write can never be mistaken for a complete checkpoint.
 Restore is resharding-friendly: leaves come back as host numpy arrays; the
 caller device_puts them with whatever sharding the *current* mesh dictates
 (elastic restart after losing a pod re-lays-out automatically).
+
+Quantized leaves (QuantizedTensor) flatten to their ``.../qvalues`` and
+``.../scales`` children, so the array format is format-agnostic; the
+manifest additionally records each leaf's quantization format name and
+group size (``quant`` key) and restore refuses a tree whose declared
+formats disagree — a packed-int4 qvalues array silently reinterpreted as
+int8 rows would be shape-valid but numerically garbage.
 """
 
 from __future__ import annotations
@@ -19,6 +26,7 @@ import shutil
 import jax
 import numpy as np
 
+from repro.core.quant import QuantizedTensor
 from repro.core.treepath import path_str
 
 MANIFEST = "manifest.json"
@@ -32,6 +40,18 @@ def _flatten_with_paths(tree):
         key = path_str(path)
         out[key] = np.asarray(jax.device_get(leaf))
     return out
+
+
+def _quant_meta(tree) -> dict:
+    """{tree path: {"fmt", "group_size"}} for every QuantizedTensor leaf."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    )
+    return {
+        path_str(p): {"fmt": leaf.fmt, "group_size": leaf.group_size}
+        for p, leaf in flat
+        if isinstance(leaf, QuantizedTensor)
+    }
 
 
 def save(directory: str, step: int, tree, extra: dict | None = None) -> str:
@@ -48,6 +68,7 @@ def save(directory: str, step: int, tree, extra: dict | None = None) -> str:
         "step": step,
         "keys": sorted(arrays.keys()),
         "extra": extra or {},
+        "quant": _quant_meta(tree),
         "format": 1,
     }
     with open(os.path.join(tmp, MANIFEST), "w") as f:
@@ -81,6 +102,17 @@ def restore(directory: str, like, step: int | None = None):
     with open(os.path.join(path, MANIFEST)) as f:
         manifest = json.load(f)
     arrays = np.load(os.path.join(path, ARRAYS))
+
+    saved_q = manifest.get("quant")
+    if saved_q is not None:
+        for key, meta in _quant_meta(like).items():
+            got = saved_q.get(key)
+            if got is not None and got != meta:
+                raise ValueError(
+                    f"quantization mismatch for {key}: checkpoint has "
+                    f"{got}, restore target expects {meta} — requantize "
+                    "instead of reinterpreting packed qvalues"
+                )
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []

@@ -79,6 +79,11 @@ class ModelConfig:
     num_frontend_tokens: int = 0
 
     group_size: int = 256                   # paper §III-A GS
+    # PTQ weight format applied when serving with quantize=True: a registry
+    # format name ("int8" = paper W8A8, "int4" = packed sub-byte) or a
+    # policy preset ("mixed": embed/classifier int8, attn/ffn int4). See
+    # core/quant.py (registry) and core/policy.py (format maps).
+    quant_format: str = "int8"
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
     sub_quadratic: bool = False             # eligible for long_500k

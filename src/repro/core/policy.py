@@ -6,17 +6,25 @@ negligible overhead"). We generalize the same reasoning to the assigned
 architectures: every large (out, in) matmul weight is quantized; small /
 accuracy-critical leaves (norms, MoE routers, SSM decay params, conv
 kernels, biases, RoPE tables) stay in float.
+
+On top of WHETHER a leaf is quantized, this module decides IN WHICH FORMAT
+(core/quant.py registry): leaves are bucketed into LAYER CLASSES (embed /
+classifier / attn / ffn / other) and a format map assigns each class a
+registry format name, enabling per-layer mixed precision — the "mixed"
+preset keeps the accuracy-critical embeddings and classifier at int8 and
+drops the bandwidth-dominant attention/FFN projections to packed int4
+(sub-byte decode traffic, the axis Hummingbird/2502.10659 push past the
+paper's W8A8).
 """
 
 from __future__ import annotations
 
-import re
-from typing import Any
+from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantizedTensor, quantize_groupwise
+from repro.core.quant import QuantizedTensor, get_format, largest_pow2_group
 
 # Leaf-name patterns that are never quantized (generalizes the paper's
 # RMSNorm exemption).
@@ -53,6 +61,90 @@ def _row_parallel(path: str) -> bool:
     return leafname in ROW_PARALLEL_KEYS
 
 
+# ---------------------------------------------------------------------------
+# layer classes and format maps
+# ---------------------------------------------------------------------------
+
+LEAF_CLASSES = ("embed", "classifier", "attn", "ffn", "other")
+
+# FFN projection leaf names that live outside an "mlp" container (RWKV6
+# keeps its channel-mix matrices flat in the layer dict).
+_FFN_LEAVES = ("w13", "w2", "wff1", "wff2", "wffr")
+
+# Containers whose projections count as attention/mixer weights: attention
+# blocks, enc-dec cross-attention, and Mamba in/out projections (the SSM
+# SCAN parameters inside stay excluded via EXCLUDE_PATTERNS).
+_ATTN_CONTAINERS = ("attn", "cross", "mamba")
+
+# Uniform-format presets plus the per-layer-class mixed-precision map:
+# embeddings/classifier keep int8 (table lookups are gather-bound, and both
+# touch the vocab distribution directly); attention/FFN projections — the
+# decode-bandwidth bulk — drop to packed int4.
+MIXED_FORMAT_MAP: dict[str, str | None] = {
+    "embed": "int8",
+    "classifier": "int8",
+    "attn": "int4",
+    "ffn": "int4",
+    "other": "int8",
+}
+
+FORMAT_POLICIES: dict[str, Mapping[str, str | None]] = {
+    "mixed": MIXED_FORMAT_MAP,
+}
+
+
+def leaf_class(path: str) -> str:
+    """Bucket a parameter tree path into one of LEAF_CLASSES.
+
+    Works on the '/'-joined lowered path; a trailing qvalues/scales segment
+    (already-quantized trees) is ignored so re-classification is stable.
+    """
+    parts = [p for p in path.lower().split("/") if p]
+    if parts and parts[-1] in ("qvalues", "scales"):
+        parts = parts[:-1]
+    leaf = parts[-1] if parts else ""
+    if "embed" in leaf:
+        return "embed"
+    if leaf == "classifier":
+        return "classifier"
+    if "mlp" in parts or "experts" in parts or leaf in _FFN_LEAVES:
+        return "ffn"
+    if any(c in parts for c in _ATTN_CONTAINERS) or leaf.startswith("w"):
+        return "attn"
+    return "other"
+
+
+def resolve_format_map(formats) -> dict[str, str | None]:
+    """Normalize a format selector into a complete {layer class: format} map.
+
+    ``formats`` is a registry format name (uniform), a policy preset name
+    from FORMAT_POLICIES ("mixed"), or a partial {class: name|None} mapping
+    — unspecified classes default to "int8" (the paper baseline) and an
+    explicit None excludes that class from quantization entirely.
+    """
+    if isinstance(formats, str):
+        if formats in FORMAT_POLICIES:
+            return dict(FORMAT_POLICIES[formats])
+        get_format(formats)  # raises with the registered names on a typo
+        return {c: formats for c in LEAF_CLASSES}
+    if isinstance(formats, Mapping):
+        bad = set(formats) - set(LEAF_CLASSES)
+        if bad:
+            raise ValueError(
+                f"unknown layer classes {sorted(bad)}; valid: {LEAF_CLASSES}"
+            )
+        out: dict[str, str | None] = {c: "int8" for c in LEAF_CLASSES}
+        for cls, name in formats.items():
+            if name is not None:
+                get_format(name)
+            out[cls] = name
+        return out
+    raise TypeError(
+        f"formats must be a format/policy name or a {{class: format}} map, "
+        f"got {type(formats).__name__}"
+    )
+
+
 def should_quantize(path: str, leaf: Any, group_size: int) -> bool:
     if not isinstance(leaf, jnp.ndarray | jax.Array):
         return False
@@ -73,44 +165,70 @@ def leaf_group_size(path: str, leaf, preferred: int, tp: int = 1) -> int | None:
         if n % tp:
             return None
         n //= tp
-    gs = preferred
-    while gs >= 16:
-        if n % gs == 0:
-            return gs
-        gs //= 2
-    return None
+    return largest_pow2_group(n, preferred, min_gs=16)
 
 
-def quantize_params(params, group_size: int, tp: int = 1):
+def quantize_params(params, group_size: int, tp: int = 1, formats="int8"):
     """PTQ driver: replace every quantizable weight leaf with a
-    QuantizedTensor (groups along the trailing/contraction axis).
+    QuantizedTensor (groups along the trailing/contraction axis) in the
+    format its layer class maps to.
 
     ``tp`` is the tensor-parallel degree of the serving mesh; it constrains
-    per-leaf group sizes so groups never straddle shard boundaries."""
+    per-leaf group sizes so groups never straddle shard boundaries.
+    ``formats`` selects the format per leaf class (see resolve_format_map);
+    the default reproduces the paper's uniform W8A8. A packed format whose
+    pack factor does not divide the leaf's group size falls back to int8
+    (unreachable for int4 today — group sizes are powers of two >= 16 —
+    but a future pack-8 int1 entry would hit it), so a format choice can
+    never silently drop a leaf back to fp32.
+    """
+    fmt_map = resolve_format_map(formats)
 
     def convert(path, leaf):
         p = _path_str(path)
         if not should_quantize(p, leaf, 16):
             return leaf
+        fmt_name = fmt_map[leaf_class(p)]
+        if fmt_name is None:
+            return leaf
         gs = leaf_group_size(p, leaf, group_size, tp)
         if gs is None:
             return leaf
-        return quantize_groupwise(leaf, gs)
+        fmt = get_format(fmt_name)
+        if gs % fmt.pack:
+            fmt = get_format("int8")  # packing impossible on this geometry
+        return fmt.quantize(leaf, gs)
 
     return jax.tree_util.tree_map_with_path(convert, params)
 
 
 def quantized_fraction(params) -> float:
-    """Fraction of parameter bytes stored as int8 after PTQ (for reporting:
-    paper compresses 4.4 GB -> 1.1 GB, i.e. ~97% of bytes quantized)."""
-    q_bytes = tot_bytes = 0
+    """Fraction of parameter bytes stored quantized after PTQ (for
+    reporting: paper compresses 4.4 GB -> 1.1 GB, i.e. ~97% of bytes
+    quantized). Accounting is format-aware via the registry's bits-per-
+    weight, so packed int4 leaves count their true (halved) storage."""
+    q_bits = tot_bits = 0
     for leaf in jax.tree_util.tree_leaves(
         params, is_leaf=lambda x: isinstance(x, QuantizedTensor)
     ):
         if isinstance(leaf, QuantizedTensor):
-            b = leaf.nbytes()
-            q_bytes += b
-            tot_bytes += b
+            b = leaf.storage_bits()
+            q_bits += b
+            tot_bits += b
         else:
-            tot_bytes += leaf.size * leaf.dtype.itemsize
-    return q_bytes / max(tot_bytes, 1)
+            tot_bits += leaf.size * leaf.dtype.itemsize * 8
+    return q_bits / max(tot_bits, 1)
+
+
+def format_breakdown(params) -> dict[str, int]:
+    """Stored bytes per quantization format (plus 'float' for the rest) —
+    the compression report the serve launcher and benchmarks print."""
+    out: dict[str, int] = {}
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    ):
+        if isinstance(leaf, QuantizedTensor):
+            out[leaf.fmt] = out.get(leaf.fmt, 0) + leaf.nbytes()
+        else:
+            out["float"] = out.get("float", 0) + leaf.size * leaf.dtype.itemsize
+    return out

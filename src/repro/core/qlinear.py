@@ -1,9 +1,11 @@
 """Quantization-aware linear / embedding primitives.
 
 Every weight-bearing matmul in the model zoo goes through ``linear``: when
-the weight leaf is a plain array it is an ordinary (bf16/f32) matmul; when it
-is a :class:`QuantizedTensor` the call becomes the paper's W8A8 GQMV/GQMM
-(run-time activation quantization + group-wise int8 kernel).
+the weight leaf is a plain array it is an ordinary (bf16/f32) matmul; when
+it is a :class:`QuantizedTensor` the call becomes the paper's GQMV/GQMM
+(run-time int8 activation quantization + the group-wise kernel of the
+weight's registered format — W8A8 for int8 storage, W4A8 for packed int4;
+see core/quant.py and DESIGN.md §8).
 
 Weights follow the paper's (out, in) row-major layout with quantization
 groups along the *in* (contraction) axis.
@@ -25,7 +27,8 @@ __all__ = ["linear", "embedding_lookup", "split_fused"]
 
 
 def linear(w, x: jax.Array, *, impl: str = "auto") -> jax.Array:
-    """y = x @ W^T for W (out, in); W8A8 path when W is quantized."""
+    """y = x @ W^T for W (out, in); quantized-kernel path when W is a
+    QuantizedTensor (any registered format)."""
     if isinstance(w, QuantizedTensor):
         if flags.get("prefill_dequant"):
             # compute-bound many-token passes: one dequant + bf16 MXU matmul
@@ -36,13 +39,18 @@ def linear(w, x: jax.Array, *, impl: str = "auto") -> jax.Array:
 
 
 def embedding_lookup(w, ids: jax.Array, dtype=jnp.float32) -> jax.Array:
-    """Row gather from a (vocab, d) table; dequantizes gathered rows when the
-    table is int8-quantized (paper quantizes W_embeddings, Table I)."""
+    """Row gather from a (vocab, d) table; dequantizes gathered rows when
+    the table is quantized (paper quantizes W_embeddings, Table I).
+
+    Only the gathered rows leave HBM: packed formats gather their (smaller)
+    storage rows and unpack to nibble values on-chip before scaling.
+    """
     if isinstance(w, QuantizedTensor):
-        q = jnp.take(w.qvalues, ids, axis=0)                    # (..., d) int8
-        s = jnp.take(w.scales, ids, axis=0)                     # (..., d/GS)
-        g = q.reshape(*q.shape[:-1], w.num_groups, w.group_size).astype(dtype)
-        return (g * s[..., None].astype(dtype)).reshape(q.shape)
+        q = jnp.take(w.qvalues, ids, axis=0)        # (..., d/pack) storage
+        s = jnp.take(w.scales, ids, axis=0)         # (..., d/GS)
+        v = w.format.unpack_values(q)               # (..., d) int8 values
+        g = v.reshape(*v.shape[:-1], w.num_groups, w.group_size).astype(dtype)
+        return (g * s[..., None].astype(dtype)).reshape(v.shape)
     return jnp.take(w, ids, axis=0).astype(dtype)
 
 
@@ -52,5 +60,9 @@ def split_fused(y: jax.Array, sizes: tuple[int, ...]):
     for s in sizes:
         outs.append(y[..., off:off + s])
         off += s
-    assert off == y.shape[-1], (off, y.shape)
+    if off != y.shape[-1]:
+        raise ValueError(
+            f"split_fused sizes {tuple(sizes)} sum to {off} but the fused "
+            f"output has trailing dim {y.shape[-1]} (shape {y.shape})"
+        )
     return outs

@@ -1,28 +1,45 @@
-"""Group-wise symmetric INT8 quantization (paper §II-B, §III-A).
+"""Pluggable group-wise quantization formats (paper §II-B, §III-A).
 
-Implements the paper's W8A8 scheme:
+The paper's scheme is symmetric group-wise PTQ with per-group fp32 scales:
 
-  Q(r)  = Int(r / S),            S = 2 * max(|r|) / 255        (Eq. 1)
-  r_hat = Q(r) * S                                             (Eq. 2)
+  Q(r)  = Int(r / S),            S = 2 * max(|r|) / (2^b - 1)     (Eq. 1)
+  r_hat = Q(r) * S                                                (Eq. 2)
 
-with *group-wise* scales: the contraction axis is split into groups of
-``GS`` elements (GS=256 in the paper) and each group gets its own scale.
+with the contraction axis split into groups of ``GS`` elements (GS=256 in
+the paper) and one scale per group. The paper instantiates b=8; follow-up
+work (Hummingbird, arXiv 2507.03308; arXiv 2502.10659) shows decode is
+weight-bandwidth-bound well below 8 bits, so this module exposes the scheme
+as a :class:`QuantFormat` REGISTRY instead of hardwiring int8:
 
-The quantized weight of a (m, n) matrix is stored exactly like the paper's
-flattened ``wq``/``ws`` arrays, but kept 2-D for JAX/sharding friendliness:
+  int8   storage int8, 1 value/byte, range [-127, 127]  (paper behavior,
+         bit-identical to the original ``quantize_groupwise``)
+  int4   storage int8, 2 nibbles/byte packed along the last axis,
+         range [-7, 7] — halves weight HBM traffic per decode step
 
-  qvalues : int8   (m, n)        -- row-major, groups contiguous along n
-  scales  : float32 (m, n // GS) -- one scale per (row, group)
+A format is a small spec object: name, storage dtype, pack factor,
+``quantize(r, gs) -> QuantizedTensor``, ``dequantize``, nibble pack/unpack,
+bits-per-weight, and a kernel hook name consumed by ``kernels/ops.py``.
+Adding a new format (int2, fp8, ...) is one ``register_format`` call plus a
+kernel-hook entry — no edits to qlinear/policy/sharding/checkpoint.
 
-Activations are quantized at run time with the same scheme along their
-last axis (paper Alg. 2 lines 3/8/13/16).
+The quantized weight of a (m, n) matrix is stored like the paper's
+flattened ``wq``/``ws`` arrays, kept 2-D for JAX/sharding friendliness:
+
+  qvalues : storage dtype (m, n // pack)  -- row-major, groups along n,
+                                             packed formats pair adjacent
+                                             elements within a group
+  scales  : float32 (m, n // GS)          -- one scale per (row, group)
+
+Activations are always quantized at run time to int8 along their last axis
+(paper Alg. 2 lines 3/8/13/16) — sub-byte weight formats are W4A8-style.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any
+import math
+from functools import partial, reduce
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -32,11 +49,20 @@ DEFAULT_GROUP_SIZE = 256  # paper §III-A: GS=256 divides every TinyLlama dim
 
 __all__ = [
     "DEFAULT_GROUP_SIZE",
+    "QuantFormat",
     "QuantizedTensor",
+    "register_format",
+    "get_format",
+    "available_formats",
+    "quantize",
     "quantize_groupwise",
+    "quantize_int4",
+    "pack_int4",
+    "unpack_int4",
     "dequantize",
     "quantize_activation",
     "choose_group_size",
+    "largest_pow2_group",
     "quantization_error_stats",
 ]
 
@@ -44,32 +70,56 @@ __all__ = [
 @jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass(frozen=True)
 class QuantizedTensor:
-    """A group-wise symmetric-int8 quantized tensor.
+    """A group-wise symmetric quantized tensor in some registered format.
 
-    ``qvalues`` has the original shape; ``scales`` has the same shape with the
-    last axis reduced by ``group_size``. Groups run along the LAST axis, which
-    by convention is the contraction axis of the matmul that consumes this
-    tensor (paper stores W row-major with groups along the column/input dim).
+    ``qvalues`` holds the storage array: the original shape for unpacked
+    formats, last axis divided by ``format.pack`` for packed ones. ``scales``
+    has the original shape with the last axis reduced by ``group_size``.
+    Groups run along the LAST (logical) axis, which by convention is the
+    contraction axis of the matmul that consumes this tensor (paper stores W
+    row-major with groups along the column/input dim). ``fmt`` is the
+    registry name carried as pytree aux data, so checkpoint/sharding paths
+    (``.../qvalues``, ``.../scales``) are stable across formats.
     """
 
-    qvalues: jax.Array  # int8, shape (..., n)
+    qvalues: jax.Array  # storage dtype, shape (..., n // pack)
     scales: jax.Array   # float32, shape (..., n // group_size)
     group_size: int
+    fmt: str = "int8"
 
     # -- pytree protocol (keyed, so checkpoint/sharding paths stay readable)
     def tree_flatten_with_keys(self):
         ga = jax.tree_util.GetAttrKey
-        return ((ga("qvalues"), self.qvalues), (ga("scales"), self.scales)), (self.group_size,)
+        return (
+            ((ga("qvalues"), self.qvalues), (ga("scales"), self.scales)),
+            (self.group_size, self.fmt),
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         qvalues, scales = children
-        return cls(qvalues=qvalues, scales=scales, group_size=aux[0])
+        return cls(qvalues=qvalues, scales=scales, group_size=aux[0], fmt=aux[1])
 
     # -- conveniences -------------------------------------------------------
     @property
+    def format(self) -> "QuantFormat":
+        return get_format(self.fmt)
+
+    @property
     def shape(self):
+        """LOGICAL shape — what dequantize() returns. Packing is a storage
+        detail: model code reading dims off a weight leaf (e.g. the fused
+        SwiGLU split) must see the represented tensor, not the byte layout."""
+        return self.logical_shape
+
+    @property
+    def storage_shape(self):
         return self.qvalues.shape
+
+    @property
+    def logical_shape(self):
+        s = self.qvalues.shape
+        return (*s[:-1], s[-1] * self.format.pack)
 
     @property
     def num_groups(self):
@@ -81,9 +131,88 @@ class QuantizedTensor:
     def dequantize(self, dtype=jnp.float32) -> jax.Array:
         return dequantize(self, dtype=dtype)
 
-    def nbytes(self) -> int:
-        return int(np.prod(self.qvalues.shape)) + 4 * int(np.prod(self.scales.shape))
+    def storage_bits(self) -> int:
+        """Total stored bits (qvalues + scales), format-aware."""
+        return 8 * self.nbytes()
 
+    def nbytes(self) -> int:
+        def _nb(a):
+            return int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+
+        return _nb(self.qvalues) + _nb(self.scales)
+
+    def bits_per_weight(self) -> float:
+        """Stored bits per LOGICAL weight element, scales included
+        (e.g. int8/GS=256: 8.125; packed int4/GS=256: 4.125)."""
+        return self.storage_bits() / int(np.prod(self.logical_shape))
+
+
+# ---------------------------------------------------------------------------
+# format registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantFormat:
+    """Spec for one quantization format.
+
+    ``kernel`` names the GQMV/GQMM kernel family in ``kernels/ops.py``
+    (``KERNEL_HOOKS``); quant.py stays import-free of the kernels package.
+    ``pack``/``unpack_values`` convert between storage and logical int8
+    values (identity for unpacked formats); sharding relies on groups being
+    whole multiples of ``pack`` so a storage element never straddles groups.
+    """
+
+    name: str
+    bits: int                      # stored bits per logical weight element
+    storage_dtype: Any             # dtype of QuantizedTensor.qvalues
+    pack: int                      # logical elements per storage element
+    qmax: int                      # symmetric integer range [-qmax, qmax]
+    kernel: str                    # hook name consumed by kernels/ops.py
+    quantize_fn: Callable = dataclasses.field(repr=False, default=None)
+    dequantize_fn: Callable = dataclasses.field(repr=False, default=None)
+    pack_fn: Callable = dataclasses.field(repr=False, default=None)
+    unpack_fn: Callable = dataclasses.field(repr=False, default=None)
+
+    def quantize(self, r: jax.Array, group_size: int) -> "QuantizedTensor":
+        return self.quantize_fn(r, group_size=group_size)
+
+    def dequantize(self, qt: "QuantizedTensor", dtype=jnp.float32) -> jax.Array:
+        return self.dequantize_fn(qt, dtype=dtype)
+
+    def unpack_values(self, qvalues: jax.Array) -> jax.Array:
+        """Storage array -> logical int8 values (identity when pack == 1)."""
+        return qvalues if self.unpack_fn is None else self.unpack_fn(qvalues)
+
+    def pack_values(self, values: jax.Array) -> jax.Array:
+        return values if self.pack_fn is None else self.pack_fn(values)
+
+
+_FORMATS: dict[str, QuantFormat] = {}
+
+
+def register_format(fmt: QuantFormat) -> QuantFormat:
+    if fmt.name in _FORMATS:
+        raise ValueError(f"quant format {fmt.name!r} already registered")
+    _FORMATS[fmt.name] = fmt
+    return fmt
+
+
+def get_format(name: str) -> QuantFormat:
+    try:
+        return _FORMATS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown quant format {name!r}; registered: {available_formats()}"
+        ) from None
+
+
+def available_formats() -> tuple[str, ...]:
+    return tuple(sorted(_FORMATS))
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
 
 def _check_group_size(n: int, group_size: int) -> None:
     if n % group_size != 0:
@@ -93,6 +222,55 @@ def _check_group_size(n: int, group_size: int) -> None:
         )
 
 
+def _group_quantize(r: jax.Array, group_size: int, qmax: int):
+    """Shared Eq. 1 core: per-group scale S = 2*max|r|/(2*qmax+1) and
+    round-clip to [-qmax, qmax]. Returns (q int8 logical values, scales)."""
+    n = r.shape[-1]
+    _check_group_size(n, group_size)
+    g = r.reshape(*r.shape[:-1], n // group_size, group_size).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(g), axis=-1)
+    scales = absmax * (2.0 / (2 * qmax + 1))
+    # Avoid 0/0 for all-zero groups; scale value is irrelevant there (q==0).
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(g / safe[..., None]), -qmax, qmax).astype(jnp.int8)
+    return q.reshape(r.shape), scales.astype(jnp.float32)
+
+
+def largest_pow2_group(n: int, preferred: int, min_gs: int) -> int | None:
+    """Largest power-of-two group size <= ``preferred`` and >= ``min_gs``
+    that divides ``n``; None if no such size exists.
+
+    The single power-of-two descent shared by :func:`choose_group_size`
+    (config-level, floor 32) and ``policy.leaf_group_size`` (per-leaf,
+    floor 16) — the two floors differ, the search must not.
+    """
+    gs = preferred
+    while gs >= min_gs:
+        if n % gs == 0:
+            return gs
+        gs //= 2
+    return None
+
+
+def choose_group_size(
+    dims: list[int], preferred: int = DEFAULT_GROUP_SIZE, min_gs: int = 32
+) -> int:
+    """Pick the largest GS <= preferred that divides every quantized dim.
+
+    Paper picks 256 because every TinyLlama dim divides by it; assigned archs
+    have dims like 5632/14336/10752 where this still holds, but e.g. a 1408
+    FFN (deepseek-v2-lite) needs GS=128. Powers of two only, >= ``min_gs``.
+    """
+    gs = largest_pow2_group(reduce(math.gcd, dims), preferred, min_gs)
+    if gs is None:
+        raise ValueError(f"no group size in [{min_gs}, {preferred}] divides all of {dims}")
+    return gs
+
+
+# ---------------------------------------------------------------------------
+# int8 (paper W8A8; bit-identical to the pre-registry implementation)
+# ---------------------------------------------------------------------------
+
 @partial(jax.jit, static_argnames=("group_size",))
 def quantize_groupwise(r: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> QuantizedTensor:
     """Symmetric int8 group-wise quantization along the last axis (Eq. 1).
@@ -101,57 +279,113 @@ def quantize_groupwise(r: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> Qu
     nearest then clipping to [-127, 127] uses the full signed-int8 range the
     way the paper's Int() does, without the -128 asymmetry.
     """
-    n = r.shape[-1]
-    _check_group_size(n, group_size)
-    g = r.reshape(*r.shape[:-1], n // group_size, group_size).astype(jnp.float32)
-    absmax = jnp.max(jnp.abs(g), axis=-1)
-    scales = absmax * (2.0 / 255.0)
-    # Avoid 0/0 for all-zero groups; scale value is irrelevant there (q==0).
-    safe = jnp.where(scales > 0, scales, 1.0)
-    q = jnp.clip(jnp.round(g / safe[..., None]), -127, 127).astype(jnp.int8)
-    return QuantizedTensor(
-        qvalues=q.reshape(r.shape),
-        scales=scales.astype(jnp.float32),
-        group_size=group_size,
-    )
+    q, scales = _group_quantize(r, group_size, qmax=127)
+    return QuantizedTensor(qvalues=q, scales=scales, group_size=group_size, fmt="int8")
 
 
 @partial(jax.jit, static_argnames=("dtype",))
-def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+def _dequantize_int8(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
     """r_hat = Q(r) * S (Eq. 2)."""
-    n = qt.qvalues.shape[-1]
     g = qt.qvalues.reshape(*qt.qvalues.shape[:-1], qt.num_groups, qt.group_size)
     out = g.astype(jnp.float32) * qt.scales[..., None]
     return out.reshape(qt.qvalues.shape).astype(dtype)
 
 
+# ---------------------------------------------------------------------------
+# int4, packed two nibbles per int8 byte (W4A8)
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """int8 logical values in [-7, 7], (..., n) -> packed int8 (..., n // 2).
+
+    Byte i holds element 2i in its low nibble and element 2i+1 in its high
+    nibble; adjacent elements pair up, so any even group size keeps every
+    byte inside one quantization group (the sharding invariant).
+    """
+    if q.shape[-1] % 2:
+        raise ValueError(f"int4 packing needs an even last axis, got {q.shape}")
+    lo = jnp.bitwise_and(q[..., 0::2], 0x0F)
+    hi = jnp.left_shift(q[..., 1::2], 4)            # int8 shift wraps mod 256
+    return jnp.bitwise_or(lo, hi)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """Packed int8 (..., n // 2) -> sign-extended int8 logical values (..., n)."""
+    lo = jnp.right_shift(jnp.left_shift(p, 4), 4)   # arithmetic >> sign-extends
+    hi = jnp.right_shift(p, 4)
+    return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def quantize_int4(r: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> QuantizedTensor:
+    """Symmetric packed-int4 group-wise quantization (Eq. 1 with b=4).
+
+    S = 2*max|r|/15 per group, round-clip to [-7, 7], then pack nibble pairs;
+    weight bytes drop ~2x vs int8 — the off-chip-bandwidth axis the paper
+    optimizes (§II-B) pushed below one byte per weight.
+    """
+    if group_size % 2:
+        raise ValueError(f"int4 needs an even group_size, got {group_size}")
+    q, scales = _group_quantize(r, group_size, qmax=7)
+    return QuantizedTensor(
+        qvalues=pack_int4(q), scales=scales, group_size=group_size, fmt="int4"
+    )
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def _dequantize_int4(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    vals = unpack_int4(qt.qvalues)
+    g = vals.reshape(*vals.shape[:-1], qt.num_groups, qt.group_size)
+    out = g.astype(jnp.float32) * qt.scales[..., None]
+    return out.reshape(vals.shape).astype(dtype)
+
+
+register_format(QuantFormat(
+    name="int8", bits=8, storage_dtype=jnp.int8, pack=1, qmax=127,
+    kernel="gqmv_int8",
+    quantize_fn=quantize_groupwise, dequantize_fn=_dequantize_int8,
+))
+
+register_format(QuantFormat(
+    name="int4", bits=4, storage_dtype=jnp.int8, pack=2, qmax=7,
+    kernel="gqmv_int4",
+    quantize_fn=quantize_int4, dequantize_fn=_dequantize_int4,
+    pack_fn=pack_int4, unpack_fn=unpack_int4,
+))
+
+
+# ---------------------------------------------------------------------------
+# generic entry points (format-dispatched)
+# ---------------------------------------------------------------------------
+
+def quantize(
+    r: jax.Array, group_size: int = DEFAULT_GROUP_SIZE, fmt: str = "int8"
+) -> QuantizedTensor:
+    """Quantize ``r`` group-wise in registry format ``fmt``."""
+    return get_format(fmt).quantize(r, group_size)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    """r_hat = Q(r) * S (Eq. 2), dispatched on ``qt.fmt``."""
+    return qt.format.dequantize(qt, dtype=dtype)
+
+
 def quantize_activation(x: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> QuantizedTensor:
     """Run-time activation quantization (paper Alg. 2 lines 3/8/13/16).
 
-    Same math as weights; a separate entry point so quantization policy can
-    diverge later (e.g. per-tensor activations) without touching weight code.
+    Always int8, regardless of the weight format: sub-byte WEIGHTS are what
+    cut decode HBM traffic (weights dominate, §II-B); activations are tiny
+    and re-quantized per step, so W4A8 keeps the accumulation exact in the
+    same int8*int8->int32 datapath.
     """
     return quantize_groupwise(x, group_size=group_size)
 
 
-def choose_group_size(dims: list[int], preferred: int = DEFAULT_GROUP_SIZE) -> int:
-    """Pick the largest GS <= preferred that divides every quantized dim.
-
-    Paper picks 256 because every TinyLlama dim divides by it; assigned archs
-    have dims like 5632/14336/10752 where this still holds, but e.g. a 1408
-    FFN (deepseek-v2-lite) needs GS=128. Powers of two only, >= 32.
-    """
-    gs = preferred
-    while gs >= 32:
-        if all(d % gs == 0 for d in dims):
-            return gs
-        gs //= 2
-    raise ValueError(f"no group size in [32, {preferred}] divides all of {dims}")
-
-
-def quantization_error_stats(r: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> dict[str, float]:
+def quantization_error_stats(
+    r: jax.Array, group_size: int = DEFAULT_GROUP_SIZE, fmt: str = "int8"
+) -> dict[str, float]:
     """Per-element |r_hat - r| statistics (paper Table IV, Eq. 3)."""
-    qt = quantize_groupwise(r, group_size)
+    qt = quantize(r, group_size, fmt)
     err = jnp.abs(qt.dequantize() - r.astype(jnp.float32))
     denom = jnp.where(jnp.abs(r) > 0, jnp.abs(r), 1.0)
     rel = err / denom

@@ -19,7 +19,13 @@ Parameter rules (Megatron-style, path-keyed):
         it except the trailing GROUP axis, which follows "model" only when
         the parent contraction does (row-parallel serve) and never takes
         FSDP — the LlamaF invariant that a quantization group is never split
-        across shards (core/policy.py sizes groups to n/tp for this reason)
+        across shards (core/policy.py sizes groups to n/tp for this reason).
+        PACKED formats (int4: two nibbles/byte, core/quant.py registry)
+        shard qvalues on the PACKED dim: the rules are pure divisibility on
+        the storage shape, and since a leaf's group size divides n/tp and is
+        a multiple of the pack factor, every shard chunk of n/(pack*tp)
+        storage elements holds whole groups — validate_quant_partition
+        checks the invariant for an assembled (params, mesh) pair
   embed: vocab -> model, d_model -> data (train only); norms, routers,
   SSM scan params, conv kernels, token-shift mixes, biases: replicated.
 
@@ -127,6 +133,42 @@ def param_spec(path: str, shape, *, mesh, mode: str = "train") -> P:
     else:
         spec[-1] = _fit(shape[-1], in_ax, sizes)
     return P(*spec)
+
+
+def validate_quant_partition(params, mesh, mode: str = "serve") -> None:
+    """Assert the group-never-straddles invariant for quantized leaves.
+
+    For every QuantizedTensor in ``params``, any sharding of the trailing
+    (storage/packed) qvalues axis must leave each shard with a whole number
+    of quantization groups — group_size // pack STORAGE elements per group.
+    The PTQ policy guarantees this by construction (per-leaf group sizes
+    divide n/tp); this check catches drift between policy and placement,
+    e.g. a new packed format or a hand-built mesh that breaks the geometry.
+    """
+    from repro.core.quant import QuantizedTensor, get_format  # no import cycle
+
+    sizes = _sizes(mesh)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    )
+    for path, leaf in flat:
+        if not isinstance(leaf, QuantizedTensor):
+            continue
+        p = path_str(path)
+        spec = param_spec(f"{p}/qvalues", leaf.qvalues.shape, mesh=mesh, mode=mode)
+        last = spec[-1] if len(spec) else None
+        if last is None:
+            continue
+        axes = last if isinstance(last, tuple) else (last,)
+        ways = int(math.prod(sizes.get(a, 1) for a in axes))
+        per_group = leaf.group_size // get_format(leaf.fmt).pack
+        dim = leaf.qvalues.shape[-1]
+        if ways > 1 and (dim // ways) % per_group:
+            raise ValueError(
+                f"{p}: {ways}-way sharding of the packed qvalues axis "
+                f"({dim} storage elements) splits quantization groups of "
+                f"{per_group} storage elements ({leaf.fmt}, GS={leaf.group_size})"
+            )
 
 
 def param_specs(params, mesh, mode: str = "train"):

@@ -20,6 +20,15 @@ are lane-aligned.
 
 Kernels are written for TPU (BlockSpec/VMEM) and validated on CPU with
 ``interpret=True`` against ``ref.py``.
+
+Two weight formats share the compute stages (see core/quant.py registry):
+
+  int8  wq streamed as int8 blocks (the paper's layout)
+  int4  wq streamed PACKED (two nibbles per byte, half the HBM traffic of
+        int8 — the paper's §II-B bandwidth lever pushed below one byte) and
+        sign-extended to int8 nibble values in VMEM just before the group
+        dot. Only the DMA'd bytes shrink; the dot-product and accumulate
+        stages are byte-for-byte the int8 ones.
 """
 
 from __future__ import annotations
@@ -29,6 +38,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.quant import unpack_int4
 
 DEFAULT_BM = 256   # output rows per block
 DEFAULT_BN = 1024  # contraction columns per block (multiple of GS)
@@ -55,13 +66,15 @@ def _pick_block(dim: int, preferred: int, multiple_of: int = 1) -> int:
 # GQMV: out (1, m)  =  W(q) (m, n)  @  x(q) (1, n)     -- paper's batch-1 core
 # ---------------------------------------------------------------------------
 
-def _gqmv_kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref, *, group_size: int):
+def _gqmv_compute(wq, xq_ref, xs_ref, ws_ref, out_ref, *, group_size: int):
+    """Dot-product + accumulate stages shared by every weight format; ``wq``
+    is the already-unpacked (bm, bn) int8 weight block in VMEM."""
     j = pl.program_id(1)           # n-block index (innermost grid dim)
-    bm, bn = wq_ref.shape
+    bm, bn = wq.shape
     ng = bn // group_size
 
     # --- dot-product stage: int8 x int8 -> int32 group sums ----------------
-    wg = wq_ref[...].reshape(bm, ng, group_size).transpose(1, 0, 2)  # (g,bm,GS)
+    wg = wq.reshape(bm, ng, group_size).transpose(1, 0, 2)            # (g,bm,GS)
     xg = xq_ref[0].reshape(ng, group_size)                            # (g,GS)
     group_sums = jax.lax.dot_general(
         wg, xg, _INT8_GROUP_DOT, preferred_element_type=jnp.int32
@@ -80,6 +93,43 @@ def _gqmv_kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref, *, group_size: int):
         out_ref[0, :] += partial
 
 
+def _gqmv_kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref, *, group_size: int):
+    _gqmv_compute(wq_ref[...], xq_ref, xs_ref, ws_ref, out_ref,
+                  group_size=group_size)
+
+
+def _gqmv_int4_kernel(xq_ref, xs_ref, wp_ref, ws_ref, out_ref, *, group_size: int):
+    # pre-processing stage streamed half the bytes; sign-extend in VMEM
+    _gqmv_compute(unpack_int4(wp_ref[...]), xq_ref, xs_ref, ws_ref, out_ref,
+                  group_size=group_size)
+
+
+def _gqmv_call(kernel, wq, ws, xq, xs, *, group_size, pack,
+               block_m, block_n, interpret):
+    """Shared pallas_call plumbing; ``pack`` is the weight-storage packing
+    factor (wq's trailing axis holds n // pack storage elements)."""
+    m = wq.shape[0]
+    n = xq.shape[-1]
+    bm = block_m or _pick_block(m, DEFAULT_BM)
+    bn = block_n or _pick_block(n, DEFAULT_BN, multiple_of=max(group_size, pack))
+    ng = bn // group_size
+    grid = (m // bm, n // bn)
+
+    return pl.pallas_call(
+        functools.partial(kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),            # xq
+            pl.BlockSpec((1, ng), lambda i, j: (0, j)),            # xs
+            pl.BlockSpec((bm, bn // pack), lambda i, j: (i, j)),   # wq (streamed)
+            pl.BlockSpec((bm, ng), lambda i, j: (i, j)),           # ws (streamed)
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda i, j: (0, i)),      # out row block
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.float32),
+        interpret=interpret,
+    )(xq[None, :], xs[None, :], wq, ws)[0]
+
+
 def gqmv_pallas(
     wq: jax.Array,   # int8 (m, n)
     ws: jax.Array,   # f32 (m, n // GS)
@@ -91,38 +141,38 @@ def gqmv_pallas(
     block_n: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    m, n = wq.shape
-    bm = block_m or _pick_block(m, DEFAULT_BM)
-    bn = block_n or _pick_block(n, DEFAULT_BN, multiple_of=group_size)
-    ng = bn // group_size
-    grid = (m // bm, n // bn)
+    return _gqmv_call(_gqmv_kernel, wq, ws, xq, xs, group_size=group_size,
+                      pack=1, block_m=block_m, block_n=block_n,
+                      interpret=interpret)
 
-    return pl.pallas_call(
-        functools.partial(_gqmv_kernel, group_size=group_size),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),          # xq
-            pl.BlockSpec((1, ng), lambda i, j: (0, j)),          # xs
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),         # wq (streamed)
-            pl.BlockSpec((bm, ng), lambda i, j: (i, j)),         # ws (streamed)
-        ],
-        out_specs=pl.BlockSpec((1, bm), lambda i, j: (0, i)),    # out row block
-        out_shape=jax.ShapeDtypeStruct((1, m), jnp.float32),
-        interpret=interpret,
-    )(xq[None, :], xs[None, :], wq, ws)[0]
+
+def gqmv_int4_pallas(
+    wq: jax.Array,   # int8 PACKED (m, n // 2)
+    ws: jax.Array,   # f32 (m, n // GS)
+    xq: jax.Array,   # int8 (n,)
+    xs: jax.Array,   # f32 (n // GS,)
+    *,
+    group_size: int,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    return _gqmv_call(_gqmv_int4_kernel, wq, ws, xq, xs, group_size=group_size,
+                      pack=2, block_m=block_m, block_n=block_n,
+                      interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
 # GQMM: out (b, m) = X(q) (b, n) @ W(q)^T -- batched prefill / batched decode
 # ---------------------------------------------------------------------------
 
-def _gqmm_kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref, *, group_size: int):
+def _gqmm_compute(wq, xq_ref, xs_ref, ws_ref, out_ref, *, group_size: int):
     j = pl.program_id(2)           # n-block index (innermost)
-    bm, bn = wq_ref.shape
+    bm, bn = wq.shape
     bb = xq_ref.shape[0]
     ng = bn // group_size
 
-    wg = wq_ref[...].reshape(bm, ng, group_size).transpose(1, 0, 2)   # (g,bm,GS)
+    wg = wq.reshape(bm, ng, group_size).transpose(1, 0, 2)            # (g,bm,GS)
     xg = xq_ref[...].reshape(bb, ng, group_size).transpose(1, 0, 2)   # (g,bb,GS)
     # (g,bb,GS) x (g,bm,GS) -> (g,bb,bm) int32 group sums
     group_sums = jax.lax.dot_general(
@@ -144,6 +194,41 @@ def _gqmm_kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref, *, group_size: int):
         out_ref[...] += partial
 
 
+def _gqmm_kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref, *, group_size: int):
+    _gqmm_compute(wq_ref[...], xq_ref, xs_ref, ws_ref, out_ref,
+                  group_size=group_size)
+
+
+def _gqmm_int4_kernel(xq_ref, xs_ref, wp_ref, ws_ref, out_ref, *, group_size: int):
+    _gqmm_compute(unpack_int4(wp_ref[...]), xq_ref, xs_ref, ws_ref, out_ref,
+                  group_size=group_size)
+
+
+def _gqmm_call(kernel, wq, ws, xq, xs, *, group_size, pack,
+               block_b, block_m, block_n, interpret):
+    m = wq.shape[0]
+    b, n = xq.shape
+    bb = block_b or _pick_block(b, DEFAULT_BB)
+    bm = block_m or _pick_block(m, DEFAULT_BM)
+    bn = block_n or _pick_block(n, DEFAULT_BN, multiple_of=max(group_size, pack))
+    ng = bn // group_size
+    grid = (b // bb, m // bm, n // bn)
+
+    return pl.pallas_call(
+        functools.partial(kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda ib, im, j: (ib, j)),          # xq
+            pl.BlockSpec((bb, ng), lambda ib, im, j: (ib, j)),          # xs
+            pl.BlockSpec((bm, bn // pack), lambda ib, im, j: (im, j)),  # wq
+            pl.BlockSpec((bm, ng), lambda ib, im, j: (im, j)),          # ws
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda ib, im, j: (ib, im)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=interpret,
+    )(xq, xs, wq, ws)
+
+
 def gqmm_pallas(
     wq: jax.Array,   # int8 (m, n)
     ws: jax.Array,   # f32 (m, n // GS)
@@ -156,24 +241,23 @@ def gqmm_pallas(
     block_n: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    m, n = wq.shape
-    b = xq.shape[0]
-    bb = block_b or _pick_block(b, DEFAULT_BB)
-    bm = block_m or _pick_block(m, DEFAULT_BM)
-    bn = block_n or _pick_block(n, DEFAULT_BN, multiple_of=group_size)
-    ng = bn // group_size
-    grid = (b // bb, m // bm, n // bn)
+    return _gqmm_call(_gqmm_kernel, wq, ws, xq, xs, group_size=group_size,
+                      pack=1, block_b=block_b, block_m=block_m,
+                      block_n=block_n, interpret=interpret)
 
-    return pl.pallas_call(
-        functools.partial(_gqmm_kernel, group_size=group_size),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, bn), lambda ib, im, j: (ib, j)),    # xq
-            pl.BlockSpec((bb, ng), lambda ib, im, j: (ib, j)),    # xs
-            pl.BlockSpec((bm, bn), lambda ib, im, j: (im, j)),    # wq (streamed)
-            pl.BlockSpec((bm, ng), lambda ib, im, j: (im, j)),    # ws
-        ],
-        out_specs=pl.BlockSpec((bb, bm), lambda ib, im, j: (ib, im)),
-        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
-        interpret=interpret,
-    )(xq, xs, wq, ws)
+
+def gqmm_int4_pallas(
+    wq: jax.Array,   # int8 PACKED (m, n // 2)
+    ws: jax.Array,   # f32 (m, n // GS)
+    xq: jax.Array,   # int8 (b, n)
+    xs: jax.Array,   # f32 (b, n // GS)
+    *,
+    group_size: int,
+    block_b: int | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    return _gqmm_call(_gqmm_int4_kernel, wq, ws, xq, xs, group_size=group_size,
+                      pack=2, block_b=block_b, block_m=block_m,
+                      block_n=block_n, interpret=interpret)

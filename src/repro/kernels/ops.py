@@ -1,22 +1,33 @@
 """Public jit'd entry points for quantized matmul kernels.
 
-Dispatch policy (``impl``):
+Dispatch is two-dimensional:
+
+``impl`` (backend):
   'pallas'    pl.pallas_call, compiled for TPU (Mosaic)
   'interpret' same kernel body, Pallas interpreter on CPU (validation)
   'xla'       pure-XLA int8 dot_general path, bit-identical math; used by
               the distributed models and the dry-run, where the CPU backend
               cannot compile Mosaic kernels (see DESIGN.md §2)
   'auto'      pallas on TPU, xla elsewhere
+
+kernel hook (weight format): every :class:`~repro.core.quant.QuantFormat`
+names a hook (``fmt.kernel``); ``KERNEL_HOOKS`` maps it to the XLA oracle
+and Pallas kernel pair for both the matrix-vector (GQMV) and batched (GQMM)
+shapes. Registering a new weight format therefore means one
+``QuantFormat`` entry in core/quant.py plus one ``KernelHook`` row here —
+qlinear/policy/engine code never changes (DESIGN.md §8).
 """
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantizedTensor, quantize_activation
+from repro.core.quant import QuantizedTensor, get_format, quantize_activation
 from repro.kernels import gqmv as _pallas
 from repro.kernels import ref as _ref
 
@@ -29,7 +40,42 @@ def _resolve(impl: str) -> str:
     return _default_impl() if impl == "auto" else impl
 
 
-@partial(jax.jit, static_argnames=("group_size", "impl"))
+@dataclasses.dataclass(frozen=True)
+class KernelHook:
+    """GQMV/GQMM implementations for one weight storage format. All four
+    callables share the signature (wq, ws, xq, xs, *, group_size[, ...]);
+    ``wq`` is the format's STORAGE array (packed for sub-byte formats),
+    activations are always int8 (W{b}A8)."""
+
+    gqmv_xla: Callable
+    gqmm_xla: Callable
+    gqmv_pallas: Callable
+    gqmm_pallas: Callable
+
+
+KERNEL_HOOKS: dict[str, KernelHook] = {
+    "gqmv_int8": KernelHook(
+        gqmv_xla=_ref.gqmv_ref, gqmm_xla=_ref.gqmm_ref,
+        gqmv_pallas=_pallas.gqmv_pallas, gqmm_pallas=_pallas.gqmm_pallas,
+    ),
+    "gqmv_int4": KernelHook(
+        gqmv_xla=_ref.gqmv_int4_ref, gqmm_xla=_ref.gqmm_int4_ref,
+        gqmv_pallas=_pallas.gqmv_int4_pallas, gqmm_pallas=_pallas.gqmm_int4_pallas,
+    ),
+}
+
+
+def _hook(kernel: str) -> KernelHook:
+    try:
+        return KERNEL_HOOKS[kernel]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel hook {kernel!r} (a QuantFormat named a hook with "
+            f"no KERNEL_HOOKS row); registered: {sorted(KERNEL_HOOKS)}"
+        ) from None
+
+
+@partial(jax.jit, static_argnames=("group_size", "impl", "kernel"))
 def gqmv(
     wq: jax.Array,
     ws: jax.Array,
@@ -38,17 +84,22 @@ def gqmv(
     *,
     group_size: int,
     impl: str = "auto",
+    kernel: str = "gqmv_int8",
 ) -> jax.Array:
-    """out (m,) = groupwise-quantized W (m,n) @ x (n,). Paper Alg. 1/3."""
+    """out (m,) = groupwise-quantized W (m,n) @ x (n,). Paper Alg. 1/3.
+
+    ``wq`` is the storage array of the format that owns ``kernel`` (plain
+    int8 rows for the default hook, packed nibbles for ``gqmv_int4``)."""
     impl = _resolve(impl)
+    hook = _hook(kernel)
     if impl == "xla":
-        return _ref.gqmv_ref(wq, ws, xq, xs, group_size=group_size)
-    return _pallas.gqmv_pallas(
+        return hook.gqmv_xla(wq, ws, xq, xs, group_size=group_size)
+    return hook.gqmv_pallas(
         wq, ws, xq, xs, group_size=group_size, interpret=(impl == "interpret")
     )
 
 
-@partial(jax.jit, static_argnames=("group_size", "impl"))
+@partial(jax.jit, static_argnames=("group_size", "impl", "kernel"))
 def gqmm(
     wq: jax.Array,
     ws: jax.Array,
@@ -57,12 +108,14 @@ def gqmm(
     *,
     group_size: int,
     impl: str = "auto",
+    kernel: str = "gqmv_int8",
 ) -> jax.Array:
     """out (b, m) = batched GQMV; b = tokens for prefill / batch for decode."""
     impl = _resolve(impl)
+    hook = _hook(kernel)
     if impl == "xla":
-        return _ref.gqmm_ref(wq, ws, xq, xs, group_size=group_size)
-    return _pallas.gqmm_pallas(
+        return hook.gqmm_xla(wq, ws, xq, xs, group_size=group_size)
+    return hook.gqmm_pallas(
         wq, ws, xq, xs, group_size=group_size, interpret=(impl == "interpret")
     )
 
@@ -70,20 +123,23 @@ def gqmm(
 def quantized_matmul(
     x: jax.Array, w: QuantizedTensor, *, impl: str = "auto"
 ) -> jax.Array:
-    """y = x @ dequant(w).T with run-time activation quantization (W8A8).
+    """y = x @ dequant(w).T with run-time int8 activation quantization.
 
-    ``x`` is float (..., n); weights are a QuantizedTensor (m, n) with groups
-    along n. Returns float32 (..., m). This is the composable entry point the
-    model layers use (paper Alg. 2: "RMSNorm and quantize x; kernel1(...)").
+    ``x`` is float (..., n); weights are a QuantizedTensor (m, n logical)
+    in ANY registered format with groups along n. Returns float32 (..., m).
+    This is the composable entry point the model layers use (paper Alg. 2:
+    "RMSNorm and quantize x; kernel1(...)"); the format's kernel hook picks
+    the matching GQMV/GQMM pair.
     """
+    fmt = get_format(w.fmt)
     xq = quantize_activation(x, group_size=w.group_size)
     lead = x.shape[:-1]
     if lead == ():
         out = gqmv(w.qvalues, w.scales, xq.qvalues, xq.scales,
-                   group_size=w.group_size, impl=impl)
+                   group_size=w.group_size, impl=impl, kernel=fmt.kernel)
         return out
     flat_q = xq.qvalues.reshape(-1, x.shape[-1])
     flat_s = xq.scales.reshape(-1, xq.scales.shape[-1])
     out = gqmm(w.qvalues, w.scales, flat_q, flat_s,
-               group_size=w.group_size, impl=impl)
+               group_size=w.group_size, impl=impl, kernel=fmt.kernel)
     return out.reshape(*lead, w.shape[0])

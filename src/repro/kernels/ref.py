@@ -20,7 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantizedTensor
+from repro.core.quant import QuantizedTensor, unpack_int4
 
 
 @partial(jax.jit, static_argnames=("group_size",))
@@ -60,6 +60,55 @@ def gqmm_ref(
     xg = xq.reshape(b, ng, group_size).astype(jnp.int32)
     group_sums = jnp.einsum("mgk,bgk->bmg", wg, xg)             # int32
     scaled = group_sums.astype(jnp.float32) * ws[None] * xs[:, None, :]
+    return jnp.sum(scaled, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def gqmv_int4_ref(
+    wp: jax.Array,   # int8 packed (m, n // 2) — two nibbles per byte
+    ws: jax.Array,   # float32 (m, n // GS)
+    xq: jax.Array,   # int8 (n,) — activations stay int8 (W4A8)
+    xs: jax.Array,   # float32 (n // GS,)
+    *,
+    group_size: int,
+) -> jax.Array:
+    """Packed-int4 GQMV oracle: unpack nibbles to int8, then Alg. 1 math.
+
+    The group sums are exact integers either way; the fp32 stage uses the
+    COMBINED scale ``group_sums * (ws * xs)`` — the same association the
+    Pallas kernels use — so on single-n-block shapes the interpret-mode
+    kernel reproduces this oracle bit-for-bit (multi-block accumulation
+    reassociates the cross-group sum and matches to fp32 rounding).
+    """
+    wq = unpack_int4(wp)
+    m, n = wq.shape
+    ng = n // group_size
+    wg = wq.reshape(m, ng, group_size).astype(jnp.int32)
+    xg = xq.reshape(ng, group_size).astype(jnp.int32)
+    group_sums = jnp.einsum("mgk,gk->mg", wg, xg)               # int32 (m, ng)
+    scaled = group_sums.astype(jnp.float32) * (ws * xs[None, :])
+    return jnp.sum(scaled, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def gqmm_int4_ref(
+    wp: jax.Array,   # int8 packed (m, n // 2)
+    ws: jax.Array,   # float32 (m, n // GS)
+    xq: jax.Array,   # int8 (b, n)
+    xs: jax.Array,   # float32 (b, n // GS)
+    *,
+    group_size: int,
+) -> jax.Array:
+    """Batched packed-int4 GQMV oracle (see gqmv_int4_ref)."""
+    wq = unpack_int4(wp)
+    m, n = wq.shape
+    b = xq.shape[0]
+    ng = n // group_size
+    wg = wq.reshape(m, ng, group_size).astype(jnp.int32)
+    xg = xq.reshape(b, ng, group_size).astype(jnp.int32)
+    group_sums = jnp.einsum("mgk,bgk->bmg", wg, xg)             # int32
+    # same association as the Pallas kernel: (sums * xs) * ws
+    scaled = (group_sums.astype(jnp.float32) * xs[:, None, :]) * ws[None]
     return jnp.sum(scaled, axis=-1)
 
 

@@ -82,11 +82,14 @@ def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh):
                   jax.tree.map(lambda _: NamedSharding(mesh, P()), {"loss": 0, "grad_norm": 0, "lr": 0}))
         return step_fn, (params, opt, batch), in_sh, out_sh, (0, 1), params
 
-    # serving cells run the paper's W8A8 weights
+    # serving cells run quantized weights in the config's format (paper
+    # default W8A8; packed/mixed formats validate their shard geometry)
     params = jax.eval_shape(model.init, key)
     qparams = jax.eval_shape(
-        lambda p: quantize_params(p, cfg.group_size, tp=mesh.shape["model"]), params
+        lambda p: quantize_params(p, cfg.group_size, tp=mesh.shape["model"],
+                                  formats=cfg.quant_format), params
     )
+    shd.validate_quant_partition(qparams, mesh, mode="serve")
     qp_specs = shd.param_specs(qparams, mesh, "serve")
     qp_sh = shd.shardings(qp_specs, mesh)
 

@@ -1,7 +1,9 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Quantizes the weights with the paper's group-wise W8A8 PTQ, then serves a
-batch of requests (greedy by default, like the paper's SQuAD evaluation).
+Quantizes the weights with group-wise PTQ — the paper's W8A8 by default,
+or any registry format / mixed-precision policy via --quantize-format —
+then serves a batch of requests (greedy by default, like the paper's SQuAD
+evaluation).
 """
 
 from __future__ import annotations
@@ -13,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policy import format_breakdown
 from repro.models.registry import build, load_config
 from repro.serving.engine import InferenceEngine
 
@@ -25,7 +28,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=64, help="tokens to generate")
     ap.add_argument("--no-quantize", action="store_true",
-                    help="fp32 'PS baseline' instead of W8A8")
+                    help="fp32 'PS baseline' instead of quantized weights")
+    ap.add_argument("--quantize-format", default=None,
+                    help="registry format (int8, int4) or policy preset "
+                         "(mixed); default: the arch config's quant_format")
     ap.add_argument("--sampler", default="greedy", choices=["greedy", "top_p"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ragged", action="store_true",
@@ -47,10 +53,15 @@ def main(argv=None):
 
         # ragged prompts are padded up to power-of-two buckets
         cache_len = max(cache_len, bucket_length(args.prompt_len))
+    quantize: bool | str = not args.no_quantize
+    if quantize and args.quantize_format is not None:
+        quantize = args.quantize_format
     engine = InferenceEngine(model, params, cache_len=cache_len,
-                             quantize=not args.no_quantize)
+                             quantize=quantize)
+    breakdown = format_breakdown(engine.params)
     print(f"arch: {cfg.arch_id}  quantized bytes fraction: "
-          f"{engine.quantized_fraction:.3f}")
+          f"{engine.quantized_fraction:.3f}  "
+          + "  ".join(f"{k}: {v / 1e6:.2f}MB" for k, v in sorted(breakdown.items())))
 
     rng = np.random.default_rng(args.seed)
 

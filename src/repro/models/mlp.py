@@ -26,7 +26,7 @@ def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
 
 
 def mlp_forward(p, x):
-    f = p["w2"].shape[-1]  # works for both arrays and QuantizedTensor
+    f = p["w2"].shape[-1]  # QuantizedTensor.shape is the LOGICAL shape
     y13 = linear(p["w13"], x)
     y13 = logical.constrain(y13, *(["dp"] + [None] * (y13.ndim - 2) + ["tp"]))
     gate, up = split_fused(y13, (f, f))

@@ -1,9 +1,11 @@
-"""Inference engine: prefill + scanned decode with W8A8 or float weights.
+"""Inference engine: prefill + scanned decode with quantized or float weights.
 
 Mirrors the paper's serving structure (Alg. 2): the "transformer controller"
 is the jitted scan below, the quantized weights feed GQMV/GQMM via the
 linear() dispatch, and batch-1 real-time decoding is the faithful setting
-(batched decode is the TPU-native generalization).
+(batched decode is the TPU-native generalization). The weight format —
+uniform int8 (paper W8A8), packed int4, or a per-layer-class mix — is
+selected through the ``quantize`` argument (core/policy.py format maps).
 
 Fault-tolerance hooks: ``snapshot()``/``restore()`` expose the generation
 state (cache + position + tokens) so a preempted decode can resume on a
@@ -14,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -35,18 +37,29 @@ class GenerationResult:
 class InferenceEngine:
     """Uniform-length batched generation over any registry Model.
 
-    quantize=True applies the paper's PTQ (W8A8 group-wise) to the weights;
-    quantize=False is the "PS baseline" (same math, float weights).
+    ``quantize`` selects the PTQ applied to the weights:
+
+      False          no quantization — the fp32 "PS baseline"
+      True           the config's ``quant_format`` (default "int8", the
+                     paper's group-wise W8A8)
+      "int8"/"int4"  one registry format uniformly (core/quant.py)
+      "mixed"        the per-layer-class preset: embeddings/classifier int8,
+                     attention/FFN projections packed int4
+      {class: fmt}   an explicit layer-class -> format map
+                     (core/policy.py ``resolve_format_map``)
     """
 
     def __init__(self, model: Model, params, *, cache_len: int,
-                 quantize: bool = False, tp: int = 1, eos_id: int | None = None):
+                 quantize: bool | str | Mapping[str, str | None] = False,
+                 tp: int = 1, eos_id: int | None = None):
         self.model = model
         self.cfg = model.cfg
         self.cache_len = cache_len
         self.eos_id = eos_id
-        if quantize:
-            params = quantize_params(params, self.cfg.group_size, tp=tp)
+        if quantize is not False and quantize is not None:
+            formats = self.cfg.quant_format if quantize is True else quantize
+            params = quantize_params(params, self.cfg.group_size, tp=tp,
+                                     formats=formats)
         self.params = params
         self.quantized_fraction = quantized_fraction(params)
         self._generate_jit: dict[tuple, Callable] = {}

@@ -9,10 +9,15 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.quant import quantize_activation, quantize_groupwise
+from repro.core.quant import quantize_activation, quantize_groupwise, quantize_int4
 from repro.kernels import ops
-from repro.kernels.gqmv import gqmm_pallas, gqmv_pallas
-from repro.kernels.ref import gqmm_ref, gqmv_ref
+from repro.kernels.gqmv import (
+    gqmm_int4_pallas,
+    gqmm_pallas,
+    gqmv_int4_pallas,
+    gqmv_pallas,
+)
+from repro.kernels.ref import gqmm_int4_ref, gqmm_ref, gqmv_int4_ref, gqmv_ref
 
 
 def _mk(m, n, gs, seed=0, b=None):
@@ -122,3 +127,92 @@ def test_property_gqmv_pallas_vs_ref(mi, gi, gs, seed):
                       group_size=gs, interpret=True)
     want = gqmv_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=gs)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# packed int4 (unpack-in-VMEM kernels vs XLA oracle)
+# ---------------------------------------------------------------------------
+
+def _mk4(m, n, gs, seed=0, b=None):
+    rng = np.random.default_rng(seed)
+    w = quantize_int4(jnp.asarray(rng.normal(size=(m, n)).astype(np.float32)), gs)
+    shape = (n,) if b is None else (b, n)
+    x = quantize_activation(
+        jnp.asarray(rng.normal(size=shape).astype(np.float32)), gs
+    )
+    return w, x
+
+
+@pytest.mark.parametrize("m,n,gs", [
+    (8, 64, 32),
+    (128, 256, 256),
+    (256, 1024, 256),     # single n-block (bn=1024): bit-exact regime
+    (96, 384, 128),
+])
+def test_gqmv_int4_interpret_exact_vs_ref(m, n, gs):
+    """Single-n-block shapes: the interpret-mode kernel and the XLA oracle
+    share the combined-scale association -> bitwise-equal outputs."""
+    w, x = _mk4(m, n, gs, seed=m + n)
+    got = gqmv_int4_pallas(w.qvalues, w.scales, x.qvalues, x.scales,
+                           group_size=gs, interpret=True)
+    want = gqmv_int4_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=gs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,n,gs", [
+    (2048, 5632, 256),    # paper kernel2 dims; multi-n-block accumulation
+    (256, 2048, 256),
+])
+def test_gqmv_int4_multiblock_matches_ref(m, n, gs):
+    w, x = _mk4(m, n, gs, seed=m + n)
+    got = gqmv_int4_pallas(w.qvalues, w.scales, x.qvalues, x.scales,
+                           group_size=gs, interpret=True)
+    want = gqmv_int4_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n,gs,b", [
+    (64, 128, 32, 4),
+    (128, 512, 256, 16),
+    (2048, 5632, 256, 2),
+    (32, 256, 64, 1),
+])
+def test_gqmm_int4_matches_ref(m, n, gs, b):
+    w, x = _mk4(m, n, gs, seed=m + n + b, b=b)
+    got = gqmm_int4_pallas(w.qvalues, w.scales, x.qvalues, x.scales,
+                           group_size=gs, interpret=True)
+    want = gqmm_int4_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=1e-4)
+
+
+def test_int4_dispatch_xla_equals_interpret():
+    w, x = _mk4(128, 512, 128, seed=5)
+    a = ops.gqmv(w.qvalues, w.scales, x.qvalues, x.scales,
+                 group_size=128, impl="xla", kernel="gqmv_int4")
+    b = ops.gqmv(w.qvalues, w.scales, x.qvalues, x.scales,
+                 group_size=128, impl="interpret", kernel="gqmv_int4")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_int4_quantized_matmul_approximates_fp32():
+    """End-to-end dispatch through the registry's kernel hook: int4 GQMV
+    approximates the fp32 matmul within dequantization error."""
+    rng = np.random.default_rng(13)
+    wf = rng.normal(scale=0.05, size=(256, 1024)).astype(np.float32)
+    xf = rng.normal(size=(1024,)).astype(np.float32)
+    w = quantize_int4(jnp.asarray(wf), 256)
+    got = ops.quantized_matmul(jnp.asarray(xf), w, impl="interpret")
+    exact = wf @ xf
+    rel = np.linalg.norm(np.asarray(got) - exact) / np.linalg.norm(exact)
+    assert rel < 0.2, rel   # ~17x the int8 error budget (4 bits vs 8)
+
+
+def test_int4_quantized_matmul_batched_shapes():
+    rng = np.random.default_rng(14)
+    w = quantize_int4(jnp.asarray(rng.normal(size=(96, 256)).astype(np.float32)), 64)
+    y1 = ops.quantized_matmul(jnp.ones((256,)), w, impl="xla")
+    y3 = ops.quantized_matmul(jnp.ones((2, 3, 256)), w, impl="xla")
+    assert y1.shape == (96,)
+    assert y3.shape == (2, 3, 96)
+    # GQMV and GQMM oracles associate the fp32 scale product differently
+    np.testing.assert_allclose(np.asarray(y3[0, 0]), np.asarray(y1), rtol=5e-4, atol=1e-4)

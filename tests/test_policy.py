@@ -1,4 +1,5 @@
-"""PTQ policy tests: per-leaf group sizes, TP shard alignment, exclusions."""
+"""PTQ policy tests: per-leaf group sizes, TP shard alignment, exclusions,
+layer-class format maps (mixed precision)."""
 
 import jax
 import jax.numpy as jnp
@@ -6,12 +7,16 @@ import numpy as np
 import pytest
 
 from repro.core.policy import (
+    format_breakdown,
+    leaf_class,
     leaf_group_size,
     quantize_params,
     quantized_fraction,
+    resolve_format_map,
     should_quantize,
 )
 from repro.core.quant import QuantizedTensor
+from repro.core.treepath import path_str
 
 
 def test_leaf_group_size_plain():
@@ -68,3 +73,97 @@ def test_quantize_params_under_eval_shape():
     assert q["w13"].qvalues.dtype == jnp.int8
     assert q["w13"].scales.shape == (512, 2)
     assert q["norm"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# layer classes and format maps
+# ---------------------------------------------------------------------------
+
+def test_leaf_class():
+    assert leaf_class("embed") == "embed"
+    assert leaf_class("classifier") == "classifier"
+    assert leaf_class("layers/attn/wqkv") == "attn"
+    assert leaf_class("dec_layers/cross/wkv") == "attn"
+    assert leaf_class("mamba_layers/mamba/win") == "attn"
+    assert leaf_class("layers/wr") == "attn"                  # rwkv mixer
+    assert leaf_class("layers/mlp/w2") == "ffn"
+    assert leaf_class("layers/mlp/experts/w13") == "ffn"
+    assert leaf_class("layers/wff2") == "ffn"                 # rwkv channel-mix
+    # qvalues/scales suffixes classify like their parent weight
+    assert leaf_class("layers/attn/wqkv/qvalues") == "attn"
+    assert leaf_class("layers/mlp/w2/scales") == "ffn"
+
+
+def test_resolve_format_map():
+    uni = resolve_format_map("int4")
+    assert set(uni.values()) == {"int4"}
+    mixed = resolve_format_map("mixed")
+    assert mixed["embed"] == "int8" and mixed["attn"] == "int4"
+    partial = resolve_format_map({"attn": "int4", "classifier": None})
+    assert partial["attn"] == "int4"
+    assert partial["classifier"] is None
+    assert partial["ffn"] == "int8"   # unspecified -> paper baseline
+    with pytest.raises(ValueError, match="unknown quant format"):
+        resolve_format_map("int3")
+    with pytest.raises(ValueError, match="unknown layer classes"):
+        resolve_format_map({"attnn": "int4"})
+    with pytest.raises(TypeError):
+        resolve_format_map(4)
+
+
+def _leaf_formats(qp) -> dict[str, str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        qp, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    )
+    return {path_str(p): l.fmt for p, l in flat if isinstance(l, QuantizedTensor)}
+
+
+def test_mixed_policy_golden_tinyllama():
+    """Golden: the mixed map on the FULL tinyllama-1.1b tree assigns int8 to
+    embeddings/classifier and packed int4 to every attention/FFN projection;
+    norms stay float (eval_shape — no 1.1B-param materialization)."""
+    from repro.models.registry import build, load_config
+
+    cfg = load_config("tinyllama-1.1b")
+    model = build(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    qp = jax.eval_shape(
+        lambda p: quantize_params(p, cfg.group_size, formats="mixed"), params
+    )
+    fmts = _leaf_formats(qp)
+    assert fmts == {
+        "embed": "int8",
+        "classifier": "int8",
+        "layers/attn/wqkv": "int4",
+        "layers/attn/wo": "int4",
+        "layers/mlp/w13": "int4",
+        "layers/mlp/w2": "int4",
+    }
+    # packed storage: attn/ffn qvalues halve their trailing dim
+    assert qp["layers"]["attn"]["wqkv"].qvalues.shape[-1] == cfg.d_model // 2
+    assert qp["embed"].qvalues.shape[-1] == cfg.d_model
+    # norms survive untouched
+    assert not isinstance(qp["final_norm"], QuantizedTensor)
+
+
+def test_quantized_fraction_format_aware():
+    """Packed int4 must report its true (halved) storage, not int8 bytes."""
+    params = {"attn": {"wo": jnp.ones((64, 256))}, "norm": jnp.ones((256,))}
+    q8 = quantize_params(params, 256, formats="int8")
+    q4 = quantize_params(params, 256, formats="int4")
+    w8 = 64 * 256 + 4 * 64
+    w4 = 64 * 128 + 4 * 64
+    f32 = 256 * 4
+    assert abs(quantized_fraction(q8) - w8 / (w8 + f32)) < 1e-6
+    assert abs(quantized_fraction(q4) - w4 / (w4 + f32)) < 1e-6
+    assert format_breakdown(q4) == {"int4": w4, "float": f32}
+
+
+def test_int4_respects_tp_alignment():
+    """Row-parallel leaves keep whole groups per shard in packed storage."""
+    params = {"wo": jnp.ones((64, 448 * 16))}
+    qp = quantize_params(params, 256, tp=16, formats="int4")
+    assert qp["wo"].fmt == "int4"
+    assert qp["wo"].group_size == 64          # per-shard contraction 448 -> 64
+    # per-shard packed chunk (448/2 = 224 bytes) holds exactly 7 groups of 32
+    assert (qp["wo"].qvalues.shape[-1] // 16) % (64 // 2) == 0
