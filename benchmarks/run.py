@@ -7,6 +7,11 @@
   kernels -> kernel_bench    (GQMV/GQMM kernel-shape sweep, interpret mode)
   ragged -> throughput       (ragged trace: bucket-serial vs continuous slots)
   quant -> quant_bench       (per-format bytes/weight, decode us/call, errors)
+  paged -> throughput        (paged vs contiguous slots: tok/s + resident KV
+                              bytes; exits non-zero if paged residency does
+                              not beat the contiguous footprint)
+
+A suite returning False marks the run failed (exit 1).
 """
 
 import os
@@ -38,15 +43,21 @@ def main() -> int:
         "kernels": kernel_bench.run,
         "ragged": throughput.run_ragged,
         "quant": quant_bench.run,
+        "paged": throughput.run_paged,
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; valid: {', '.join(suites)}", file=sys.stderr)
         return 2
     print("name,us_per_call,derived")
+    failed = []
     for name, fn in suites.items():
         if only and only != name:
             continue
-        fn()
+        if fn() is False:
+            failed.append(name)
+    if failed:
+        print(f"failed suites: {', '.join(failed)}", file=sys.stderr)
+        return 1
     return 0
 
 

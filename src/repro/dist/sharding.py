@@ -190,12 +190,18 @@ def cache_spec(name: str, shape, *, mesh, batch: int) -> P:
     for KV caches, heads for RWKV/SSM states) -> model. The batch-1
     long-context case spreads the sequence over the FULL mesh instead —
     there is no batch to shard, and a 512k cache is the dominant tensor.
-    ``name`` is the leaf name (unused by the positional rule; kept so
-    family-specific overrides stay one keyed branch away)."""
-    del name
+    ``name`` is the leaf name: ``*_pages`` leaves are the paged block pool
+    (L, NB, BS, KV, hd) — kv heads -> model, and the BLOCK axis is NEVER
+    sharded (blocks migrate between requests through the block tables;
+    splitting the pool would turn every table lookup into a cross-shard
+    gather and every block free/alloc into a resharding event)."""
     sizes = _sizes(mesh)
     ndim = len(shape)
     spec: list[Any] = [None] * ndim
+    if name.endswith("_pages"):
+        if ndim >= 2:
+            spec[-2] = _fit(shape[-2], MODEL_AXIS, sizes)
+        return P(*spec)
     # Locate the batch dim. Every cache leaf leads with at least one stack
     # axis (layers or layer-groups), so the search starts at index 1 — a
     # leading L equal to the batch size must not be mistaken for the batch.

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.core.quant import QuantizedTensor, get_format, quantize_activation
 from repro.kernels import gqmv as _pallas
+from repro.kernels import paged_attn as _paged
 from repro.kernels import ref as _ref
 
 
@@ -117,6 +118,38 @@ def gqmm(
         return hook.gqmm_xla(wq, ws, xq, xs, group_size=group_size)
     return hook.gqmm_pallas(
         wq, ws, xq, xs, group_size=group_size, interpret=(impl == "interpret")
+    )
+
+
+def paged_attention(
+    q: jax.Array,            # (b, KV, G, hd)
+    k_pages: jax.Array,      # (NB, BS, KV, hd) one layer's block pool
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (b, MB) int32
+    pos: jax.Array,          # (b,) int32
+    k_new: jax.Array,        # (b, KV, hd) current-token row (uncommitted)
+    v_new: jax.Array,
+    mask: jax.Array,         # (b, MB * BS) additive decode mask
+    *,
+    scale: float,
+    softcap: float | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """One paged decode-attention step -> ctx (b, KV*G*hd).
+
+    Same backend dispatch as gqmv/gqmm: the XLA path gathers the virtual
+    sequence through the block table (bit-exact vs the contiguous deferred
+    decode on identity tables); the Pallas kernel streams only the live
+    physical blocks HBM->VMEM via scalar-prefetch index maps."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return _ref.paged_attention_ref(
+            q, k_pages, v_pages, block_table, pos, k_new, v_new, mask,
+            scale=scale, softcap=softcap,
+        )
+    return _paged.paged_attention_pallas(
+        q, k_pages, v_pages, block_table, pos, k_new, v_new, mask,
+        scale=scale, softcap=softcap, interpret=(impl == "interpret"),
     )
 
 

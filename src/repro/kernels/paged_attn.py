@@ -1,0 +1,133 @@
+"""Pallas TPU paged-attention decode kernel (block-table gather).
+
+The paged KV pool keeps one layer's cache as (NB, BS, KV, hd) fixed-size
+blocks; each decode row owns a BLOCK TABLE of physical block ids. The XLA
+oracle (kernels/ref.py::paged_attention_ref) materializes the gathered
+(b, T, KV, hd) virtual sequence; this kernel never does — the block table
+rides in as a scalar-prefetch argument and the BlockSpec index maps DMA each
+row's *physical* K/V blocks HBM->VMEM directly, so HBM traffic is the live
+blocks only (the same streaming argument as kernels/flash_attn.py, applied
+to the paged layout).
+
+Grid: (b, KV, MB) — one program per (row, kv head, virtual block), online
+softmax state in VMEM scratch across the MB dimension. The current token's
+K/V (not yet committed to the pool) is handled in-kernel: its score
+overwrites the virtual column at ``pos`` and its value row replaces the
+stale pool row, so recycled/sink blocks never leak. Validated in interpret
+mode against the oracle (tests/test_paged.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
+                  mask_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, softcap: float | None, bs: int, nb: int):
+    j = pl.program_id(2)                               # virtual block index
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)             # (bs, hd)
+    k_new = kn_ref[0, 0].astype(jnp.float32)           # (hd,)
+    v_new = vn_ref[0, 0].astype(jnp.float32)           # (hd,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (g, bs)
+
+    # current token: its pool slot is committed AFTER attention, so the row
+    # at ``pos`` holds stale data — substitute the fresh K score / V row
+    col = pos_ref[pl.program_id(0)] - j * bs
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    at_cur = iota == col                               # (1, bs); off-block: none
+    cur = (q * k_new[None, :]).sum(axis=-1)            # (g,)
+    s = jnp.where(at_cur, cur[:, None], s)
+    v = jnp.where(at_cur.reshape(bs, 1), v_new[None, :], v)
+
+    s = s * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + mask_ref[0, 0].astype(jnp.float32)[None, :]   # (1->g, bs) additive
+
+    m_prev, l_prev = m_scr[...], l_scr[...]            # (g, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                             # (g, bs)
+    l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jax.Array,            # (b, KV, G, hd)
+    k_pages: jax.Array,      # (NB, BS, KV, hd)
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (b, MB) int32
+    pos: jax.Array,          # (b,) int32
+    k_new: jax.Array,        # (b, KV, hd)
+    v_new: jax.Array,
+    mask: jax.Array,         # (b, MB * BS) additive float32
+    *,
+    scale: float,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kv, g, hd = q.shape
+    bs = k_pages.shape[1]
+    mb = block_table.shape[1]
+    mask = mask.reshape(b, mb, bs)
+
+    def kv_index(ib, ik, j, bt, pos_s):
+        # scalar-prefetched block table picks the physical block to DMA
+        # (index maps receive grid indices first, then the scalar refs)
+        return (bt[ib, j], 0, ik, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # block_table, pos
+        grid=(b, kv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), kv_index),
+            pl.BlockSpec((1, bs, 1, hd), kv_index),
+            pl.BlockSpec((1, 1, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0)),
+            pl.BlockSpec((1, 1, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0)),
+            pl.BlockSpec((1, 1, bs), lambda ib, ik, j, bt, ps: (ib, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max
+            pltpu.VMEM((g, 1), jnp.float32),     # running denominator
+            pltpu.VMEM((g, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, scale=scale, softcap=softcap,
+                               bs=bs, nb=mb)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), pos.astype(jnp.int32),
+      q, k_pages, v_pages, k_new, v_new, mask)
+    return out.reshape(b, kv * g * hd)

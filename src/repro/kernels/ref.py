@@ -112,6 +112,59 @@ def gqmm_int4_ref(
     return jnp.sum(scaled, axis=-1)
 
 
+def paged_attention_ref(
+    q: jax.Array,            # (b, KV, G, hd) decode-step queries, grouped
+    k_pages: jax.Array,      # (NB, BS, KV, hd) one layer's block pool
+    v_pages: jax.Array,      # (NB, BS, KV, hd)
+    block_table: jax.Array,  # (b, MB) int32 physical block per virtual block
+    pos: jax.Array,          # (b,) int32 current decode position per row
+    k_new: jax.Array,        # (b, KV, hd) current token's K (not yet committed)
+    v_new: jax.Array,        # (b, KV, hd)
+    mask: jax.Array,         # (b, T) additive decode mask, T = MB * BS
+    *,
+    scale: float,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Block-table gather attention oracle for one decode step.
+
+    Mirrors ``gqa_decode_deferred``'s arithmetic exactly — same einsums, same
+    operation order — over a gathered virtual sequence: row i's keys live in
+    pool blocks ``block_table[i]``, virtual position t maps to physical slot
+    ``(block_table[i, t // BS], t % BS)``. The current token is handled
+    explicitly (its score overwrites column ``pos``; its value is added after
+    zeroing the attention weight at ``pos``), so STALE data in recycled or
+    sink blocks is harmless: every unwritten column is either masked
+    (``k > pos``) or overwritten. With an identity block table over a
+    reshaped contiguous cache this is bit-exact against the contiguous
+    deferred decode path (tests/test_paged.py).
+
+    Returns ctx (b, KV * G * hd) in the contiguous path's head order.
+    """
+    b, kv, g, hd = q.shape
+    nb, bs = k_pages.shape[:2]
+    mb = block_table.shape[1]
+    # gather (b, MB, BS, KV, hd) -> virtual (b, T, KV, hd)
+    k = k_pages[block_table].reshape(b, mb * bs, kv, hd)
+    v = v_pages[block_table].reshape(b, mb * bs, kv, hd)
+    scores = jnp.einsum("bkgh,btkh->bkgt", q, k).astype(jnp.float32)
+    cur = jnp.einsum("bkgh,bkh->bkg", q, k_new).astype(jnp.float32)
+    barng = jnp.arange(b)
+    scores = scores.at[barng, :, :, pos].set(cur)
+    scores = scores * scale
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = scores + mask[:, None, None, :]
+    attn = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    # zero the current column before the value gather: the pool slot at pos
+    # holds stale data (it is committed AFTER attention); the real
+    # contribution is the explicit k_new/v_new term
+    attn_cur = attn[barng, :, :, pos][..., None]                 # (b,KV,G,1)
+    attn_z = attn.at[barng, :, :, pos].set(0.0)
+    ctx = jnp.einsum("bkgt,btkh->bkgh", attn_z, v)
+    ctx = ctx + attn_cur * v_new[:, :, None, :]
+    return ctx.reshape(b, kv * g * hd)
+
+
 def gqmv_from_qt(w: QuantizedTensor, x: QuantizedTensor) -> jax.Array:
     assert w.group_size == x.group_size
     return gqmv_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=w.group_size)

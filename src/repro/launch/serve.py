@@ -33,13 +33,24 @@ def main(argv=None):
                     help="registry format (int8, int4) or policy preset "
                          "(mixed); default: the arch config's quant_format")
     ap.add_argument("--sampler", default="greedy", choices=["greedy", "top_p"])
+    ap.add_argument("--top-p", type=float, default=0.9,
+                    help="nucleus mass for --sampler top_p")
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="softmax temperature for --sampler top_p")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ragged", action="store_true",
                     help="serve a mixed-length trace through serve_ragged "
-                         "(continuous-batching scheduler where supported)")
+                         "(paged/continuous-batching scheduler where supported)")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode slots for --ragged continuous batching")
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "paged", "continuous", "bucketed"],
+                    help="--ragged scheduler (auto prefers paged)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="KV block size (tokens) for the paged scheduler")
     args = ap.parse_args(argv)
+    sampler_kw = ({"p": args.top_p, "temperature": args.temperature}
+                  if args.sampler == "top_p" else None)
 
     cfg = load_config(args.arch)
     if args.reduced:
@@ -71,12 +82,14 @@ def main(argv=None):
         lengths = rng.integers(2, args.prompt_len + 1, size=(args.batch,))
         reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=(n,)).tolist())
                 for i, n in enumerate(lengths)]
-        mode = "continuous" if engine.model.supports_lengths else "bucketed"
-        serve_ragged(engine, reqs, args.steps, sampler=args.sampler,
-                     slots=args.slots, mode=mode)        # warm/compile
+        from repro.serving.batching import resolve_mode
+
+        mode = resolve_mode(engine, args.mode)    # resolved for the report
+        kw = dict(sampler=args.sampler, sampler_kw=sampler_kw,
+                  slots=args.slots, mode=mode, block_size=args.block_size)
+        serve_ragged(engine, reqs, args.steps, **kw)     # warm/compile
         t0 = time.perf_counter()
-        out = serve_ragged(engine, reqs, args.steps, sampler=args.sampler,
-                           slots=args.slots, mode=mode,
+        out = serve_ragged(engine, reqs, args.steps, **kw,
                            key=jax.random.PRNGKey(args.seed + 1))
         hot = time.perf_counter() - t0
         toks = sum(r.tokens.shape[0] for r in out)
@@ -94,12 +107,14 @@ def main(argv=None):
 
     t0 = time.perf_counter()
     res = engine.generate(batch, args.steps, sampler=args.sampler,
+                          sampler_kw=sampler_kw,
                           key=jax.random.PRNGKey(args.seed))
     jax.block_until_ready(res.tokens)
     warm = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     res = engine.generate(batch, args.steps, sampler=args.sampler,
+                          sampler_kw=sampler_kw,
                           key=jax.random.PRNGKey(args.seed + 1))
     jax.block_until_ready(res.tokens)
     hot = time.perf_counter() - t0

@@ -103,6 +103,19 @@ def commit_layers_bt(cache, rows, pos):
     )
 
 
+def commit_layers_paged(pages, rows, block_table, pos):
+    """Deferred paged commit: write rows (L, b, KV, hd) into the block pool
+    (L, NB, BS, KV, hd) at each row's (physical block, offset) for virtual
+    position ``pos`` (b,). One scatter for all layers. The block index is
+    clamped to the table width so a frozen/overflowed position can never
+    escape its own table row (live positions are host-asserted in range)."""
+    bs = pages.shape[2]
+    b = rows.shape[1]
+    idx = jnp.minimum(pos // bs, block_table.shape[1] - 1)
+    phys = block_table[jnp.arange(b), idx]                    # (b,)
+    return pages.at[:, phys, pos % bs].set(rows)
+
+
 def commit_layers_bkt(cache, rows, pos):
     """Deferred-decode commit, (L, b, KV, T, ...) layout (kvt / int8 caches)."""
     if jnp.asarray(pos).ndim:
@@ -476,6 +489,40 @@ def gqa_decode_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None,
     else:
         rows = (k_new, v_new)                                            # (b,1,kv,hd)
     return linear(p["wo"], ctx), rows
+
+
+def gqa_decode_paged(p, x, pages, block_table, pos, cfg: ModelConfig, *,
+                     window=None, use_window=None):
+    """Paged decode step: attention over the block pool through each row's
+    block table (kernels/ops.py::paged_attention), current token handled
+    explicitly so the pool is read-only here. x: (b, d_model); pages:
+    (k_pages, v_pages) each (NB, BS, KV, hd); block_table (b, MB);
+    pos (b,) int32 virtual positions. Returns (y, (k_new, v_new)) — the
+    caller commits the rows with commit_layers_paged after the layer scan."""
+    from repro.kernels import ops as _kops
+
+    k_pages, v_pages = pages
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    kv_heads = cfg.num_kv_heads
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x[:, None, :], cfg, _pos_rows(pos, b))
+    g = cfg.num_heads // kv_heads
+    t = block_table.shape[1] * k_pages.shape[1]
+    # pool sharding: kv heads -> model axis; the block axis is NEVER sharded
+    # (blocks migrate between requests; dist/sharding.py `_pages` rule)
+    tp_kv = kv_heads % max(logical.size("tp"), 1) == 0
+    pspec = (None, None, "tp" if tp_kv else None, None)
+    k_pages = logical.constrain(k_pages, *pspec)
+    v_pages = logical.constrain(v_pages, *pspec)
+    qg = q.reshape(b, kv_heads, g, hd)
+    mask = _flag_decode_mask(t, pos, window, use_window)       # (b, t)
+    ctx = _kops.paged_attention(
+        qg, k_pages, v_pages, block_table, pos, k_new[:, 0], v_new[:, 0],
+        mask, scale=_gqa_scale(cfg), softcap=cfg.attn_logit_softcap or None,
+    )
+    ctx = logical.constrain(ctx, "dp", None)
+    return linear(p["wo"], ctx), (k_new[:, 0], v_new[:, 0])
 
 
 # ---------------------------------------------------------------------------

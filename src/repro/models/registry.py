@@ -60,6 +60,14 @@ class Model:
     # backbone, encdec) cannot skip pad tokens mid-recurrence, so the serving
     # front-end batches them by exact length instead.
     supports_lengths: bool = False
+    # Paged-KV contract: the family exposes a block-pool cache
+    # (init_paged_cache(num_blocks, block_size, dtype)) and a block-table
+    # decode step (decode_paged(params, token, cache, block_table, pos)).
+    # GQA decoder_lm families only: the MLA latent cache and the recurrent
+    # families keep their contiguous/stateful layouts.
+    supports_paged: bool = False
+    init_paged_cache: Callable | None = None   # (num_blocks, block_size, dt) -> pool
+    decode_paged: Callable | None = None       # (params, tok, pool, table, pos) -> (logits, pool)
 
 
 def build(cfg: ModelConfig) -> Model:
@@ -77,6 +85,7 @@ def build(cfg: ModelConfig) -> Model:
                 lengths=batch.get("lengths"),
             )
 
+        paged = not cfg.mla
         return Model(
             cfg=cfg,
             init=lambda key: _tf.init_lm(key, cfg),
@@ -85,6 +94,14 @@ def build(cfg: ModelConfig) -> Model:
             prefill=prefill,
             decode=lambda p, tok, cache, pos: _tf.lm_decode(p, tok, cache, pos, cfg),
             supports_lengths=True,
+            supports_paged=paged,
+            init_paged_cache=(
+                (lambda nb, bs, dt: _tf.lm_init_paged_cache(cfg, nb, bs, dt))
+                if paged else None),
+            decode_paged=(
+                (lambda p, tok, cache, table, pos:
+                 _tf.lm_decode_paged(p, tok, cache, table, pos, cfg))
+                if paged else None),
         )
 
     if cfg.model_type == "rwkv6":

@@ -148,6 +148,96 @@ def lm_init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def lm_init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int, dtype):
+    """Block-pool KV cache: (L, NB, BS, KV, hd) leaves named ``*_pages`` so
+    the sharding policy can keep the block axis whole (dist/sharding.py).
+    Block 0 is conventionally the allocator's write-off sink
+    (serving/paged.py); the paged attention path never reads an unmasked
+    stale slot, so pool memory is recycled without zeroing."""
+    if cfg.mla:
+        raise ValueError(
+            f"{cfg.arch_id}: paged KV cache covers the GQA layouts; the MLA "
+            "latent cache keeps the contiguous path (supports_paged=False)"
+        )
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads, hd)
+    return {"k_pages": jnp.zeros(shape, dtype), "v_pages": jnp.zeros(shape, dtype)}
+
+
+def lm_decode_paged(params, token, cache, block_table, pos, cfg: ModelConfig):
+    """One paged decode step. token (b,) int32; cache the ``*_pages`` block
+    pool; block_table (b, MB) int32 physical block ids per virtual block;
+    pos (b,) int32 virtual positions. Returns (logits, new cache).
+
+    Always deferred: the layer scan emits only the new K/V rows, committed
+    after the scan with one scatter at each row's (physical block, offset)
+    (attention.commit_layers_paged). The attention reads the pool through
+    the block table (Pallas kernel on TPU, gather oracle elsewhere)."""
+    if flags.get("kvt_cache_layout") or flags.get("int8_kv_cache"):
+        raise ValueError("paged KV cache supports the base float KV layout "
+                         "(kvt_cache_layout / int8_kv_cache flags off)")
+    pos = jnp.asarray(pos, jnp.int32)
+    if not pos.ndim:
+        pos = jnp.full((token.shape[0],), pos, jnp.int32)
+    x = embedding_lookup(params["embed"], token, cfg.cdtype())
+    if cfg.gemma_norms:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    windows = _layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, use_window, layer_cache = scanned
+        new_cache = {}
+
+        def attn_fn(h):
+            y, (k, v) = attn.gqa_decode_paged(
+                lp["attn"], h, (layer_cache["k_pages"], layer_cache["v_pages"]),
+                block_table, pos, cfg,
+                window=cfg.sliding_window, use_window=use_window,
+            )
+            new_cache["k"], new_cache["v"] = k, v
+            return y
+
+        g = cfg.gemma_norms
+        h = rmsnorm(x, lp["att_norm"], cfg.norm_eps, plus_one=g)
+        a = attn_fn(h)
+        if g:
+            a = rmsnorm(a, lp["post_att_norm"], cfg.norm_eps, plus_one=True)
+        x = x + a
+        h = rmsnorm(x, lp["ffn_norm"], cfg.norm_eps, plus_one=g)
+        if cfg.moe:
+            f = mlpmod.moe_forward(lp["mlp"], h[:, None, :], cfg)[:, 0, :]
+        else:
+            f = mlpmod.mlp_forward(lp["mlp"], h)
+        if g:
+            f = rmsnorm(f, lp["post_ffn_norm"], cfg.norm_eps, plus_one=True)
+        return x + f, new_cache
+
+    x, new_rows = jax.lax.scan(body, x, (params["layers"], windows, cache))
+    new_cache = {
+        "k_pages": attn.commit_layers_paged(cache["k_pages"], new_rows["k"],
+                                            block_table, pos),
+        "v_pages": attn.commit_layers_paged(cache["v_pages"], new_rows["v"],
+                                            block_table, pos),
+    }
+    return _logits(params, x, cfg), new_cache
+
+
+def contiguous_to_paged(cache, block_size: int):
+    """Reshape a contiguous (L, b, T, KV, hd) cache into a block pool plus
+    the identity block tables: row i owns blocks [i*MB, (i+1)*MB). T must be
+    a multiple of ``block_size``. The paged decode over this pool is
+    bit-exact against the contiguous deferred path (tests/test_paged.py)."""
+    k = cache["k"]
+    L, b, t = k.shape[:3]
+    if t % block_size:
+        raise ValueError(f"cache_len {t} not a multiple of block_size {block_size}")
+    mb = t // block_size
+    def pool(leaf):
+        return leaf.reshape(L, b * mb, block_size, *leaf.shape[3:])
+    table = jnp.arange(b * mb, dtype=jnp.int32).reshape(b, mb)
+    return {"k_pages": pool(k), "v_pages": pool(cache["v"])}, table
+
+
 def lm_prefill(params, tokens, cfg: ModelConfig, cache_len: int, frontend_embeds=None,
                lengths=None):
     """Prompt pass: returns (last-position logits, populated cache).

@@ -1,37 +1,45 @@
 """Variable-length request batching for the inference engine.
 
-Real traffic is ragged. Two serving modes, both length-aware:
+Real traffic is ragged. Three serving modes, all length-aware:
 
 - **bucketed** — requests are right-padded to power-of-two buckets and each
   bucket runs one prefill+decode. True lengths ride along in the batch
   (``batch["lengths"]``): prefill masks pad keys, the first token is sampled
   from each row's logits at ``lengths[i]-1``, and decode runs per-request
   position counters, so a padded row decodes exactly like its unpadded self.
-- **continuous** (``SlotScheduler``) — a fixed-width decode batch of slots.
-  Finished slots (EOS or budget exhausted) are refilled from the queue by a
-  single-request prefill written into the slot's cache row, so the decode
-  pipeline stays full across mixed-length traffic instead of draining one
-  bucket at a time. Decode runs in jitted chunks of ``chunk`` steps between
-  admission points (continuous-batching-lite: a slot that finishes mid-chunk
-  idles until the chunk boundary).
+- **continuous** (``SlotScheduler``) — a fixed-width decode batch of slots
+  over per-slot ``cache_len`` cache rows. Finished slots (EOS or budget
+  exhausted) are refilled from the queue by a single-request prefill written
+  into the slot's cache row, so the decode pipeline stays full across
+  mixed-length traffic instead of draining one bucket at a time. Decode runs
+  in jitted chunks of ``chunk`` steps between admission points
+  (continuous-batching-lite: a slot that finishes mid-chunk idles — token
+  and position FROZEN — until the chunk boundary).
+- **paged** (``PagedScheduler``, serving/paged.py) — the block-pool KV cache:
+  per-request block tables, on-demand allocation, block reclaim and queue
+  re-admission at ANY decode step. Token-identical greedy outputs to
+  continuous; resident KV scales with live tokens. ``serve_ragged`` prefers
+  it where the family supports it.
 
 Families whose prefill carries sequential state through every token (rwkv6,
 zamba2's SSM backbone, enc-dec) cannot mask pads out of a recurrence; for
 them the bucketed mode groups by exact length (no pads, always correct) and
-the continuous mode is unavailable.
+the continuous/paged modes are unavailable.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict, deque
+from functools import partial
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.sampling import make_sampler
+from repro.core import flags
+from repro.serving.sampling import make_sampler, sampler_sig
 
 
 @dataclasses.dataclass
@@ -49,6 +57,24 @@ class Request:
 class Response:
     id: int
     tokens: np.ndarray
+    # true generated length: tokens[:length] are real, the rest is padding
+    # (EOS, or 0 when the engine has no eos_id — indistinguishable from a
+    # real vocab-0 token, which is exactly why the length rides along).
+    length: int | None = None
+
+
+def finalize_tokens(toks: list[int], budget: int, eos: int | None):
+    """Trim at EOS, pad to ``budget``; returns (tokens (budget,), true length).
+
+    ``length`` counts the real generated tokens (including the EOS itself);
+    callers must not infer it from the pad value — with ``eos None`` the pad
+    token 0 is a legal vocab id."""
+    t = toks[:budget]
+    if eos is not None and eos in t:
+        t = t[: t.index(eos) + 1]
+    length = len(t)
+    t = t + [eos if eos is not None else 0] * (budget - length)
+    return np.asarray(t, np.int32), length
 
 
 def bucket_length(n: int, *, minimum: int = 8) -> int:
@@ -73,13 +99,15 @@ def pad_bucket(reqs: Sequence[Request], length: int, pad_id: int = 0):
 # ---------------------------------------------------------------------------
 
 def serve_bucketed(engine, requests: Sequence[Request], max_new_tokens: int,
-                   *, sampler: str = "greedy", key=None) -> list[Response]:
+                   *, sampler: str = "greedy", sampler_kw=None,
+                   key=None) -> list[Response]:
     """Bucket requests, generate per bucket, reassemble in arrival order.
 
     Length-aware families bucket by padded power-of-two length and pass the
     true lengths through to the engine; recurrent families group by exact
     length so no pad token ever enters the recurrence."""
     ragged = engine.model.supports_lengths
+    eos = engine.eos_id
     buckets: dict[int, list[Request]] = defaultdict(list)
     for r in requests:
         n = len(r.tokens)
@@ -97,6 +125,7 @@ def serve_bucketed(engine, requests: Sequence[Request], max_new_tokens: int,
         # serialization+overrun cost the slot scheduler removes
         res = engine.generate(
             {"tokens": jnp.asarray(toks)}, max(budgets), sampler=sampler,
+            sampler_kw=sampler_kw,
             # independent PRNG stream per bucket — one shared key would make
             # every bucket sample the same per-step randomness
             key=jax.random.fold_in(base_key, length),
@@ -104,7 +133,9 @@ def serve_bucketed(engine, requests: Sequence[Request], max_new_tokens: int,
         )
         gen = np.asarray(res.tokens)
         for i, r in enumerate(reqs):
-            out[r.id] = Response(id=r.id, tokens=gen[i, : budgets[i]])
+            toks_r, n_true = finalize_tokens(
+                [int(t) for t in gen[i, : budgets[i]]], budgets[i], eos)
+            out[r.id] = Response(id=r.id, tokens=toks_r, length=n_true)
     return [out[r.id] for r in requests]
 
 
@@ -122,7 +153,7 @@ class SlotScheduler:
     """
 
     def __init__(self, engine, *, slots: int = 4, chunk: int = 4,
-                 sampler: str = "greedy"):
+                 sampler: str = "greedy", sampler_kw=None):
         if not engine.model.supports_lengths:
             raise ValueError(
                 f"{engine.cfg.arch_id}: continuous batching needs length-aware "
@@ -131,23 +162,34 @@ class SlotScheduler:
         self.engine = engine
         self.slots = slots
         self.chunk = chunk
-        self._sampler = make_sampler(sampler)
+        self._sampler = make_sampler(sampler, **dict(sampler_kw or {}))
         self._prefill_jit: dict[int, callable] = {}
+        self.last_positions = None     # final per-slot positions (debug)
 
         model, sample = engine.model, self._sampler
 
-        @jax.jit
-        def decode_chunk(params, tok, cache, pos, keys):
+        # the cache is donated: the scheduler always rebinds it to the
+        # result, and without donation XLA keeps both buffers live across
+        # every chunk — a full extra cache of device memory
+        @partial(jax.jit, donate_argnums=(2,))
+        def decode_chunk(params, tok, cache, pos, live, keys):
+            # ``live`` (b,) freezes finished/empty slots: their token and
+            # position stop advancing, so a slot idling to the chunk
+            # boundary keeps committing the SAME in-bounds cache slot of its
+            # own (dead) row instead of drifting past cache_len, where the
+            # commit would clamp/drop against the cache edge.
             def step(carry, k):
                 tok, cache, pos = carry
                 logits, cache = model.decode(params, tok, cache, pos)
                 nxt = sample(logits, k)
-                return (nxt, cache, pos + 1), nxt
+                nxt = jnp.where(live, nxt, tok)
+                pos = jnp.where(live, pos + 1, pos)
+                return (nxt, cache, pos), nxt
 
             (tok, cache, pos), toks = jax.lax.scan(step, (tok, cache, pos), keys)
             return toks, cache, pos
 
-        @jax.jit
+        @partial(jax.jit, donate_argnums=(0,))
         def insert(cache, rows, slots):
             # every decoder_lm cache layout keeps batch on axis 1 of each
             # (layers, b, ...) leaf; the prefill rows replace whole slots
@@ -202,12 +244,8 @@ class SlotScheduler:
 
         def finish(s: int):
             r = slot_req[s]
-            n = budget(r)
-            t = slot_toks[s][:n]
-            if eos is not None and eos in t:
-                t = t[: t.index(eos) + 1]
-            t = t + [eos if eos is not None else 0] * (n - len(t))
-            out[r.id] = Response(id=r.id, tokens=np.asarray(t, np.int32))
+            toks_r, length = finalize_tokens(slot_toks[s], budget(r), eos)
+            out[r.id] = Response(id=r.id, tokens=toks_r, length=length)
             slot_req[s] = None
             slot_toks[s] = []
 
@@ -240,10 +278,14 @@ class SlotScheduler:
                     continue
                 break
 
+            live = np.asarray([slot_req[s] is not None for s in range(B)])
+            assert not live.any() or int(pos[live].max()) < engine.cache_len, (
+                f"live slot position escaped the cache: {pos[live]} "
+                f">= cache_len={engine.cache_len}")
             key, kc = jax.random.split(key)
             toks_d, cache, pos_d = self._decode_chunk(
                 engine.params, jnp.asarray(tok), cache, jnp.asarray(pos),
-                jax.random.split(kc, chunk),
+                jnp.asarray(live), jax.random.split(kc, chunk),
             )
             toks_np = np.asarray(toks_d)                # (chunk, B)
             tok = np.asarray(toks_np[-1]).copy()
@@ -259,38 +301,66 @@ class SlotScheduler:
                 if done:
                     finish(s)
 
+        self.last_positions = pos.copy()
         return [out[r.id] for r in requests]
 
 
 def serve_continuous(engine, requests: Sequence[Request], max_new_tokens: int,
-                     *, sampler: str = "greedy", key=None, slots: int = 4,
-                     chunk: int = 4) -> list[Response]:
+                     *, sampler: str = "greedy", sampler_kw=None, key=None,
+                     slots: int = 4, chunk: int = 4) -> list[Response]:
     """Continuous batching through a per-engine cached ``SlotScheduler``."""
     cache = getattr(engine, "_slot_schedulers", None)
     if cache is None:
         cache = engine._slot_schedulers = {}
-    sig = (slots, chunk, sampler)
+    sig = (slots, chunk, sampler, sampler_sig(sampler_kw))
     if sig not in cache:
-        cache[sig] = SlotScheduler(engine, slots=slots, chunk=chunk, sampler=sampler)
+        cache[sig] = SlotScheduler(engine, slots=slots, chunk=chunk,
+                                   sampler=sampler, sampler_kw=sampler_kw)
     return cache[sig].serve(requests, max_new_tokens, key=key)
 
 
+def resolve_mode(engine, mode: str) -> str:
+    """Capability dispatch for ``mode="auto"``: paged where the family has a
+    block-pool cache, else continuous where lengths are supported, else
+    bucketed. The single source of truth for every front-end (serve_ragged,
+    the serve CLI)."""
+    if mode != "auto":
+        return mode
+    # the paged pool keeps the base float KV layout; under the kvt/int8
+    # cache flags auto must keep resolving to the contiguous scheduler,
+    # whose decode paths support those layouts
+    if (engine.model.supports_paged
+            and not flags.get("kvt_cache_layout")
+            and not flags.get("int8_kv_cache")):
+        return "paged"
+    return "continuous" if engine.model.supports_lengths else "bucketed"
+
+
 def serve_ragged(engine, requests: Sequence[Request], max_new_tokens: int,
-                 *, sampler: str = "greedy", key=None, mode: str = "auto",
-                 slots: int = 4, chunk: int = 4) -> list[Response]:
+                 *, sampler: str = "greedy", sampler_kw=None, key=None,
+                 mode: str = "auto", slots: int = 4, chunk: int = 4,
+                 block_size: int = 8, num_blocks: int | None = None) -> list[Response]:
     """Serve a ragged request set; responses come back in arrival order.
 
-    mode="continuous" runs the slot scheduler (length-aware families),
-    mode="bucketed" the per-bucket generate loop, mode="auto" picks
-    continuous when the family supports it."""
+    mode="paged" runs the block-pool scheduler (serving/paged.py: admission
+    and block reclaim at any decode step), mode="continuous" the contiguous
+    slot scheduler, mode="bucketed" the per-bucket generate loop;
+    mode="auto" prefers paged, then continuous, by family capability."""
     if not requests:
         return []
-    if mode == "auto":
-        mode = "continuous" if engine.model.supports_lengths else "bucketed"
+    mode = resolve_mode(engine, mode)
+    if mode == "paged":
+        from repro.serving.paged import serve_paged   # avoid import cycle
+
+        return serve_paged(engine, requests, max_new_tokens, sampler=sampler,
+                           sampler_kw=sampler_kw, key=key, slots=slots,
+                           chunk=chunk, block_size=block_size,
+                           num_blocks=num_blocks)
     if mode == "continuous":
         return serve_continuous(engine, requests, max_new_tokens,
-                                sampler=sampler, key=key, slots=slots, chunk=chunk)
+                                sampler=sampler, sampler_kw=sampler_kw,
+                                key=key, slots=slots, chunk=chunk)
     if mode == "bucketed":
         return serve_bucketed(engine, requests, max_new_tokens,
-                              sampler=sampler, key=key)
+                              sampler=sampler, sampler_kw=sampler_kw, key=key)
     raise ValueError(f"unknown serving mode {mode!r}")

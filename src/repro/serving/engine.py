@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core.policy import quantize_params, quantized_fraction
 from repro.models.registry import Model
-from repro.serving.sampling import make_sampler
+from repro.serving.sampling import make_sampler, sampler_sig
 
 
 @dataclasses.dataclass
@@ -74,9 +74,16 @@ class InferenceEngine:
 
     # -- full generation -----------------------------------------------------
     def _build_generate(self, max_new_tokens: int, sampler_name: str,
-                        prompt_len: int, ragged: bool):
-        sampler = make_sampler(sampler_name)
+                        prompt_len: int, ragged: bool, sampler_kw=(),
+                        paged: bool = False, block_size: int = 8):
+        sampler = make_sampler(sampler_name, **dict(sampler_kw))
         model, cache_len = self.model, self.cache_len
+        if paged:
+            from repro.models.transformer import contiguous_to_paged
+
+            # pad the prefill target up to whole blocks so the contiguous
+            # rows reshape exactly into the pool
+            cache_len = -(-cache_len // block_size) * block_size
 
         @jax.jit
         def run(params, batch, key):
@@ -92,10 +99,21 @@ class InferenceEngine:
                 pos0 = batch["lengths"].astype(jnp.int32)
             else:
                 pos0 = jnp.int32(prompt_len)
+            if paged:
+                # identity block tables: row i owns blocks [i*MB, (i+1)*MB) —
+                # the uniform-batch shape of the block-table decode contract;
+                # mixed-traffic pooling lives in serving/paged.py
+                cache, table = contiguous_to_paged(cache, block_size)
+                if not ragged:
+                    pos0 = jnp.full((tok0.shape[0],), pos0, jnp.int32)
 
             def step(carry, k):
                 tok, cache, pos, done = carry
-                logits, cache = model.decode(params, tok, cache, pos)
+                if paged:
+                    logits, cache = model.decode_paged(params, tok, cache,
+                                                       table, pos)
+                else:
+                    logits, cache = model.decode(params, tok, cache, pos)
                 nxt = sampler(logits, k)
                 if self.eos_id is not None:
                     nxt = jnp.where(done, self.eos_id, nxt)
@@ -116,10 +134,20 @@ class InferenceEngine:
         return run
 
     def generate(self, batch, max_new_tokens: int, *, sampler: str = "greedy",
-                 key=None, lengths=None) -> GenerationResult:
+                 sampler_kw=None, key=None, lengths=None, paged: bool = False,
+                 block_size: int = 8) -> GenerationResult:
         """``lengths`` (b,) enables ragged right-padded prompts: row i's pads
         are masked in prefill, its first token is sampled from the logits at
-        lengths[i]-1, and decode runs on per-request position counters."""
+        lengths[i]-1, and decode runs on per-request position counters.
+        ``sampler_kw`` reaches the sampler (top_p's p / temperature).
+        ``paged`` decodes through the block-table path over an
+        identity-mapped block pool — token-identical to the contiguous path
+        (the mixed-traffic scheduler is serving/paged.py)."""
+        if paged and not self.model.supports_paged:
+            raise ValueError(
+                f"{self.cfg.arch_id}: model family has no paged decode path "
+                "(GQA decoder_lm families only)"
+            )
         if lengths is not None:
             lengths = jnp.asarray(lengths, jnp.int32)
             batch = dict(batch, lengths=lengths)
@@ -141,7 +169,8 @@ class InferenceEngine:
                 f"{start_max}) + max_new_tokens={max_new_tokens} needs "
                 f"{need} slots but cache_len={self.cache_len}"
             )
-        sig = (max_new_tokens, sampler, prompt_len, lengths is not None)
+        sig = (max_new_tokens, sampler, prompt_len, lengths is not None,
+               sampler_sig(sampler_kw), paged, block_size)
         if sig not in self._generate_jit:
             self._generate_jit[sig] = self._build_generate(*sig)
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -150,10 +179,20 @@ class InferenceEngine:
 
     # -- fault tolerance ------------------------------------------------------
     @staticmethod
-    def snapshot(cache, pos, tokens) -> dict[str, Any]:
-        return {"cache": jax.device_get(cache), "pos": np.asarray(pos),
+    def snapshot(cache, pos, tokens, block_table=None) -> dict[str, Any]:
+        """Generation state for resume-on-rebuilt-mesh. For the paged path
+        the cache is the block POOL, so the block tables are part of the
+        state — without them the pool rows are unaddressable."""
+        snap = {"cache": jax.device_get(cache), "pos": np.asarray(pos),
                 "tokens": jax.device_get(tokens)}
+        if block_table is not None:
+            snap["block_table"] = np.asarray(block_table)
+        return snap
 
     def restore(self, snap):
-        return (jax.device_put(snap["cache"]), jnp.asarray(snap["pos"], jnp.int32),
-                jnp.asarray(snap["tokens"]))
+        out = (jax.device_put(snap["cache"]),
+               jnp.asarray(snap["pos"], jnp.int32),
+               jnp.asarray(snap["tokens"]))
+        if "block_table" in snap:
+            return out + (jnp.asarray(snap["block_table"], jnp.int32),)
+        return out

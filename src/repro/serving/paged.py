@@ -1,0 +1,376 @@
+"""Paged KV-cache serving: block-pool allocator + paged continuous batching.
+
+The contiguous ``SlotScheduler`` (serving/batching.py) reserves a full
+``slots x cache_len`` KV region up front and lets finished slots idle until
+the next chunk boundary — the capacity/utilization gap LlamaF's weight
+streaming attacks on the FPGA, replayed on the serving side. Here the cache
+is a POOL of fixed-size KV blocks:
+
+- ``BlockPool`` — host-side allocator over ``num_blocks`` blocks of
+  ``block_size`` token slots. Block 0 is the reserved write-off SINK:
+  unallocated block-table entries point at it, so stray writes (prompt pad
+  tail, frozen slots) land somewhere harmless instead of clobbering live
+  data. Blocks are recycled WITHOUT zeroing — the paged attention path
+  overwrites the current column's score/value explicitly and masks
+  everything beyond ``pos``, so stale block contents are unreachable.
+- ``PagedScheduler`` — continuous batching over the pool. Requests admit
+  into fixed decode slots (one batched prefill per bucket, scattered into
+  their blocks), blocks are allocated ON DEMAND as positions advance (a
+  chunk's worth ahead), and the jitted decode loop is a ``while_loop`` that
+  EXITS the moment any live slot finishes — blocks are freed and the queue
+  re-admitted at that exact step, not at the next chunk boundary. Resident
+  KV memory therefore scales with live tokens (+ block slack), not with
+  ``slots x cache_len`` (``benchmarks/run.py paged``).
+
+Admission is reservation-gated: a request is admitted only when the pool can
+cover every live request's worst-case remaining need plus its own, so
+allocation for live slots never fails and no preemption path is needed
+(DESIGN.md §9 allocator invariants).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import defaultdict, deque
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flags
+from repro.serving.batching import (
+    Request,
+    Response,
+    bucket_length,
+    finalize_tokens,
+    pad_bucket,
+)
+from repro.serving.sampling import make_sampler, sampler_sig
+
+
+class BlockPool:
+    """Fixed-size KV block allocator. Block ids are indices into the device
+    pool's block axis; block 0 is the reserved sink and is never handed out.
+    Tracks ``peak_live`` (high-water mark of allocated blocks) for the
+    residency benchmark."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("BlockPool needs >= 2 blocks (block 0 is the sink)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = list(range(num_blocks - 1, 0, -1))   # LIFO reuse
+        self._free_set = set(self._free)
+        self.peak_live = 0
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_blocks(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"block pool exhausted: want {n}, free {len(self._free)} "
+                f"of {self.num_blocks - 1}"
+            )
+        out = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
+        self.peak_live = max(self.peak_live, self.live_blocks)
+        return out
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            # a double-free would hand one physical block to two requests —
+            # silent KV corruption — so this must not be a strippable assert
+            if not 0 < b < self.num_blocks or b in self._free_set:
+                raise ValueError(f"bad free of block {b}: out of range, "
+                                 "double-freed, or the sink")
+            self._free.append(b)
+            self._free_set.add(b)
+
+
+class PagedScheduler:
+    """Paged continuous batching over one engine (see module docstring).
+
+    Produces token-identical greedy outputs to the contiguous
+    ``SlotScheduler`` / ``serve_ragged(mode="continuous")`` on any trace —
+    the paged attention path is parity-tested bit-exact against the
+    contiguous deferred decode (tests/test_paged.py).
+    """
+
+    def __init__(self, engine, *, slots: int = 4, chunk: int = 4,
+                 block_size: int = 8, num_blocks: int | None = None,
+                 max_len: int | None = None, sampler: str = "greedy",
+                 sampler_kw=None):
+        if not engine.model.supports_paged:
+            raise ValueError(
+                f"{engine.cfg.arch_id}: paged serving needs a block-pool cache "
+                "(GQA decoder_lm families; MLA/recurrent keep the contiguous path)"
+            )
+        self.engine = engine
+        self.slots = slots
+        self.chunk = chunk
+        self.block_size = block_size
+        self.max_len = max_len if max_len is not None else engine.cache_len
+        self.blocks_per_req = math.ceil(self.max_len / block_size)
+        # default pool matches the contiguous footprint (worst case for every
+        # slot); benchmarks/tests hand in smaller pools to exercise
+        # backpressure — correctness never depends on pool size
+        self.num_blocks = (num_blocks if num_blocks is not None
+                           else slots * self.blocks_per_req + 1)
+        self._sampler = make_sampler(sampler, **dict(sampler_kw or {}))
+        self._prefill_jit = None
+        self.last_peak_blocks = 0          # residency high-water of last serve
+        self.last_positions: np.ndarray | None = None   # debug/introspection
+
+        model, sample, eos = engine.model, self._sampler, engine.eos_id
+        mb = self.blocks_per_req
+
+        # pool buffers are donated: the serve loop always rebinds the cache
+        # to each call's result, and an undonated pool would transiently
+        # double the very footprint this subsystem exists to shrink
+        @partial(jax.jit, donate_argnums=(2,))
+        def decode_until(params, tok, cache, table, pos, live, remaining, keys):
+            """Decode up to ``chunk`` steps, but stop at the step ANY live
+            slot finishes (EOS or budget) — the host frees/refills there."""
+            nsteps, b = keys.shape[0], tok.shape[0]
+
+            def cond(c):
+                i, _, _, _, _, stop, _ = c
+                return (i < nsteps) & ~stop
+
+            def body(c):
+                i, tok, cache, pos, remaining, stop, toks = c
+                logits, cache = model.decode_paged(params, tok, cache, table, pos)
+                nxt = sample(logits, keys[i])
+                nxt = jnp.where(live, nxt, tok)        # frozen slots keep tok
+                toks = toks.at[i].set(nxt)
+                pos = jnp.where(live, pos + 1, pos)    # ...and their position
+                remaining = jnp.where(live, remaining - 1, remaining)
+                fin = live & (remaining <= 0)
+                if eos is not None:
+                    fin = fin | (live & (nxt == eos))
+                return (i + 1, nxt, cache, pos, remaining, jnp.any(fin), toks)
+
+            toks0 = jnp.zeros((nsteps, b), jnp.int32)
+            i, tok, cache, pos, remaining, _, toks = jax.lax.while_loop(
+                cond, body,
+                (jnp.int32(0), tok, cache, pos, remaining, jnp.bool_(False), toks0))
+            return toks, i, cache, pos
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def insert(cache, rows, tables):
+            # rows: contiguous prefill cache (L, bg, S, KV, hd); tables
+            # (bg, S // block_size) physical block per prompt block (0=sink)
+            def put(pages, r):
+                ell, bg = r.shape[:2]
+                rr = r.reshape(ell, bg, tables.shape[1], block_size, *r.shape[3:])
+                return pages.at[:, tables].set(rr)
+            return {"k_pages": put(cache["k_pages"], rows["k"]),
+                    "v_pages": put(cache["v_pages"], rows["v"])}
+
+        self._decode_until = decode_until
+        self._insert = insert
+        self._mb = mb
+
+    # -- helpers ------------------------------------------------------------
+
+    def _prefill_fn(self):
+        if self._prefill_jit is None:
+            model, sample = self.engine.model, self._sampler
+
+            @jax.jit
+            def prefill_group(params, toks, lens, key):
+                # pad target == the padded prompt length: the paged pool is
+                # the only persistent cache, so no cache_len-wide row exists
+                logits, cache = model.prefill(
+                    params, {"tokens": toks, "lengths": lens}, toks.shape[1]
+                )
+                return sample(logits, key), cache
+
+            self._prefill_jit = prefill_group
+        return self._prefill_jit
+
+    def _prompt_pad(self, n: int) -> int:
+        """Padded prefill length: the power-of-two bucket, rounded up to a
+        whole number of blocks."""
+        b = bucket_length(n)
+        return math.ceil(b / self.block_size) * self.block_size
+
+    def _blocks_needed(self, r: Request, budget: int) -> int:
+        # decode commits positions len .. len+budget-2 (the first generated
+        # token comes from prefill); prompt occupies 0 .. len-1
+        last = len(r.tokens) + max(budget - 1, 0)
+        return math.ceil(max(last, 1) / self.block_size)
+
+    # -- serving ------------------------------------------------------------
+
+    def serve(self, requests: Sequence[Request], max_new_tokens: int,
+              *, key=None) -> list[Response]:
+        if flags.get("kvt_cache_layout") or flags.get("int8_kv_cache"):
+            raise ValueError("paged serving supports the base float KV layout "
+                             "(kvt_cache_layout / int8_kv_cache flags off)")
+        engine, B, bs, mb = self.engine, self.slots, self.block_size, self._mb
+        eos = engine.eos_id
+
+        def budget(r: Request) -> int:
+            return r.max_new if r.max_new is not None else max_new_tokens
+
+        for r in requests:
+            need = max(self._prompt_pad(len(r.tokens)),
+                       len(r.tokens) + budget(r))
+            if need > mb * bs:
+                raise ValueError(
+                    f"request {r.id}: len={len(r.tokens)} + max_new={budget(r)} "
+                    f"needs {need} cache slots but the paged table covers "
+                    f"{mb} blocks x {bs} = {mb * bs}"
+                )
+            if self._blocks_needed(r, budget(r)) > self.num_blocks - 1:
+                raise ValueError(
+                    f"request {r.id}: needs {self._blocks_needed(r, budget(r))} "
+                    f"blocks but the pool has {self.num_blocks - 1}"
+                )
+
+        pool = BlockPool(self.num_blocks, bs)
+        cache = engine.model.init_paged_cache(self.num_blocks, bs,
+                                              engine.cfg.cdtype())
+        pending = deque(requests)
+        slot_req: list[Request | None] = [None] * B
+        slot_toks: list[list[int]] = [[] for _ in range(B)]
+        slot_blocks: list[list[int]] = [[] for _ in range(B)]
+        slot_need = [0] * B                    # worst-case total blocks
+        table = np.zeros((B, mb), np.int32)    # 0 = sink
+        tok = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        live = np.zeros((B,), bool)
+        remaining = np.zeros((B,), np.int32)
+        out: dict[int, Response] = {}
+        key = key if key is not None else jax.random.PRNGKey(0)
+
+        def reserved_backlog() -> int:
+            """Blocks the live slots may still demand beyond what they hold."""
+            return sum(slot_need[s] - len(slot_blocks[s])
+                       for s in range(B) if live[s])
+
+        def finish(s: int):
+            r = slot_req[s]
+            toks_r, length = finalize_tokens(slot_toks[s], budget(r), eos)
+            out[r.id] = Response(id=r.id, tokens=toks_r, length=length)
+            pool.free(slot_blocks[s])
+            slot_req[s], slot_toks[s], slot_blocks[s] = None, [], []
+            slot_need[s] = 0
+            table[s, :] = 0                    # stray writes go to the sink
+            live[s] = False                    # position stays frozen
+
+        def ensure_blocks(s: int):
+            """Grow slot ``s`` to cover the next chunk of decode commits —
+            reservation-gated admission guarantees this never fails."""
+            target = min(math.ceil((int(pos[s]) + self.chunk) / bs), slot_need[s])
+            delta = target - len(slot_blocks[s])
+            if delta > 0:
+                new = pool.alloc(delta)
+                start = len(slot_blocks[s])
+                slot_blocks[s].extend(new)
+                table[s, start:start + len(new)] = new
+
+        while pending or live.any():
+            # admit in arrival order while a slot AND worst-case pool space
+            # are both available; one batched prefill per padded length
+            free_slots = [s for s in range(B) if slot_req[s] is None]
+            admitted: dict[int, list[tuple[int, Request]]] = defaultdict(list)
+            while free_slots and pending:
+                r = pending[0]
+                nb = self._blocks_needed(r, budget(r))
+                if nb > pool.free_blocks - reserved_backlog():
+                    break                       # backpressure: decode frees
+                pending.popleft()
+                s = free_slots.pop(0)
+                prompt_blocks = pool.alloc(math.ceil(len(r.tokens) / bs))
+                slot_req[s], slot_toks[s] = r, []
+                slot_blocks[s] = prompt_blocks
+                slot_need[s] = nb
+                table[s, :] = 0
+                table[s, : len(prompt_blocks)] = prompt_blocks
+                live[s] = True
+                admitted[self._prompt_pad(len(r.tokens))].append((s, r))
+            for length, group in admitted.items():
+                reqs_g = [r for _, r in group]
+                toks_np, lens_np = pad_bucket(reqs_g, length)
+                key, kp = jax.random.split(key)
+                t0, rows = self._prefill_fn()(
+                    engine.params, jnp.asarray(toks_np), jnp.asarray(lens_np), kp
+                )
+                tables_g = jnp.asarray(
+                    np.stack([table[s, : length // bs] for s, _ in group]))
+                cache = self._insert(cache, rows, tables_g)
+                t0 = np.asarray(t0)
+                for (s, r), t in zip(group, t0):
+                    slot_toks[s] = [int(t)]
+                    tok[s], pos[s] = int(t), len(r.tokens)
+                    remaining[s] = budget(r) - 1
+                    if budget(r) <= 1 or (eos is not None and int(t) == eos):
+                        finish(s)
+
+            if not live.any():
+                if pending:
+                    continue
+                break
+
+            for s in range(B):
+                if live[s]:
+                    ensure_blocks(s)
+
+            key, kc = jax.random.split(key)
+            toks_d, steps, cache, pos_d = self._decode_until(
+                engine.params, jnp.asarray(tok), cache, jnp.asarray(table),
+                jnp.asarray(pos), jnp.asarray(live), jnp.asarray(remaining),
+                jax.random.split(kc, self.chunk),
+            )
+            steps = int(steps)
+            toks_np = np.asarray(toks_d)[:steps]          # (steps, B)
+            pos = np.asarray(pos_d).copy()
+            assert not live.any() or int(pos[live].max()) < mb * bs, (
+                f"live decode position escaped the block table: {pos[live]}")
+            for s in range(B):
+                if not live[s]:
+                    continue
+                n = budget(slot_req[s])
+                slot_toks[s].extend(int(t) for t in toks_np[:, s])
+                tok[s] = slot_toks[s][-1]
+                remaining[s] = n - len(slot_toks[s])
+                done = len(slot_toks[s]) >= n
+                if eos is not None and eos in slot_toks[s][:n]:
+                    done = True
+                if done:
+                    finish(s)
+
+        self.last_positions = pos.copy()
+        # the allocator's exact high-water mark (sampling pool.live_blocks at
+        # loop points would miss peaks freed before the sample, e.g. prompt
+        # blocks of budget<=1 requests finished at admission)
+        self.last_peak_blocks = max(self.last_peak_blocks, pool.peak_live)
+        return [out[r.id] for r in requests]
+
+
+def serve_paged(engine, requests: Sequence[Request], max_new_tokens: int,
+                *, sampler: str = "greedy", sampler_kw=None, key=None,
+                slots: int = 4, chunk: int = 4, block_size: int = 8,
+                num_blocks: int | None = None) -> list[Response]:
+    """Paged continuous batching through a per-engine cached scheduler."""
+    cache = getattr(engine, "_paged_schedulers", None)
+    if cache is None:
+        cache = engine._paged_schedulers = {}
+    sig = (slots, chunk, block_size, num_blocks, sampler, sampler_sig(sampler_kw))
+    if sig not in cache:
+        cache[sig] = PagedScheduler(engine, slots=slots, chunk=chunk,
+                                    block_size=block_size, num_blocks=num_blocks,
+                                    sampler=sampler, sampler_kw=sampler_kw)
+    sched = cache[sig]
+    sched.last_peak_blocks = 0
+    return sched.serve(requests, max_new_tokens, key=key)

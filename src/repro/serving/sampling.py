@@ -5,27 +5,55 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models.common import NEG_INF
+
 
 def greedy(logits: jax.Array, key=None) -> jax.Array:
     """(b, V) -> (b,) int32. The paper's evaluation setting (§V-C)."""
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def nucleus_mask(logits: jax.Array, p: float) -> jax.Array:
+    """Boolean mask of the smallest set whose probability mass reaches ``p``.
+
+    Sorted-space construction: keep sorted position i iff the mass BEFORE it
+    (exclusive cumsum) is still < p, then scatter the mask back to original
+    positions through the inverse sort permutation. Value-threshold filtering
+    (``logits >= cutoff``) keeps every token tied with the cutoff logit and
+    inflates the nucleus past p — worst case the whole vocab on tied logits.
+    The top token is always kept (its exclusive mass is 0 < p).
+    """
+    idx = jnp.argsort(logits, axis=-1)[..., ::-1]              # descending
+    sorted_logits = jnp.take_along_axis(logits, idx, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    mass_before = jnp.cumsum(probs, axis=-1) - probs           # exclusive
+    keep_sorted = mass_before < p
+    inv = jnp.argsort(idx, axis=-1)                            # inverse perm
+    return jnp.take_along_axis(keep_sorted, inv, axis=-1)
+
+
 def top_p(logits: jax.Array, key, p: float = 0.9, temperature: float = 1.0) -> jax.Array:
     """Nucleus sampling [Holtzman et al., 2020] (paper ref [15])."""
     logits = logits / temperature
-    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
-    probs = jax.nn.softmax(sorted_logits, axis=-1)
-    cum = jnp.cumsum(probs, axis=-1)
-    # smallest set whose cumulative prob >= p; always keep the top token
-    cutoff_idx = jnp.sum(cum < p, axis=-1, keepdims=True)
-    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
-    filtered = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    filtered = jnp.where(nucleus_mask(logits, p), logits, NEG_INF)
     return jax.random.categorical(key, filtered, axis=-1).astype(jnp.int32)
 
 
+def sampler_sig(sampler_kw) -> tuple:
+    """Canonical hashable form of a sampler-kwargs mapping, shared by every
+    jit/scheduler cache key (engine.generate, serve_continuous, serve_paged)
+    so the normalization cannot drift between call sites."""
+    return tuple(sorted(dict(sampler_kw or {}).items()))
+
+
 def make_sampler(name: str, **kw):
+    """sampler(logits, key) -> tokens. ``kw`` (p / temperature for top_p) is
+    reachable end to end: InferenceEngine.generate / serve_ragged /
+    the schedulers accept ``sampler_kw`` and the serve CLI exposes
+    --top-p / --temperature."""
     if name == "greedy":
+        if kw:
+            raise ValueError(f"greedy sampler takes no kwargs, got {sorted(kw)}")
         return greedy
     if name == "top_p":
         return lambda logits, key: top_p(logits, key, **kw)
