@@ -43,6 +43,27 @@ def run():
         gops = 2.0 * b * m * n / (us * 1e-6) / 1e9
         emit(f"kernels/gqmm/b{b}", us, f"{gops:.2f} GOPS")
 
+    # small-m GQMM: the speculative-verify shape (m activation rows = the
+    # spec_k chunk, serving/spec.py). This measures the cost CURVE of
+    # verifying k tokens per weight stream instead of assuming one decode
+    # step scales linearly — us/row falling with m is the amortization the
+    # spec suite prices in weight bytes (benchmarks/run.py spec).
+    from repro.core.quant import get_format
+
+    for fmt_name in ("int8", "int4"):
+        fmt = get_format(fmt_name)
+        m, n, gs = 2048, 2048, 256
+        w = fmt.quantize(jnp.asarray(rng.normal(size=(m, n)).astype(np.float32)), gs)
+        for rows in (1, 2, 4, 8):
+            x = quantize_activation(
+                jnp.asarray(rng.normal(size=(rows, n)).astype(np.float32)), gs)
+            fn = jax.jit(lambda wq, ws, xq, xs, k=fmt.kernel: ops.gqmm(
+                wq, ws, xq, xs, group_size=gs, impl="xla", kernel=k))
+            us = time_fn(fn, w.qvalues, w.scales, x.qvalues, x.scales, iters=3)
+            gops = 2.0 * rows * m * n / (us * 1e-6) / 1e9
+            emit(f"kernels/gqmm_small/{fmt_name}_m{rows}", us,
+                 f"{us / rows:.2f} us/row, {gops:.2f} GOPS")
+
 
 if __name__ == "__main__":
     run()

@@ -10,6 +10,11 @@
   paged -> throughput        (paged vs contiguous slots: tok/s + resident KV
                               bytes; exits non-zero if paged residency does
                               not beat the contiguous footprint)
+  spec -> throughput         (speculative decode: forward passes + weight
+                              bytes per token, acceptance rate; writes
+                              BENCH_spec.json; exits non-zero if greedy
+                              speculative output diverges from vanilla or
+                              the repetitive trace misses the 1.5x gate)
 
 A suite returning False marks the run failed (exit 1).
 """
@@ -44,6 +49,7 @@ def main() -> int:
         "ragged": throughput.run_ragged,
         "quant": quant_bench.run,
         "paged": throughput.run_paged,
+        "spec": throughput.run_spec,
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; valid: {', '.join(suites)}", file=sys.stderr)

@@ -220,6 +220,93 @@ def paged_throughput() -> bool:
     return True
 
 
+def spec_decode() -> bool:
+    """Speculative decoding (serving/spec.py + lm_verify): decode forward
+    passes per generated token, weight bytes streamed per accepted token,
+    and acceptance rate, on a repetitive trace (where the zero-weight
+    n-gram prompt-lookup drafter shines) vs a random one. The engine runs
+    the paper's W8A8 weights so bytes-per-token prices the registry's
+    actual storage (``bits_per_weight``). CI gates:
+
+    - greedy speculative output must be TOKEN-IDENTICAL to vanilla decode
+      on both traces (exactness is the whole point — the chunk only
+      amortizes the weight stream);
+    - the repetitive trace must need >= 1.5x fewer decode forward passes
+      per generated token than vanilla's 1.0.
+    """
+    import json
+    import os
+
+    from repro.core.quant import QuantizedTensor
+    from repro.serving.spec import NgramDrafter
+
+    cfg = load_config("tinyllama-1.1b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    steps, spec_k = 96, 4
+    engine = InferenceEngine(model, params, cache_len=32 + steps + spec_k,
+                             quantize="int8")
+    # bytes one decode forward pass streams: every weight leaf read once
+    # (LlamaF §II-B's regime) — quantized leaves at their format's storage
+    # footprint (qvalues + scales), exempt leaves (norms etc.) at float width
+    weight_bytes = sum(
+        leaf.nbytes() if isinstance(leaf, QuantizedTensor) else leaf.nbytes
+        for leaf in jax.tree.leaves(
+            engine.params,
+            is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    )
+    rng = np.random.default_rng(0)
+    traces = {
+        "repetitive": ([11, 23, 7, 5] * 6),
+        "random": rng.integers(1, cfg.vocab_size, (24,)).astype(int).tolist(),
+    }
+    ok = True
+    headline: dict[str, dict] = {"spec_k": spec_k, "steps": steps,
+                                 "weight_bytes_per_pass": int(weight_bytes)}
+    for name, prompt in traces.items():
+        batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+        van = engine.generate(batch, steps)
+        res = engine.generate(batch, steps, spec_k=spec_k,
+                              drafter=NgramDrafter())
+        if not np.array_equal(np.asarray(van.tokens), np.asarray(res.tokens)):
+            print(f"FAIL: spec/{name}: greedy speculative output diverged "
+                  "from vanilla decode", flush=True)
+            ok = False
+        st = res.spec_stats
+        fwd_per_tok = st["verify_steps"] / st["generated"]
+        acc = st["accepted"] / max(st["drafted"], 1)
+        bytes_per_tok = weight_bytes * fwd_per_tok
+        emit(f"spec/{name}/fwd_per_token", 0.0,
+             f"{fwd_per_tok:.3f} (vanilla 1.0 -> {1 / fwd_per_tok:.2f}x fewer "
+             "weight streams)")
+        emit(f"spec/{name}/acceptance_rate", 0.0,
+             f"{acc:.3f} ({st['accepted']}/{st['drafted']} drafts)")
+        emit(f"spec/{name}/weight_MB_per_token", 0.0,
+             f"{bytes_per_tok / 1e6:.2f} MB (vanilla {weight_bytes / 1e6:.2f})")
+        headline[name] = {
+            "fwd_per_token": round(fwd_per_tok, 4),
+            "acceptance_rate": round(acc, 4),
+            "weight_bytes_per_token": int(bytes_per_tok),
+            "verify_steps": st["verify_steps"],
+            "generated": st["generated"],
+            "token_identical_to_vanilla": bool(
+                np.array_equal(np.asarray(van.tokens), np.asarray(res.tokens))),
+        }
+    rep = headline["repetitive"]["fwd_per_token"]
+    emit("spec/repetitive/speedup_gate", 0.0,
+         f"{1 / rep:.2f}x fewer forward passes (gate: >= 1.5x)")
+    if 1.0 / rep < 1.5:
+        print(f"FAIL: spec: repetitive-trace forward passes per token {rep:.3f} "
+              "did not clear the 1.5x amortization gate", flush=True)
+        ok = False
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_spec.json")
+    with open(out_path, "w") as f:
+        json.dump(headline, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return ok
+
+
 def run():
     measured_engine_toks()
     measured_gqmv_gops()
@@ -232,6 +319,10 @@ def run_ragged():
 
 def run_paged():
     return paged_throughput()
+
+
+def run_spec():
+    return spec_decode()
 
 
 if __name__ == "__main__":

@@ -261,6 +261,14 @@ def logits_spec(mesh, ndim: int, batch: int) -> P:
     return P(first, *([None] * (ndim - 2)), last)
 
 
+def verify_logits_spec(mesh, batch: int) -> P:
+    """Speculative-verify logits (b, k, vocab): batch -> dp, vocab -> model,
+    the chunk axis replicated — the k verify positions of one request live
+    on one data shard (the accept/reject scan over them is sequential), so
+    splitting k would only add collectives to a length-<=8 axis."""
+    return logits_spec(mesh, 3, batch)
+
+
 def shardings(specs, mesh):
     """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
     return jax.tree.map(

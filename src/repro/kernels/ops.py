@@ -153,6 +153,36 @@ def paged_attention(
     )
 
 
+def paged_verify(
+    q: jax.Array,            # (b, S, KV, G, hd) verify-chunk queries
+    k_pages: jax.Array,      # (NB, BS, KV, hd)
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (b, MB) int32
+    pos: jax.Array,          # (b,) int32 chunk start positions
+    k_new: jax.Array,        # (b, S, KV, hd) the chunk's own K/V rows
+    v_new: jax.Array,
+    mask: jax.Array,         # (b, S, MB * BS) additive verify mask
+    *,
+    scale: float,
+    softcap: float | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """k-token speculative-verify attention over the block pool -> ctx
+    (b, S, KV*G*hd). The multi-query sibling of :func:`paged_attention`.
+
+    The verify shape (a handful of query rows against a long virtual
+    sequence) is served by the XLA gather path on every backend for now:
+    the m<=8 chunk makes attention a tiny fraction of the verify step —
+    the step's cost is the weight stream, which the GQMM kernels already
+    amortize over the chunk — so a dedicated Mosaic kernel is future work,
+    not a bandwidth lever (DESIGN.md §10)."""
+    del impl  # one implementation today; signature mirrors paged_attention
+    return _ref.paged_verify_ref(
+        q, k_pages, v_pages, block_table, pos, k_new, v_new, mask,
+        scale=scale, softcap=softcap,
+    )
+
+
 def quantized_matmul(
     x: jax.Array, w: QuantizedTensor, *, impl: str = "auto"
 ) -> jax.Array:

@@ -165,6 +165,84 @@ def paged_attention_ref(
     return ctx.reshape(b, kv * g * hd)
 
 
+def verify_attend(
+    scores: jax.Array,       # (b, KV, G, S, T) chunk queries vs the sequence
+    cur: jax.Array,          # (b, KV, G, S, M) intra-chunk q.k products
+    chunk_v: jax.Array,      # (b, M, KV, hd) the chunk's own V rows
+    v_source: jax.Array,     # (b, T, KV, hd) committed sequence values
+    pos: jax.Array,          # (b,) int32 virtual position of chunk row 0
+    mask: jax.Array,         # (b, S, T) additive verify mask
+    *,
+    scale: float,
+    softcap: float | None = None,
+) -> jax.Array:
+    """The speculative-verify score arrangement, shared by the contiguous
+    path (models/attention.py::gqa_verify_deferred) and the paged gather
+    path (:func:`paged_verify_ref`) so the two cannot drift.
+
+    The intra-chunk scores are SCATTERED into columns ``pos + m`` of the T
+    axis — the exact layout m successive single-token decode steps would
+    produce — so softmax sums in the same column order as vanilla decode
+    and greedy speculative output stays token-identical. The chunk
+    columns' attention weights are then pulled out, zeroed in place (the
+    sequence source may hold zeros there — contiguous deferred cache — or
+    stale recycled data — paged pool; either way unreachable), and their
+    value contribution is added explicitly from ``chunk_v``.
+
+    Returns ctx (b, S, KV * G * hd) in the contiguous path's head order.
+    """
+    b, kv, g, s, t = scores.shape
+    m = cur.shape[-1]
+    hd = chunk_v.shape[-1]
+    rows = jnp.arange(b)[:, None]
+    cols = pos[:, None] + jnp.arange(m, dtype=jnp.int32)[None, :]    # (b, m)
+    # advanced-index layout: [rows, :, :, :, cols] -> (b, m, kv, g, s)
+    scores = scores.at[rows, :, :, :, cols].set(cur.transpose(0, 4, 1, 2, 3))
+    scores = scores * scale
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = scores + mask[:, None, None, :, :]
+    attn = jax.nn.softmax(scores, axis=-1).astype(chunk_v.dtype)
+    attn_chunk = attn[rows, :, :, :, cols].transpose(0, 2, 3, 4, 1)  # (b,kv,g,s,m)
+    attn_z = attn.at[rows, :, :, :, cols].set(0.0)
+    ctx = jnp.einsum("bkgst,btkh->bkgsh", attn_z, v_source)
+    ctx = ctx + jnp.einsum("bkgsm,bmkh->bkgsh", attn_chunk, chunk_v)
+    return ctx.transpose(0, 3, 1, 2, 4).reshape(b, s, kv * g * hd)
+
+
+def paged_verify_ref(
+    q: jax.Array,            # (b, S, KV, G, hd) verify-chunk queries, grouped
+    k_pages: jax.Array,      # (NB, BS, KV, hd) one layer's block pool
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (b, MB) int32
+    pos: jax.Array,          # (b,) int32 virtual position of chunk row 0
+    k_new: jax.Array,        # (b, S, KV, hd) the chunk's own K rows
+    v_new: jax.Array,
+    mask: jax.Array,         # (b, S, T) additive verify mask, T = MB * BS
+    *,
+    scale: float,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Block-table gather attention for a k-token speculative-verify chunk:
+    gather row i's keys/values through its block table into a virtual
+    (b, T, KV, hd) sequence, then run the shared :func:`verify_attend`
+    arrangement — identical math to the contiguous verify path on identity
+    tables (tests/test_spec.py).
+
+    Returns ctx (b, S, KV * G * hd) in the contiguous path's head order.
+    """
+    b, s, kv, g, hd = q.shape
+    nb, bs = k_pages.shape[:2]
+    mb = block_table.shape[1]
+    k = k_pages[block_table].reshape(b, mb * bs, kv, hd)
+    v = v_pages[block_table].reshape(b, mb * bs, kv, hd)
+    qg = q.transpose(0, 2, 3, 1, 4)                              # (b,kv,g,s,hd)
+    scores = jnp.einsum("bkgsh,btkh->bkgst", qg, k).astype(jnp.float32)
+    cur = jnp.einsum("bkgsh,bmkh->bkgsm", qg, k_new).astype(jnp.float32)
+    return verify_attend(scores, cur, v_new, v, pos, mask,
+                         scale=scale, softcap=softcap)
+
+
 def gqmv_from_qt(w: QuantizedTensor, x: QuantizedTensor) -> jax.Array:
     assert w.group_size == x.group_size
     return gqmv_ref(w.qvalues, w.scales, x.qvalues, x.scales, group_size=w.group_size)

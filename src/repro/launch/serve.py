@@ -48,9 +48,24 @@ def main(argv=None):
                     help="--ragged scheduler (auto prefers paged)")
     ap.add_argument("--block-size", type=int, default=8,
                     help="KV block size (tokens) for the paged scheduler")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decode chunk: verify the current token "
+                         "plus spec_k-1 drafted candidates per forward pass "
+                         "(0 = off; needs >= 2)")
+    ap.add_argument("--drafter", default="ngram",
+                    help="speculative drafter: 'ngram' (zero-weight "
+                         "prompt-lookup) or 'model:<arch-id>' (small "
+                         "registry model, greedy drafts)")
     args = ap.parse_args(argv)
     sampler_kw = ({"p": args.top_p, "temperature": args.temperature}
                   if args.sampler == "top_p" else None)
+    spec_k = args.spec_k or None
+    drafter = None
+    if spec_k:
+        from repro.serving.spec import resolve_drafter
+
+        drafter = resolve_drafter(args.drafter, reduced=args.reduced,
+                                  seed=args.seed + 7)
 
     cfg = load_config(args.arch)
     if args.reduced:
@@ -58,7 +73,7 @@ def main(argv=None):
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
 
-    cache_len = args.prompt_len + args.steps
+    cache_len = args.prompt_len + args.steps + (spec_k or 0)
     if args.ragged:
         from repro.serving.batching import bucket_length
 
@@ -86,7 +101,8 @@ def main(argv=None):
 
         mode = resolve_mode(engine, args.mode)    # resolved for the report
         kw = dict(sampler=args.sampler, sampler_kw=sampler_kw,
-                  slots=args.slots, mode=mode, block_size=args.block_size)
+                  slots=args.slots, mode=mode, block_size=args.block_size,
+                  spec_k=spec_k, drafter=drafter)
         serve_ragged(engine, reqs, args.steps, **kw)     # warm/compile
         t0 = time.perf_counter()
         out = serve_ragged(engine, reqs, args.steps, **kw,
@@ -107,14 +123,16 @@ def main(argv=None):
 
     t0 = time.perf_counter()
     res = engine.generate(batch, args.steps, sampler=args.sampler,
-                          sampler_kw=sampler_kw,
+                          sampler_kw=sampler_kw, spec_k=spec_k,
+                          drafter=drafter,
                           key=jax.random.PRNGKey(args.seed))
     jax.block_until_ready(res.tokens)
     warm = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     res = engine.generate(batch, args.steps, sampler=args.sampler,
-                          sampler_kw=sampler_kw,
+                          sampler_kw=sampler_kw, spec_k=spec_k,
+                          drafter=drafter,
                           key=jax.random.PRNGKey(args.seed + 1))
     jax.block_until_ready(res.tokens)
     hot = time.perf_counter() - t0
@@ -122,6 +140,13 @@ def main(argv=None):
     toks = args.batch * args.steps
     print(f"generated {toks} tokens: warm {warm:.2f}s, hot {hot:.2f}s "
           f"({toks / hot:.2f} tok/s)")
+    if res.spec_stats:
+        st = res.spec_stats
+        acc = st["accepted"] / max(st["drafted"], 1)
+        print(f"speculative: {st['verify_steps']} verify steps for "
+              f"{st['generated']} tokens "
+              f"({st['verify_steps'] / max(st['generated'], 1):.2f} fwd/tok, "
+              f"acceptance {acc:.2f})")
     print("first sequence:", np.asarray(res.tokens[0])[:16].tolist())
     return res
 

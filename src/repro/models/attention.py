@@ -116,6 +116,38 @@ def commit_layers_paged(pages, rows, block_table, pos):
     return pages.at[:, phys, pos % bs].set(rows)
 
 
+def commit_layers_verify(cache, rows, pos, n_commit):
+    """Speculative-verify commit, (L, b, T, KV, hd) layout: write the chunk's
+    K/V rows (L, b, k, KV, hd) at times ``pos + j`` for the ACCEPTED prefix
+    ``j < n_commit[b]`` only. Rejected rows are redirected to column ``T``
+    (out of bounds — scatter updates there are dropped), so the cache after a
+    partial accept is bit-identical to one that never saw the rejected
+    drafts: rollback is a position rewind, no zeroing pass (DESIGN.md §10)."""
+    b, k = rows.shape[1], rows.shape[2]
+    t = cache.shape[2]
+    j = jnp.arange(k, dtype=jnp.int32)[None, :]
+    cols = jnp.where(j < n_commit[:, None], pos[:, None] + j, t)      # (b, k)
+    return cache.at[:, jnp.arange(b)[:, None], cols].set(rows)
+
+
+def commit_layers_paged_verify(pages, rows, block_table, pos, n_commit):
+    """Speculative-verify commit into the block pool (L, NB, BS, KV, hd):
+    row j of the chunk lands at virtual position ``pos + j``'s (physical
+    block, offset); rejected rows (``j >= n_commit``) are redirected past
+    the pool's block axis, where the scatter drops them — NOT to the
+    scheduler's sink block 0, which under the engine's identity tables is
+    a live block. The pool after a partial accept is therefore
+    bit-identical to one that never saw the rejected drafts."""
+    nb, bs = pages.shape[1], pages.shape[2]
+    b, k = rows.shape[1], rows.shape[2]
+    j = jnp.arange(k, dtype=jnp.int32)[None, :]
+    vpos = pos[:, None] + j                                           # (b, k)
+    idx = jnp.minimum(vpos // bs, block_table.shape[1] - 1)
+    phys = jnp.take_along_axis(block_table, idx, axis=1)              # (b, k)
+    phys = jnp.where(j < n_commit[:, None], phys, nb)                 # dropped
+    return pages.at[:, phys, vpos % bs].set(rows)
+
+
 def commit_layers_bkt(cache, rows, pos):
     """Deferred-decode commit, (L, b, KV, T, ...) layout (kvt / int8 caches)."""
     if jnp.asarray(pos).ndim:
@@ -489,6 +521,94 @@ def gqa_decode_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None,
     else:
         rows = (k_new, v_new)                                            # (b,1,kv,hd)
     return linear(p["wo"], ctx), rows
+
+
+def _verify_mask(t: int, pos, k: int, window, use_window):
+    """(b, k, t) additive mask for a k-token verify chunk starting at
+    ``pos`` (b,): query j (virtual position pos+j) sees columns <= pos+j —
+    exactly ``decode_mask`` row-by-row, so each chunk row reproduces the
+    single-token decode step's mask arrangement bit-for-bit."""
+    qpos = pos[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]     # (b, k)
+    col = jnp.arange(t)[None, None, :]
+    ok_full = col <= qpos[..., None]
+    if window is None:
+        ok = ok_full
+    else:
+        ok_local = ok_full & ((qpos[..., None] - col) < window)
+        ok = ok_local if use_window is None else jnp.where(use_window, ok_local, ok_full)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def gqa_verify_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None,
+                        use_window=None):
+    """Speculative-verify attention: k chunk tokens x (b, k, d_model) attend
+    over the read-only contiguous cache (slots >= pos still zero) plus the
+    chunk's own K/V rows with an intra-chunk causal mask, WITHOUT writing
+    the cache. Returns (y (b, k, q_dim), (k_rows, v_rows) (b, k, KV, hd))
+    for the caller to commit the accepted prefix via commit_layers_verify.
+
+    Row j of the chunk reproduces the arithmetic of the single-token decode
+    step that would run after committing rows 0..j-1 (same score columns,
+    same mask, same softmax arrangement), which is what makes greedy
+    speculative decoding token-identical to vanilla decode."""
+    k_cache, v_cache = cache
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    kv_heads = cfg.num_kv_heads
+    g = cfg.num_heads // kv_heads
+    t = k_cache.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    if not pos.ndim:
+        pos = jnp.full((b,), pos, jnp.int32)
+    positions = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _qkv(p, x, cfg, positions)        # (b,s,H,hd)/(b,s,KV,hd)
+
+    tp_t = t % max(logical.size("tp"), 1) == 0
+    k_cache = logical.constrain(k_cache, "dp", "tp" if tp_t else None, None, None)
+    v_cache = logical.constrain(v_cache, "dp", "tp" if tp_t else None, None, None)
+    qg = q.reshape(b, s, kv_heads, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k_cache).astype(jnp.float32)
+    cur = jnp.einsum("bskgh,bmkh->bkgsm", qg, k_new).astype(jnp.float32)
+    mask = _verify_mask(t, pos, s, window, use_window)
+    # the scatter/zero/explicit-chunk-V arrangement is shared with the
+    # paged gather path so the two verify flavors cannot drift
+    from repro.kernels import ref as _kref
+
+    ctx = _kref.verify_attend(scores, cur, v_new, v_cache, pos, mask,
+                              scale=_gqa_scale(cfg),
+                              softcap=cfg.attn_logit_softcap or None)
+    return linear(p["wo"], ctx), (k_new, v_new)
+
+
+def gqa_verify_paged(p, x, pages, block_table, pos, cfg: ModelConfig, *,
+                     window=None, use_window=None):
+    """Paged speculative-verify attention: the chunk attends over the block
+    pool through each row's block table (kernels/ops.py::paged_verify).
+    Same contract as gqa_verify_deferred; rows are committed by the caller
+    via commit_layers_paged_verify (rejected rows -> sink block)."""
+    from repro.kernels import ops as _kops
+
+    k_pages, v_pages = pages
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    kv_heads = cfg.num_kv_heads
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    g = cfg.num_heads // kv_heads
+    t = block_table.shape[1] * k_pages.shape[1]
+    tp_kv = kv_heads % max(logical.size("tp"), 1) == 0
+    pspec = (None, None, "tp" if tp_kv else None, None)
+    k_pages = logical.constrain(k_pages, *pspec)
+    v_pages = logical.constrain(v_pages, *pspec)
+    qg = q.reshape(b, s, kv_heads, g, hd)
+    mask = _verify_mask(t, pos, s, window, use_window)
+    ctx = _kops.paged_verify(
+        qg, k_pages, v_pages, block_table, pos, k_new, v_new, mask,
+        scale=_gqa_scale(cfg), softcap=cfg.attn_logit_softcap or None,
+    )
+    ctx = logical.constrain(ctx, "dp", None, None)
+    return linear(p["wo"], ctx), (k_new, v_new)
 
 
 def gqa_decode_paged(p, x, pages, block_table, pos, cfg: ModelConfig, *,

@@ -68,6 +68,16 @@ class Model:
     supports_paged: bool = False
     init_paged_cache: Callable | None = None   # (num_blocks, block_size, dt) -> pool
     decode_paged: Callable | None = None       # (params, tok, pool, table, pos) -> (logits, pool)
+    # Speculative-verify contract (DESIGN.md §10): a chunked k-token decode
+    # that returns per-position logits WITHOUT writing the cache, plus a
+    # commit that writes only the accepted prefix (rejected drafts dropped
+    # by out-of-bounds scatter). GQA decoder_lm families only — the same
+    # layout class as supports_paged.
+    supports_spec: bool = False
+    verify: Callable | None = None             # (params, toks (b,k), cache, pos) -> (logits (b,k,V), rows)
+    commit_verify: Callable | None = None      # (cache, rows, pos, n_commit) -> cache
+    verify_paged: Callable | None = None       # (params, toks, pool, table, pos) -> (logits, rows)
+    commit_verify_paged: Callable | None = None  # (pool, rows, table, pos, n_commit) -> pool
 
 
 def build(cfg: ModelConfig) -> Model:
@@ -101,6 +111,21 @@ def build(cfg: ModelConfig) -> Model:
             decode_paged=(
                 (lambda p, tok, cache, table, pos:
                  _tf.lm_decode_paged(p, tok, cache, table, pos, cfg))
+                if paged else None),
+            supports_spec=paged,
+            verify=(
+                (lambda p, toks, cache, pos: _tf.lm_verify(p, toks, cache, pos, cfg))
+                if paged else None),
+            commit_verify=(
+                (lambda cache, rows, pos, n: _tf.lm_commit_verify(cache, rows, pos, n))
+                if paged else None),
+            verify_paged=(
+                (lambda p, toks, cache, table, pos:
+                 _tf.lm_verify_paged(p, toks, cache, table, pos, cfg))
+                if paged else None),
+            commit_verify_paged=(
+                (lambda cache, rows, table, pos, n:
+                 _tf.lm_commit_verify_paged(cache, rows, table, pos, n))
                 if paged else None),
         )
 

@@ -222,6 +222,117 @@ def lm_decode_paged(params, token, cache, block_table, pos, cfg: ModelConfig):
     return _logits(params, x, cfg), new_cache
 
 
+# ---------------------------------------------------------------------------
+# speculative-verify: k-token chunked decode (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _verify_embed(params, tokens, cfg: ModelConfig):
+    x = embedding_lookup(params["embed"], tokens, cfg.cdtype())
+    if cfg.gemma_norms:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def _check_verify_layout(cfg: ModelConfig):
+    if cfg.mla:
+        raise ValueError(
+            f"{cfg.arch_id}: speculative verify covers the GQA layouts; the "
+            "MLA latent cache keeps the single-token path (supports_spec=False)"
+        )
+    if flags.get("kvt_cache_layout") or flags.get("int8_kv_cache"):
+        raise ValueError("speculative verify supports the base float KV "
+                         "layout (kvt_cache_layout / int8_kv_cache flags off)")
+
+
+def lm_verify(params, tokens, cache, pos, cfg: ModelConfig):
+    """Chunked multi-token decode for speculative verification. tokens
+    (b, k) int32 — the current token followed by k-1 drafted candidates;
+    cache the contiguous {k, v} layout (slots >= pos zero); pos (b,) or
+    scalar int32 virtual position of tokens[:, 0]. Returns
+    (logits (b, k, vocab_padded), rows {k, v} (L, b, k, KV, hd)).
+
+    The cache is NOT written: row j attends over committed history plus
+    chunk rows 0..j (intra-chunk causal, scattered into the columns the
+    sequential decode would occupy), and the caller commits only the
+    accepted prefix with :func:`lm_commit_verify` — one forward pass
+    streams each weight block once for up to k tokens (the GQMM
+    amortization LlamaF §II-B prices per token)."""
+    _check_verify_layout(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    if not pos.ndim:
+        pos = jnp.full((tokens.shape[0],), pos, jnp.int32)
+    x = _verify_embed(params, tokens, cfg)
+    windows = _layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, use_window, layer_cache = scanned
+        rows = {}
+
+        def attn_fn(h):
+            y, (k, v) = attn.gqa_verify_deferred(
+                lp["attn"], h, (layer_cache["k"], layer_cache["v"]), pos, cfg,
+                window=cfg.sliding_window, use_window=use_window,
+            )
+            rows["k"], rows["v"] = k, v
+            return y
+
+        return _block(lp, x, cfg, attn_fn), rows
+
+    x, rows = jax.lax.scan(body, x, (params["layers"], windows, cache))
+    return _logits(params, x, cfg), rows
+
+
+def lm_commit_verify(cache, rows, pos, n_commit):
+    """Commit the accepted prefix of a verify chunk: rows[:, :, :n_commit[b]]
+    land at positions pos[b]..pos[b]+n_commit[b]-1; rejected rows are
+    DROPPED (redirected out of bounds), so the cache is bit-identical to a
+    trajectory that never drafted them — rollback is ``pos + n_commit``."""
+    return {
+        "k": attn.commit_layers_verify(cache["k"], rows["k"], pos, n_commit),
+        "v": attn.commit_layers_verify(cache["v"], rows["v"], pos, n_commit),
+    }
+
+
+def lm_verify_paged(params, tokens, cache, block_table, pos, cfg: ModelConfig):
+    """Paged sibling of :func:`lm_verify`: the chunk attends through each
+    row's block table over the ``*_pages`` pool (kernels/ops.py
+    ``paged_verify``). Same return contract; commit via
+    :func:`lm_commit_verify_paged` (rejected rows dropped out of bounds)."""
+    _check_verify_layout(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    if not pos.ndim:
+        pos = jnp.full((tokens.shape[0],), pos, jnp.int32)
+    x = _verify_embed(params, tokens, cfg)
+    windows = _layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, use_window, layer_cache = scanned
+        rows = {}
+
+        def attn_fn(h):
+            y, (k, v) = attn.gqa_verify_paged(
+                lp["attn"], h, (layer_cache["k_pages"], layer_cache["v_pages"]),
+                block_table, pos, cfg,
+                window=cfg.sliding_window, use_window=use_window,
+            )
+            rows["k"], rows["v"] = k, v
+            return y
+
+        return _block(lp, x, cfg, attn_fn), rows
+
+    x, rows = jax.lax.scan(body, x, (params["layers"], windows, cache))
+    return _logits(params, x, cfg), rows
+
+
+def lm_commit_verify_paged(cache, rows, block_table, pos, n_commit):
+    return {
+        "k_pages": attn.commit_layers_paged_verify(
+            cache["k_pages"], rows["k"], block_table, pos, n_commit),
+        "v_pages": attn.commit_layers_paged_verify(
+            cache["v_pages"], rows["v"], block_table, pos, n_commit),
+    }
+
+
 def contiguous_to_paged(cache, block_size: int):
     """Reshape a contiguous (L, b, T, KV, hd) cache into a block pool plus
     the identity block tables: row i owns blocks [i*MB, (i+1)*MB). T must be

@@ -25,6 +25,11 @@ Families whose prefill carries sequential state through every token (rwkv6,
 zamba2's SSM backbone, enc-dec) cannot mask pads out of a recurrence; for
 them the bucketed mode groups by exact length (no pads, always correct) and
 the continuous/paged modes are unavailable.
+
+Both schedulers also run **speculatively** (``spec_k``, serving/spec.py):
+each decode round drafts ``spec_k - 1`` candidates per slot from its token
+history and verifies the chunk in one forward pass — 1..spec_k tokens per
+weight stream, token-identical greedy outputs (DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -153,18 +158,38 @@ class SlotScheduler:
     """
 
     def __init__(self, engine, *, slots: int = 4, chunk: int = 4,
-                 sampler: str = "greedy", sampler_kw=None):
+                 sampler: str = "greedy", sampler_kw=None,
+                 spec_k: int | None = None, drafter=None):
         if not engine.model.supports_lengths:
             raise ValueError(
                 f"{engine.cfg.arch_id}: continuous batching needs length-aware "
                 "prefill and per-request decode positions (decoder_lm families)"
             )
+        if spec_k is not None:
+            if spec_k < 2:
+                raise ValueError(f"spec_k must be >= 2, got {spec_k}")
+            if not engine.model.supports_spec:
+                raise ValueError(
+                    f"{engine.cfg.arch_id}: model family has no speculative "
+                    "verify path (GQA decoder_lm families only)"
+                )
         self.engine = engine
         self.slots = slots
         self.chunk = chunk
+        self.spec_k = spec_k
         self._sampler = make_sampler(sampler, **dict(sampler_kw or {}))
         self._prefill_jit: dict[int, callable] = {}
         self.last_positions = None     # final per-slot positions (debug)
+        self.last_spec_stats = None    # per-serve speculative accounting
+        if spec_k is not None:
+            from repro.serving.spec import NgramDrafter, build_verify_step
+
+            self._drafter = drafter if drafter is not None else NgramDrafter()
+            # verify -> accept -> commit-accepted-prefix in one jitted
+            # program; per-slot budgets and the live mask clamp the commit
+            self._verify_step = build_verify_step(
+                engine.model, sampler=sampler, sampler_kw=sampler_kw,
+                paged=False)
 
         model, sample = engine.model, self._sampler
 
@@ -224,12 +249,19 @@ class SlotScheduler:
         def budget(r: Request) -> int:
             return r.max_new if r.max_new is not None else max_new_tokens
 
+        # a verify chunk touches score columns up to pos + spec_k - 1, so
+        # speculative serving needs spec_k slots of slack past the vanilla
+        # requirement (frozen slots included: their chunks still index)
+        slack = self.spec_k or 0
         for r in requests:
-            need = max(bucket_length(len(r.tokens)), len(r.tokens) + budget(r))
+            need = max(bucket_length(len(r.tokens)),
+                       len(r.tokens) + budget(r) + slack)
             if need > engine.cache_len:
                 raise ValueError(
                     f"request {r.id}: len={len(r.tokens)} + "
-                    f"max_new={budget(r)} needs {need} cache slots "
+                    f"max_new={budget(r)}"
+                    + (f" + spec_k={slack}" if slack else "")
+                    + f" needs {need} cache slots "
                     f"but cache_len={engine.cache_len}"
                 )
 
@@ -241,6 +273,9 @@ class SlotScheduler:
         pos = np.zeros((B,), np.int32)
         out: dict[int, Response] = {}
         key = key if key is not None else jax.random.PRNGKey(0)
+        self.last_spec_stats = (
+            {"verify_steps": 0, "generated": 0, "drafted": 0, "accepted": 0}
+            if self.spec_k is not None else None)
 
         def finish(s: int):
             r = slot_req[s]
@@ -270,6 +305,10 @@ class SlotScheduler:
                 for s, r, t in zip(slots_g, group, t0):
                     slot_req[s], slot_toks[s] = r, [int(t)]
                     tok[s], pos[s] = int(t), len(r.tokens)
+                    if self.last_spec_stats is not None:
+                        # the prefill-sampled token is delivered work too —
+                        # keeps 'generated' comparable with engine spec_stats
+                        self.last_spec_stats["generated"] += 1
                     if budget(r) <= 1 or (eos is not None and int(t) == eos):
                         finish(s)
 
@@ -283,13 +322,47 @@ class SlotScheduler:
                 f"live slot position escaped the cache: {pos[live]} "
                 f">= cache_len={engine.cache_len}")
             key, kc = jax.random.split(key)
+            if self.spec_k is not None:
+                # speculative step: draft on the host (per-slot token
+                # history), verify the chunk in one forward pass, keep the
+                # accepted prefix — 1..spec_k tokens per weight stream
+                from repro.serving.spec import draft_chunk, take_accepted
+
+                K = self.spec_k
+                remaining = np.asarray(
+                    [budget(slot_req[s]) - len(slot_toks[s])
+                     if slot_req[s] is not None else 0 for s in range(B)],
+                    np.int32)
+                chunk_np = draft_chunk(
+                    self._drafter, tok, live,
+                    lambda s: slot_req[s].tokens + slot_toks[s], K)
+                out_d, n_out_d, cache, pos_d, _ = self._verify_step(
+                    engine.params, jnp.asarray(chunk_np), cache,
+                    jnp.asarray(pos), jnp.asarray(live),
+                    jnp.asarray(remaining), kc,
+                )
+                out_np, n_out, pos = jax.device_get((out_d, n_out_d, pos_d))
+                pos = pos.copy()
+                st = self.last_spec_stats
+                st["verify_steps"] += 1
+                for s in np.flatnonzero(live):
+                    slot_toks[s].extend(take_accepted(
+                        out_np[s], n_out[s], remaining[s], eos, st, K))
+                    tok[s] = slot_toks[s][-1]
+                    n = budget(slot_req[s])
+                    if len(slot_toks[s]) >= n or (
+                            eos is not None and eos in slot_toks[s][:n]):
+                        finish(s)
+                continue
             toks_d, cache, pos_d = self._decode_chunk(
                 engine.params, jnp.asarray(tok), cache, jnp.asarray(pos),
                 jnp.asarray(live), jax.random.split(kc, chunk),
             )
-            toks_np = np.asarray(toks_d)                # (chunk, B)
-            tok = np.asarray(toks_np[-1]).copy()
-            pos = np.asarray(pos_d).copy()
+            # ONE host sync per chunk: separate np.asarray() calls on the
+            # chunk outputs each forced their own device round-trip
+            toks_np, pos = jax.device_get((toks_d, pos_d))   # (chunk, B), (B,)
+            tok = toks_np[-1].copy()
+            pos = pos.copy()
             for s in range(B):
                 if slot_req[s] is None:
                     continue
@@ -307,15 +380,18 @@ class SlotScheduler:
 
 def serve_continuous(engine, requests: Sequence[Request], max_new_tokens: int,
                      *, sampler: str = "greedy", sampler_kw=None, key=None,
-                     slots: int = 4, chunk: int = 4) -> list[Response]:
+                     slots: int = 4, chunk: int = 4, spec_k: int | None = None,
+                     drafter=None) -> list[Response]:
     """Continuous batching through a per-engine cached ``SlotScheduler``."""
     cache = getattr(engine, "_slot_schedulers", None)
     if cache is None:
         cache = engine._slot_schedulers = {}
-    sig = (slots, chunk, sampler, sampler_sig(sampler_kw))
+    sig = (slots, chunk, sampler, sampler_sig(sampler_kw), spec_k,
+           id(drafter) if drafter is not None else None)
     if sig not in cache:
         cache[sig] = SlotScheduler(engine, slots=slots, chunk=chunk,
-                                   sampler=sampler, sampler_kw=sampler_kw)
+                                   sampler=sampler, sampler_kw=sampler_kw,
+                                   spec_k=spec_k, drafter=drafter)
     return cache[sig].serve(requests, max_new_tokens, key=key)
 
 
@@ -339,27 +415,41 @@ def resolve_mode(engine, mode: str) -> str:
 def serve_ragged(engine, requests: Sequence[Request], max_new_tokens: int,
                  *, sampler: str = "greedy", sampler_kw=None, key=None,
                  mode: str = "auto", slots: int = 4, chunk: int = 4,
-                 block_size: int = 8, num_blocks: int | None = None) -> list[Response]:
+                 block_size: int = 8, num_blocks: int | None = None,
+                 spec_k: int | None = None, drafter=None) -> list[Response]:
     """Serve a ragged request set; responses come back in arrival order.
 
     mode="paged" runs the block-pool scheduler (serving/paged.py: admission
     and block reclaim at any decode step), mode="continuous" the contiguous
     slot scheduler, mode="bucketed" the per-bucket generate loop;
-    mode="auto" prefers paged, then continuous, by family capability."""
+    mode="auto" prefers paged, then continuous, by family capability.
+
+    ``spec_k`` >= 2 turns the paged/continuous schedulers speculative: each
+    step verifies spec_k candidate tokens per slot in one forward pass
+    (serving/spec.py; ``drafter`` defaults to the n-gram prompt-lookup
+    drafter). The bucketed fallback has no speculative path — its families
+    lack the verify contract."""
     if not requests:
         return []
     mode = resolve_mode(engine, mode)
+    if spec_k is not None and mode == "bucketed":
+        raise ValueError(
+            "speculative decoding needs the continuous or paged scheduler "
+            f"(resolved mode is 'bucketed' for {engine.cfg.arch_id})"
+        )
     if mode == "paged":
         from repro.serving.paged import serve_paged   # avoid import cycle
 
         return serve_paged(engine, requests, max_new_tokens, sampler=sampler,
                            sampler_kw=sampler_kw, key=key, slots=slots,
                            chunk=chunk, block_size=block_size,
-                           num_blocks=num_blocks)
+                           num_blocks=num_blocks, spec_k=spec_k,
+                           drafter=drafter)
     if mode == "continuous":
         return serve_continuous(engine, requests, max_new_tokens,
                                 sampler=sampler, sampler_kw=sampler_kw,
-                                key=key, slots=slots, chunk=chunk)
+                                key=key, slots=slots, chunk=chunk,
+                                spec_k=spec_k, drafter=drafter)
     if mode == "bucketed":
         return serve_bucketed(engine, requests, max_new_tokens,
                               sampler=sampler, sampler_kw=sampler_kw, key=key)

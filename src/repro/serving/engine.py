@@ -30,8 +30,22 @@ from repro.serving.sampling import make_sampler, sampler_sig
 @dataclasses.dataclass
 class GenerationResult:
     tokens: jax.Array         # (b, max_new_tokens) sampled tokens
-    logits_last: jax.Array    # (b, vocab) final-step logits
-    steps: int
+    # (b, vocab) final-step logits. CAVEAT — the two decode paths differ:
+    # the vanilla scan returns the distribution AFTER the last returned
+    # token (the discarded step-max_new+1 sample's logits); the speculative
+    # path returns the accept-path distribution that PRODUCED each row's
+    # final kept token — one position earlier, since the chunk never fed
+    # that token back through the model (and one row later than that when
+    # an EOS truncated the chunk: the device clamp knows budgets, not EOS).
+    # Don't compare across paths or resume sampling from the spec-path value.
+    logits_last: jax.Array
+    steps: int                # decode forward passes (spec: verify steps)
+    # speculative-decode accounting (None for the vanilla path):
+    # {"verify_steps", "generated", "drafted", "accepted"} — verify forward
+    # passes, useful tokens DELIVERED (including each row's prefill-sampled
+    # token; post-EOS / over-budget chunk tails excluded — same semantics
+    # as the schedulers' last_spec_stats), proposed and accepted drafts.
+    spec_stats: dict[str, int] | None = None
 
 
 class InferenceEngine:
@@ -135,14 +149,22 @@ class InferenceEngine:
 
     def generate(self, batch, max_new_tokens: int, *, sampler: str = "greedy",
                  sampler_kw=None, key=None, lengths=None, paged: bool = False,
-                 block_size: int = 8) -> GenerationResult:
+                 block_size: int = 8, spec_k: int | None = None,
+                 drafter=None) -> GenerationResult:
         """``lengths`` (b,) enables ragged right-padded prompts: row i's pads
         are masked in prefill, its first token is sampled from the logits at
         lengths[i]-1, and decode runs on per-request position counters.
         ``sampler_kw`` reaches the sampler (top_p's p / temperature).
         ``paged`` decodes through the block-table path over an
         identity-mapped block pool — token-identical to the contiguous path
-        (the mixed-traffic scheduler is serving/paged.py)."""
+        (the mixed-traffic scheduler is serving/paged.py).
+
+        ``spec_k`` >= 2 switches decode to speculative chunks: each step
+        verifies the current token plus ``spec_k - 1`` drafted candidates in
+        ONE forward pass (serving/spec.py), producing 1..spec_k tokens per
+        weight stream. ``drafter`` defaults to the zero-weight n-gram
+        prompt-lookup drafter. Greedy speculative output is token-identical
+        to vanilla decode (CI-gated, benchmarks/run.py spec)."""
         if paged and not self.model.supports_paged:
             raise ValueError(
                 f"{self.cfg.arch_id}: model family has no paged decode path "
@@ -162,12 +184,31 @@ class InferenceEngine:
         # validate up front: dynamic_update_slice clamps at the cache boundary,
         # which would silently overwrite the last slot instead of failing
         start_max = prompt_len if lengths is None else int(np.max(np.asarray(lengths)))
-        need = max(prompt_len, start_max + max_new_tokens)
+        # a verify chunk reads/writes score columns up to pos + spec_k - 1,
+        # so the speculative path needs spec_k slots of slack past the
+        # vanilla requirement
+        need = max(prompt_len, start_max + max_new_tokens + (spec_k or 0))
         if need > self.cache_len:
             raise ValueError(
                 f"KV cache overflow: prompt_len={prompt_len} (max start "
-                f"{start_max}) + max_new_tokens={max_new_tokens} needs "
-                f"{need} slots but cache_len={self.cache_len}"
+                f"{start_max}) + max_new_tokens={max_new_tokens}"
+                + (f" + spec_k={spec_k}" if spec_k else "")
+                + f" needs {need} slots but cache_len={self.cache_len}"
+            )
+        if spec_k is not None:
+            if spec_k < 2:
+                raise ValueError(f"spec_k must be >= 2 (got {spec_k}): a "
+                                 "chunk is the current token plus >=1 draft")
+            if not self.model.supports_spec:
+                raise ValueError(
+                    f"{self.cfg.arch_id}: model family has no speculative "
+                    "verify path (GQA decoder_lm families only)"
+                )
+            key = key if key is not None else jax.random.PRNGKey(0)
+            return self._generate_spec(
+                batch, max_new_tokens, spec_k, drafter, sampler=sampler,
+                sampler_kw=sampler_kw, key=key, lengths=lengths, paged=paged,
+                block_size=block_size,
             )
         sig = (max_new_tokens, sampler, prompt_len, lengths is not None,
                sampler_sig(sampler_kw), paged, block_size)
@@ -176,6 +217,130 @@ class InferenceEngine:
         key = key if key is not None else jax.random.PRNGKey(0)
         toks, logits = self._generate_jit[sig](self.params, batch, key)
         return GenerationResult(tokens=toks, logits_last=logits, steps=max_new_tokens)
+
+    # -- speculative decode (serving/spec.py, DESIGN.md §10) -----------------
+    def _spec_prefill_fn(self, prompt_len: int, sampler_name: str,
+                         ragged: bool, sampler_kw, paged: bool,
+                         block_size: int):
+        sig = ("spec_prefill", prompt_len, sampler_name, ragged,
+               sampler_sig(sampler_kw), paged, block_size)
+        if sig not in self._generate_jit:
+            sampler = make_sampler(sampler_name, **dict(sampler_kw or {}))
+            model, cache_len = self.model, self.cache_len
+            if paged:
+                cache_len = -(-cache_len // block_size) * block_size
+
+            @jax.jit
+            def run(params, batch, key):
+                logits, cache = model.prefill(params, batch, cache_len)
+                tok0 = sampler(logits, key)
+                if ragged:
+                    pos0 = batch["lengths"].astype(jnp.int32)
+                else:
+                    pos0 = jnp.full((tok0.shape[0],), prompt_len, jnp.int32)
+                if paged:
+                    from repro.models.transformer import contiguous_to_paged
+
+                    cache, table = contiguous_to_paged(cache, block_size)
+                    return tok0, logits, cache, table, pos0
+                return tok0, logits, cache, pos0
+
+            self._generate_jit[sig] = run
+        return self._generate_jit[sig]
+
+    def _spec_step_fn(self, spec_k: int, sampler_name: str, sampler_kw,
+                      paged: bool):
+        from repro.serving.spec import build_verify_step
+
+        sig = ("spec_step", spec_k, sampler_name, sampler_sig(sampler_kw), paged)
+        if sig not in self._generate_jit:
+            self._generate_jit[sig] = build_verify_step(
+                self.model, sampler=sampler_name, sampler_kw=sampler_kw,
+                paged=paged)
+        return self._generate_jit[sig]
+
+    def _generate_spec(self, batch, max_new: int, spec_k: int, drafter, *,
+                       sampler: str, sampler_kw, key, lengths, paged: bool,
+                       block_size: int) -> GenerationResult:
+        """Host-driven speculative generation: draft on the host (the n-gram
+        drafter needs the token history), verify+accept+commit in one jitted
+        step. Each verify step advances every live row by 1..spec_k tokens
+        for a single weight stream; rows progress unevenly, so positions are
+        per-row vectors throughout (the ragged-decode machinery)."""
+        from repro.serving.spec import NgramDrafter, draft_chunk, take_accepted
+
+        drafter = drafter if drafter is not None else NgramDrafter()
+        eos = self.eos_id
+        toks_np = np.asarray(batch["tokens"])
+        b, prompt_len = toks_np.shape
+        lens = (np.asarray(lengths, np.int64) if lengths is not None
+                else np.full((b,), prompt_len, np.int64))
+        ragged = lengths is not None
+        prefill = self._spec_prefill_fn(prompt_len, sampler, ragged,
+                                        sampler_kw, paged, block_size)
+        step = self._spec_step_fn(spec_k, sampler, sampler_kw, paged)
+
+        key0, key_steps = jax.random.split(key)
+        if paged:
+            tok0_d, logits0, cache, table, pos = prefill(self.params, batch, key0)
+        else:
+            tok0_d, logits0, cache, pos = prefill(self.params, batch, key0)
+        tok0 = np.asarray(tok0_d)
+        ctx = [[int(t) for t in toks_np[i, : lens[i]]] for i in range(b)]
+        outs: list[list[int]] = [[] for _ in range(b)]
+        done = np.zeros((b,), bool)
+        for i in range(b):
+            ctx[i].append(int(tok0[i]))
+            outs[i].append(int(tok0[i]))
+            if eos is not None and int(tok0[i]) == eos:
+                done[i] = True
+        last_tok = tok0.astype(np.int32).copy()
+        stats = {"verify_steps": 0, "generated": b, "drafted": 0, "accepted": 0}
+        # seed with the prefill logits: a row that finishes before its first
+        # verify step (max_new == 1, or EOS on the prefill-sampled token)
+        # still reports the distribution that produced its final token
+        logits_last = np.asarray(logits0, np.float32).copy()
+
+        while True:
+            live = np.asarray([not done[i] and len(outs[i]) < max_new
+                               for i in range(b)])
+            if not live.any():
+                break
+            chunk = draft_chunk(drafter, last_tok, live,
+                                lambda i: ctx[i], spec_k)
+            remaining = np.asarray(
+                [max_new - len(outs[i]) for i in range(b)], np.int32)
+            key_steps, ks = jax.random.split(key_steps)
+            args = (self.params, jnp.asarray(chunk), cache)
+            args += ((table,) if paged else ())
+            args += (pos, jnp.asarray(live), jnp.asarray(remaining), ks)
+            out_d, n_out_d, cache, pos, last_d = step(*args)
+            # one transfer for everything the host needs this step
+            out, n_out, last_np = jax.device_get((out_d, n_out_d, last_d))
+            stats["verify_steps"] += 1
+            for i in np.flatnonzero(live):
+                new = take_accepted(out[i], n_out[i], remaining[i], eos,
+                                    stats, spec_k)
+                outs[i].extend(new)
+                ctx[i].extend(new)
+                if new:
+                    last_tok[i] = new[-1]
+                    # the accept-path logits of this row's newest token
+                    # (see the GenerationResult logits_last caveat)
+                    logits_last[i] = last_np[i]
+                if eos is not None and new and new[-1] == eos:
+                    done[i] = True
+                if len(outs[i]) >= max_new:
+                    done[i] = True
+
+        pad = eos if eos is not None else 0
+        tokens = np.full((b, max_new), pad, np.int32)
+        for i in range(b):
+            tokens[i, : len(outs[i])] = outs[i][:max_new]
+        return GenerationResult(
+            tokens=jnp.asarray(tokens), logits_last=jnp.asarray(logits_last),
+            steps=stats["verify_steps"], spec_stats=stats,
+        )
 
     # -- fault tolerance ------------------------------------------------------
     @staticmethod

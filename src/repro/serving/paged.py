@@ -107,15 +107,18 @@ class PagedScheduler:
     def __init__(self, engine, *, slots: int = 4, chunk: int = 4,
                  block_size: int = 8, num_blocks: int | None = None,
                  max_len: int | None = None, sampler: str = "greedy",
-                 sampler_kw=None):
+                 sampler_kw=None, spec_k: int | None = None, drafter=None):
         if not engine.model.supports_paged:
             raise ValueError(
                 f"{engine.cfg.arch_id}: paged serving needs a block-pool cache "
                 "(GQA decoder_lm families; MLA/recurrent keep the contiguous path)"
             )
+        if spec_k is not None and spec_k < 2:
+            raise ValueError(f"spec_k must be >= 2, got {spec_k}")
         self.engine = engine
         self.slots = slots
         self.chunk = chunk
+        self.spec_k = spec_k
         self.block_size = block_size
         self.max_len = max_len if max_len is not None else engine.cache_len
         self.blocks_per_req = math.ceil(self.max_len / block_size)
@@ -128,6 +131,17 @@ class PagedScheduler:
         self._prefill_jit = None
         self.last_peak_blocks = 0          # residency high-water of last serve
         self.last_positions: np.ndarray | None = None   # debug/introspection
+        self.last_spec_stats = None        # per-serve speculative accounting
+        # block lookahead per decode round: a verify chunk commits up to
+        # spec_k rows per slot in one step
+        self._ahead = chunk if spec_k is None else max(chunk, spec_k)
+        if spec_k is not None:
+            from repro.serving.spec import NgramDrafter, build_verify_step
+
+            self._drafter = drafter if drafter is not None else NgramDrafter()
+            self._verify_step = build_verify_step(
+                engine.model, sampler=sampler, sampler_kw=sampler_kw,
+                paged=True)
 
         model, sample, eos = engine.model, self._sampler, engine.eos_id
         mb = self.blocks_per_req
@@ -222,13 +236,17 @@ class PagedScheduler:
         def budget(r: Request) -> int:
             return r.max_new if r.max_new is not None else max_new_tokens
 
+        # verify chunks index score columns up to pos + spec_k - 1, so the
+        # speculative mode needs spec_k columns of table slack
+        slack = self.spec_k or 0
         for r in requests:
             need = max(self._prompt_pad(len(r.tokens)),
-                       len(r.tokens) + budget(r))
+                       len(r.tokens) + budget(r) + slack)
             if need > mb * bs:
                 raise ValueError(
-                    f"request {r.id}: len={len(r.tokens)} + max_new={budget(r)} "
-                    f"needs {need} cache slots but the paged table covers "
+                    f"request {r.id}: len={len(r.tokens)} + max_new={budget(r)}"
+                    + (f" + spec_k={slack}" if slack else "")
+                    + f" needs {need} cache slots but the paged table covers "
                     f"{mb} blocks x {bs} = {mb * bs}"
                 )
             if self._blocks_needed(r, budget(r)) > self.num_blocks - 1:
@@ -252,6 +270,9 @@ class PagedScheduler:
         remaining = np.zeros((B,), np.int32)
         out: dict[int, Response] = {}
         key = key if key is not None else jax.random.PRNGKey(0)
+        self.last_spec_stats = (
+            {"verify_steps": 0, "generated": 0, "drafted": 0, "accepted": 0}
+            if self.spec_k is not None else None)
 
         def reserved_backlog() -> int:
             """Blocks the live slots may still demand beyond what they hold."""
@@ -269,9 +290,10 @@ class PagedScheduler:
             live[s] = False                    # position stays frozen
 
         def ensure_blocks(s: int):
-            """Grow slot ``s`` to cover the next chunk of decode commits —
+            """Grow slot ``s`` to cover the next round of decode commits
+            (``chunk`` single-token steps, or one spec_k-row verify chunk) —
             reservation-gated admission guarantees this never fails."""
-            target = min(math.ceil((int(pos[s]) + self.chunk) / bs), slot_need[s])
+            target = min(math.ceil((int(pos[s]) + self._ahead) / bs), slot_need[s])
             delta = target - len(slot_blocks[s])
             if delta > 0:
                 new = pool.alloc(delta)
@@ -314,6 +336,10 @@ class PagedScheduler:
                     slot_toks[s] = [int(t)]
                     tok[s], pos[s] = int(t), len(r.tokens)
                     remaining[s] = budget(r) - 1
+                    if self.last_spec_stats is not None:
+                        # the prefill-sampled token is delivered work too —
+                        # keeps 'generated' comparable with engine spec_stats
+                        self.last_spec_stats["generated"] += 1
                     if budget(r) <= 1 or (eos is not None and int(t) == eos):
                         finish(s)
 
@@ -327,14 +353,48 @@ class PagedScheduler:
                     ensure_blocks(s)
 
             key, kc = jax.random.split(key)
+            if self.spec_k is not None:
+                # speculative round: one verify forward advances every live
+                # slot by 1..spec_k tokens; rejected rows never reach the
+                # pool (out-of-bounds drop), blocks were grown to cover the
+                # worst-case accepted chunk by ensure_blocks above
+                from repro.serving.spec import draft_chunk, take_accepted
+
+                K = self.spec_k
+                chunk_np = draft_chunk(
+                    self._drafter, tok, live,
+                    lambda s: slot_req[s].tokens + slot_toks[s], K)
+                out_d, n_out_d, cache, pos_d, _ = self._verify_step(
+                    engine.params, jnp.asarray(chunk_np), cache,
+                    jnp.asarray(table), jnp.asarray(pos), jnp.asarray(live),
+                    jnp.asarray(remaining), kc,
+                )
+                out_np, n_out, pos = jax.device_get((out_d, n_out_d, pos_d))
+                pos = pos.copy()
+                st = self.last_spec_stats
+                st["verify_steps"] += 1
+                assert not live.any() or int(pos[live].max()) < mb * bs, (
+                    f"live verify position escaped the block table: {pos[live]}")
+                for s in np.flatnonzero(live):
+                    slot_toks[s].extend(take_accepted(
+                        out_np[s], n_out[s], remaining[s], eos, st, K))
+                    tok[s] = slot_toks[s][-1]
+                    n = budget(slot_req[s])
+                    remaining[s] = n - len(slot_toks[s])
+                    if len(slot_toks[s]) >= n or (
+                            eos is not None and eos in slot_toks[s][:n]):
+                        finish(s)
+                continue
             toks_d, steps, cache, pos_d = self._decode_until(
                 engine.params, jnp.asarray(tok), cache, jnp.asarray(table),
                 jnp.asarray(pos), jnp.asarray(live), jnp.asarray(remaining),
                 jax.random.split(kc, self.chunk),
             )
-            steps = int(steps)
-            toks_np = np.asarray(toks_d)[:steps]          # (steps, B)
-            pos = np.asarray(pos_d).copy()
+            # ONE host sync per round: int(steps) + two np.asarray() calls
+            # were three separate device round-trips on the hot loop
+            steps, toks_all, pos = jax.device_get((steps, toks_d, pos_d))
+            toks_np = toks_all[: int(steps)]              # (steps, B)
+            pos = pos.copy()
             assert not live.any() or int(pos[live].max()) < mb * bs, (
                 f"live decode position escaped the block table: {pos[live]}")
             for s in range(B):
@@ -361,16 +421,20 @@ class PagedScheduler:
 def serve_paged(engine, requests: Sequence[Request], max_new_tokens: int,
                 *, sampler: str = "greedy", sampler_kw=None, key=None,
                 slots: int = 4, chunk: int = 4, block_size: int = 8,
-                num_blocks: int | None = None) -> list[Response]:
+                num_blocks: int | None = None, spec_k: int | None = None,
+                drafter=None) -> list[Response]:
     """Paged continuous batching through a per-engine cached scheduler."""
     cache = getattr(engine, "_paged_schedulers", None)
     if cache is None:
         cache = engine._paged_schedulers = {}
-    sig = (slots, chunk, block_size, num_blocks, sampler, sampler_sig(sampler_kw))
+    sig = (slots, chunk, block_size, num_blocks, sampler,
+           sampler_sig(sampler_kw), spec_k,
+           id(drafter) if drafter is not None else None)
     if sig not in cache:
         cache[sig] = PagedScheduler(engine, slots=slots, chunk=chunk,
                                     block_size=block_size, num_blocks=num_blocks,
-                                    sampler=sampler, sampler_kw=sampler_kw)
+                                    sampler=sampler, sampler_kw=sampler_kw,
+                                    spec_k=spec_k, drafter=drafter)
     sched = cache[sig]
     sched.last_peak_blocks = 0
     return sched.serve(requests, max_new_tokens, key=key)

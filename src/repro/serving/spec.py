@@ -1,0 +1,327 @@
+"""Speculative decoding: drafters + exact accept/reject + the jitted verify
+step (DESIGN.md §10).
+
+LlamaF's decode regime is weight-bandwidth-bound (§II-B): every generated
+token streams the full quantized weight set once. Speculative decoding
+amortizes that stream over a chunk — k candidate tokens run through ONE
+forward pass (`models/transformer.py::lm_verify`), turning k sequential
+GQMVs into a single k-row GQMM that reads each weight block once, and the
+accepted prefix advances the sequence by 1..k tokens per stream.
+
+Three pieces live here:
+
+- **Drafters** — propose the candidates. `NgramDrafter` (default) is the
+  zero-weight prompt-lookup drafter: it continues the longest context
+  suffix that occurred earlier in the context, so repetitive traffic
+  (code, templated text, self-repeating generations) drafts itself for
+  free. `ModelDrafter` runs a small registry model greedily. Both are
+  host-side and deterministic — a point-mass proposal distribution, which
+  is what makes the acceptance rule below exact.
+- **`spec_accept`** — distribution-preserving accept/reject on the verify
+  logits. Greedy fast path: the accepted prefix is the run of drafts that
+  match the target argmax, and the target argmax row doubles as the
+  correction/bonus token, so `out = argmax(logits)` and
+  `n_out = 1 + leading matches`. For top-p/temperature the draft token
+  d is accepted with probability p_target(d); on rejection the output is
+  sampled from the leftover distribution — p_target with d masked out and
+  renormalized (`nucleus_mask` builds p_target) — which reproduces the
+  target distribution exactly for a deterministic drafter.
+- **`build_verify_step`** — the jitted step the engine and both
+  schedulers share: verify -> accept -> commit the accepted prefix
+  (clamped to each row's remaining budget and its live mask) -> advance
+  positions. Rejected rows are never written (contiguous: scatter
+  dropped; paged: routed to the sink block), so rollback is the position
+  arithmetic itself.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import NEG_INF
+from repro.serving.sampling import nucleus_mask
+
+
+# ---------------------------------------------------------------------------
+# drafters
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Drafter(Protocol):
+    """Proposes k candidate continuations of a token context. Host-side and
+    deterministic: the acceptance rule treats the proposal as a point mass."""
+
+    name: str
+
+    def draft(self, tokens: Sequence[int], k: int) -> list[int]:
+        """tokens -> exactly k proposed continuation token ids."""
+        ...
+
+
+class NgramDrafter:
+    """Prompt-lookup / n-gram drafter — no weights, no forward passes.
+
+    Finds the most recent earlier occurrence of the context's trailing
+    n-gram (longest n first, down to 1) and proposes the tokens that
+    followed it. With no match it repeats the last token — still a valid
+    proposal, just unlikely to be accepted. Acceptance is high exactly when
+    the target's output revisits its own history (repetitive traces), which
+    is where the weight-stream amortization pays off.
+
+    The scan covers only the trailing ``window`` tokens so the per-step
+    host cost stays O(window) on long generations instead of growing with
+    the full history (the repeats worth drafting are overwhelmingly local;
+    the verify step this feeds is the hot loop)."""
+
+    name = "ngram"
+
+    def __init__(self, max_n: int = 3, window: int = 512):
+        if max_n < 1:
+            raise ValueError(f"max_n must be >= 1, got {max_n}")
+        self.max_n = max_n
+        self.window = window
+
+    def draft(self, tokens: Sequence[int], k: int) -> list[int]:
+        toks = list(tokens)[-self.window:]
+        if not toks:
+            return [0] * k
+        for n in range(min(self.max_n, len(toks) - 1), 0, -1):
+            suffix = toks[-n:]
+            # most recent earlier occurrence wins (local context repeats
+            # beat distant ones)
+            for i in range(len(toks) - n - 1, -1, -1):
+                if toks[i:i + n] == suffix:
+                    cont = toks[i + n:i + n + k]
+                    if cont:
+                        return (cont + [toks[-1]] * (k - len(cont)))[:k]
+        return [toks[-1]] * k
+
+
+class ModelDrafter:
+    """Greedy k-token drafts from a small registry model with its own
+    weights. Reference implementation: each draft call re-prefills the
+    (bucket-padded) context and decodes k-1 greedy steps — O(context) work
+    per call, amortized by the draft model being a fraction of the target.
+    Persistent per-request draft caches are a scheduler-state extension,
+    not needed for correctness."""
+
+    def __init__(self, model, params, *, max_len: int = 4096):
+        if not model.supports_lengths:
+            raise ValueError(
+                f"{model.cfg.arch_id}: ModelDrafter needs length-aware "
+                "prefill (decoder_lm families)"
+            )
+        self.name = f"model:{model.cfg.arch_id}"
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._jit: dict[tuple[int, int], callable] = {}
+
+    def _fn(self, pad_len: int, k: int):
+        if (pad_len, k) not in self._jit:
+            model = self.model
+
+            @jax.jit
+            def run(params, toks, length):
+                logits, cache = model.prefill(
+                    params, {"tokens": toks, "lengths": length}, pad_len + k
+                )
+                t0 = jnp.argmax(logits, -1).astype(jnp.int32)
+
+                def step(carry, _):
+                    tok, cache, pos = carry
+                    lg, cache = model.decode(params, tok, cache, pos)
+                    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+                    return (nxt, cache, pos + 1), nxt
+
+                (_, _, _), rest = jax.lax.scan(
+                    step, (t0, cache, length), None, length=k - 1
+                )
+                return jnp.concatenate([t0[:, None], rest.T], axis=1)
+
+            self._jit[(pad_len, k)] = run
+        return self._jit[(pad_len, k)]
+
+    def draft(self, tokens: Sequence[int], k: int) -> list[int]:
+        from repro.serving.batching import bucket_length
+
+        toks = list(tokens)[-self.max_len:]
+        pad_len = bucket_length(len(toks))
+        arr = np.zeros((1, pad_len), np.int32)
+        arr[0, : len(toks)] = toks
+        out = self._fn(pad_len, k)(
+            self.params, jnp.asarray(arr),
+            jnp.asarray([len(toks)], jnp.int32),
+        )
+        return [int(t) for t in np.asarray(out)[0]]
+
+
+def resolve_drafter(name: str | None, *, reduced: bool = False,
+                    seed: int = 0) -> Drafter:
+    """CLI-string drafter factory: ``"ngram"`` (default) or
+    ``"model:<arch-id>"`` (fresh weights from the registry — a stand-in for
+    a trained draft checkpoint)."""
+    from repro.models.registry import build_arch
+
+    if name is None or name == "ngram":
+        return NgramDrafter()
+    if name.startswith("model:"):
+        model = build_arch(name.split(":", 1)[1], reduced=reduced)
+        params = model.init(jax.random.PRNGKey(seed))
+        return ModelDrafter(model, params)
+    raise ValueError(f"unknown drafter {name!r} (ngram or model:<arch-id>)")
+
+
+# ---------------------------------------------------------------------------
+# exact accept/reject
+# ---------------------------------------------------------------------------
+
+def spec_accept(logits, chunk, key, *, sampler: str = "greedy",
+                sampler_kw=()):
+    """Accept/reject a drafted chunk against its verify logits.
+
+    logits (b, k, V): row j is the target's next-token distribution after
+    chunk token j. chunk (b, k) = [t0, d1, .., d_{k-1}] — the current token
+    followed by the drafted candidates, so draft d_{j+1} is tested against
+    logits row j. Returns (out (b, k) int32, n_out (b,) int32): the tokens
+    produced this step are ``out[i, :n_out[i]]`` — the accepted drafts
+    followed by one correction (greedy argmax / leftover sample) or, when
+    every draft survives, a bonus token from the final row. Every verify
+    step therefore produces at least one token, and greedy output is
+    token-identical to vanilla decode by construction."""
+    b, k, v = logits.shape
+    drafts = chunk[:, 1:]                                       # (b, k-1)
+    if sampler == "greedy":
+        tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (b, k)
+        if k == 1:
+            return tgt, jnp.ones((b,), jnp.int32)
+        match = tgt[:, : k - 1] == drafts
+        n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+        # tgt[:, j] == d_{j+1} for accepted j, and row n_acc is the
+        # correction/bonus — out IS the argmax matrix
+        return tgt, n_acc + 1
+    if sampler != "top_p":
+        raise ValueError(f"unknown sampler {sampler!r} for speculative accept")
+    kw = dict(sampler_kw)
+    p, temp = kw.pop("p", 0.9), kw.pop("temperature", 1.0)
+    if kw:
+        raise ValueError(f"top_p accept takes p/temperature, got {sorted(kw)}")
+    lg = logits / temp
+    filt = jnp.where(nucleus_mask(lg, p), lg, NEG_INF)          # (b, k, V)
+    probs = jax.nn.softmax(filt, axis=-1)
+    ku, kr = jax.random.split(key)
+    if k == 1:
+        out = jax.random.categorical(kr, filt[:, 0], axis=-1).astype(jnp.int32)
+        return out[:, None], jnp.ones((b,), jnp.int32)
+    # accept d_{j+1} with prob p_target(d_{j+1}); deterministic (point-mass)
+    # proposal => the residual is p_target with the draft token removed
+    p_draft = jnp.take_along_axis(
+        probs[:, : k - 1], drafts[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]                                                   # (b, k-1)
+    accept = jax.random.uniform(ku, (b, k - 1)) < p_draft
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+    rows = jnp.arange(b)
+    sel = filt[rows, n_acc]                                     # (b, V)
+    # rejection at row n_acc < k-1: mask the rejected draft out of the
+    # nucleus (leftover distribution); full acceptance samples the bonus
+    # from the final row unmasked
+    rejected = n_acc < (k - 1)
+    rej_tok = drafts[rows, jnp.minimum(n_acc, k - 2)]
+    sel = jnp.where(
+        rejected[:, None] & (jnp.arange(v)[None, :] == rej_tok[:, None]),
+        NEG_INF, sel,
+    )
+    t_new = jax.random.categorical(kr, sel, axis=-1).astype(jnp.int32)
+    out = jnp.concatenate([drafts, jnp.zeros((b, 1), jnp.int32)], axis=1)
+    out = out.at[rows, n_acc].set(t_new)
+    return out, n_acc + 1
+
+
+# ---------------------------------------------------------------------------
+# host-side round bookkeeping (shared by the engine and both schedulers)
+# ---------------------------------------------------------------------------
+
+def draft_chunk(drafter: Drafter, tok, live, context_fn, k: int):
+    """Assemble the (B, k) verify chunk: column 0 is each row's newest
+    (uncommitted) token; live rows get k-1 drafts from their token history
+    (``context_fn(i) -> list[int]``); dead rows keep the frozen token."""
+    chunk = np.repeat(np.asarray(tok, np.int32)[:, None], k, axis=1)
+    for i in np.flatnonzero(live):
+        chunk[i, 1:] = drafter.draft(context_fn(i), k - 1)
+    return chunk
+
+
+def take_accepted(out_row, n_out, remaining, eos, stats, k: int) -> list[int]:
+    """Post-verify bookkeeping for one row: clamp the produced tokens to the
+    remaining budget, truncate at EOS, and account only the KEPT tokens —
+    drafts accepted past an EOS or the budget clamp are discarded work, not
+    amortization, so they must not inflate the acceptance/throughput stats
+    the spec benchmark and CLI report. Returns the tokens to keep (ending
+    with EOS when one fired)."""
+    take = min(int(n_out), int(remaining))
+    new = [int(t) for t in out_row[:take]]
+    if eos is not None and eos in new:
+        new = new[: new.index(eos) + 1]
+    stats["drafted"] += k - 1
+    stats["accepted"] += min(int(n_out) - 1, len(new))
+    stats["generated"] += len(new)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# the jitted verify step
+# ---------------------------------------------------------------------------
+
+def build_verify_step(model, *, sampler: str = "greedy", sampler_kw=(),
+                      paged: bool = False):
+    """One speculative decode step as a single jitted program:
+    verify k chunk tokens -> accept/reject -> commit the accepted prefix ->
+    advance positions. Shared by `InferenceEngine._generate_spec`,
+    `SlotScheduler`, and `PagedScheduler`.
+
+    The commit count is ``min(n_out, remaining)`` gated by ``live``: a row
+    past its budget (or a frozen scheduler slot) commits nothing and its
+    position stays put, so cache growth tracks exactly the tokens the host
+    will keep. The cache argument is donated (same rationale as the
+    schedulers' decode programs).
+
+    Contiguous signature: step(params, chunk, cache, pos, live, remaining,
+    key); paged inserts ``table`` after ``cache``. Returns (out (b, k),
+    n_out (b,), cache, pos, last_logits (b, V)) where last_logits is each
+    row's distribution that produced its final output token."""
+    skw = tuple(sorted(dict(sampler_kw or {}).items()))
+
+    def _finish(logits, chunk, key, live, remaining):
+        out, n_out = spec_accept(logits, chunk, key, sampler=sampler,
+                                 sampler_kw=skw)
+        n_commit = jnp.where(live, jnp.minimum(n_out, jnp.maximum(remaining, 0)), 0)
+        # the distribution that produced each row's final KEPT token: index
+        # by the budget-clamped count, not the raw accept count (the raw
+        # row prices a token the host will discard). EOS truncation is
+        # host-side knowledge, so an EOS mid-chunk still reads one row
+        # late — see the GenerationResult logits_last caveat.
+        idx = jnp.maximum(jnp.minimum(n_out, jnp.maximum(remaining, 1)) - 1, 0)
+        last = logits[jnp.arange(out.shape[0]), idx]
+        return out, n_out, n_commit, last
+
+    if paged:
+        @partial(jax.jit, donate_argnums=(2,))
+        def step(params, chunk, cache, table, pos, live, remaining, key):
+            logits, rows = model.verify_paged(params, chunk, cache, table, pos)
+            out, n_out, n_commit, last = _finish(logits, chunk, key, live, remaining)
+            cache = model.commit_verify_paged(cache, rows, table, pos, n_commit)
+            return out, n_out, cache, pos + n_commit, last
+        return step
+
+    @partial(jax.jit, donate_argnums=(2,))
+    def step(params, chunk, cache, pos, live, remaining, key):
+        logits, rows = model.verify(params, chunk, cache, pos)
+        out, n_out, n_commit, last = _finish(logits, chunk, key, live, remaining)
+        cache = model.commit_verify(cache, rows, pos, n_commit)
+        return out, n_out, cache, pos + n_commit, last
+    return step

@@ -1,0 +1,355 @@
+"""Speculative decoding (lm_verify + serving/spec.py), DESIGN.md §10.
+
+Tentpole regressions:
+- greedy speculative decoding is TOKEN-IDENTICAL to vanilla decode across
+  three GQA architectures (tinyllama, gemma2 window+softcap, internlm2) in
+  both the contiguous and paged cache layouts, for any drafter (the chunk
+  only amortizes the weight stream — it must never change the output);
+- a self-draft oracle is fully accepted (acceptance rate 1, exactly
+  ceil((n-1)/k) verify steps);
+- rejection rollback: rejected rows are NEVER written — the cache/pool
+  after a partial accept is bit-identical to a trajectory that never saw
+  the drafts (and commit must not clobber block 0, which under the
+  engine's identity tables is a live block, not the scheduler sink);
+- top-p speculative sampling preserves the target distribution exactly
+  (leftover-distribution residual sampling for the deterministic drafters).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from types import SimpleNamespace
+
+from repro.dist.sharding import verify_logits_spec
+from repro.models.registry import build, load_config
+from repro.serving.batching import Request, serve_ragged
+from repro.serving.engine import InferenceEngine
+from repro.serving.spec import (
+    ModelDrafter,
+    NgramDrafter,
+    resolve_drafter,
+    spec_accept,
+)
+
+ARCHS = ["tinyllama-1.1b", "gemma2-2b", "internlm2-1.8b"]
+
+
+@pytest.fixture(scope="module")
+def engines():
+    out = {}
+    for arch in ARCHS:
+        cfg = load_config(arch).reduced()
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        out[arch] = InferenceEngine(model, params, cache_len=64)
+    return out
+
+
+@pytest.fixture(scope="module")
+def tiny(engines):
+    return engines["tinyllama-1.1b"]
+
+
+def _batch(cfg, b=2, s=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (b, s)), jnp.int32)}
+
+
+class AdversarialDrafter:
+    """Drafts argmax+1 of nothing in particular — every draft should be
+    rejected, exercising the pure-rollback path."""
+
+    name = "adversarial"
+
+    def draft(self, tokens, k):
+        return [(tokens[-1] + 1 + i) % 97 + 1 for i in range(k)]
+
+
+class SelfDrafter:
+    """Oracle drafter: proposes the target's own greedy continuation
+    (precomputed), so every draft must be accepted."""
+
+    name = "self"
+
+    def __init__(self, continuation, prompt_len):
+        self.continuation = [int(t) for t in continuation]
+        self.prompt_len = prompt_len
+
+    def draft(self, tokens, k):
+        g = len(tokens) - self.prompt_len    # tokens generated so far
+        out = self.continuation[g:g + k]
+        return out + [0] * (k - len(out))
+
+
+# ---------------------------------------------------------------------------
+# tentpole: greedy speculative == vanilla, contiguous and paged, >= 3 archs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+def test_greedy_spec_token_identical(engines, arch, paged):
+    eng = engines[arch]
+    batch = _batch(eng.cfg)
+    van = eng.generate(batch, 12, paged=paged)
+    for drafter in (NgramDrafter(), AdversarialDrafter()):
+        res = eng.generate(batch, 12, paged=paged, spec_k=4, drafter=drafter)
+        np.testing.assert_array_equal(
+            np.asarray(van.tokens), np.asarray(res.tokens),
+            err_msg=f"{arch} paged={paged} drafter={drafter.name}")
+    assert res.spec_stats["accepted"] == 0      # adversarial: pure rollback
+
+
+def test_engine_spec_eos_parity(tiny):
+    """EOS semantics match vanilla exactly: generation freezes at the first
+    EOS and the tail is EOS-padded, even when the EOS lands mid-chunk."""
+    batch = _batch(tiny.cfg, seed=11)
+    probe = np.asarray(tiny.generate(batch, 12).tokens)
+    eos = int(probe[0, 4])                     # appears mid-generation
+    eng = InferenceEngine(tiny.model, tiny.params, cache_len=64, eos_id=eos)
+    van = eng.generate(batch, 12)
+    res = eng.generate(batch, 12, spec_k=4)
+    np.testing.assert_array_equal(np.asarray(van.tokens), np.asarray(res.tokens))
+
+
+def test_spec_logits_last_seeded_from_prefill(tiny):
+    """A generation that never reaches a verify step (max_new=1) must still
+    return real logits — the prefill distribution that produced its only
+    token — not the zeros initialization."""
+    batch = _batch(tiny.cfg, seed=13)
+    res = tiny.generate(batch, 1, spec_k=4)
+    lg = np.asarray(res.logits_last)
+    assert np.abs(lg).max() > 0
+    np.testing.assert_array_equal(lg.argmax(-1), np.asarray(res.tokens)[:, 0])
+
+
+def test_spec_stats_count_only_kept_tokens(tiny):
+    """spec_stats must price USEFUL work: tokens discarded past an EOS (or
+    the budget clamp) may not inflate generated/accepted — those feed the
+    benchmark's amortization headline."""
+    batch = _batch(tiny.cfg, seed=11)
+    probe = np.asarray(tiny.generate(batch, 12).tokens)
+    eos = int(probe[0, 4])
+    eng = InferenceEngine(tiny.model, tiny.params, cache_len=64, eos_id=eos)
+    res = eng.generate(batch, 12, spec_k=4)
+    toks = np.asarray(res.tokens)
+    kept = sum(
+        int(np.argmax(toks[i] == eos)) + 1 if eos in toks[i] else toks.shape[1]
+        for i in range(toks.shape[0]))
+    st = res.spec_stats
+    assert st["generated"] == kept, (st, toks)
+    assert st["accepted"] <= st["drafted"]
+
+
+def test_greedy_spec_ragged_lengths(tiny):
+    batch = _batch(tiny.cfg, b=3, s=10, seed=3)
+    lens = [4, 10, 7]
+    van = tiny.generate(batch, 10, lengths=lens)
+    res = tiny.generate(batch, 10, lengths=lens, spec_k=3)
+    np.testing.assert_array_equal(np.asarray(van.tokens), np.asarray(res.tokens))
+
+
+def test_model_drafter_token_identical(tiny):
+    """A small-model drafter (fresh registry weights — a worst-case draft
+    model) must still yield exact outputs; only efficiency may change."""
+    cfg = load_config("tinyllama-1.1b").reduced()
+    dmodel = build(cfg)
+    drafter = ModelDrafter(dmodel, dmodel.init(jax.random.PRNGKey(9)))
+    batch = _batch(tiny.cfg)
+    van = tiny.generate(batch, 10)
+    res = tiny.generate(batch, 10, spec_k=3, drafter=drafter)
+    np.testing.assert_array_equal(np.asarray(van.tokens), np.asarray(res.tokens))
+
+
+def test_self_draft_full_acceptance(tiny):
+    spec_k, max_new = 4, 13                    # (max_new - 1) % spec_k == 0
+    batch = _batch(tiny.cfg, b=1, seed=5)
+    van = tiny.generate(batch, max_new + spec_k)   # oracle continuation
+    cont = np.asarray(van.tokens)[0, 1:]       # tokens after the prefill token
+    drafter = SelfDrafter(cont, prompt_len=batch["tokens"].shape[1] + 1)
+    res = tiny.generate(batch, max_new, spec_k=spec_k, drafter=drafter)
+    np.testing.assert_array_equal(
+        np.asarray(van.tokens)[:, :max_new], np.asarray(res.tokens))
+    st = res.spec_stats
+    assert st["accepted"] == st["drafted"], st     # acceptance rate == 1
+    assert st["verify_steps"] == math.ceil((max_new - 1) / spec_k), st
+
+
+# ---------------------------------------------------------------------------
+# rollback: rejected rows leave no trace
+# ---------------------------------------------------------------------------
+
+def _prefilled(eng, seed=0):
+    batch = _batch(eng.cfg, b=2, seed=seed)
+    logits, cache = eng.model.prefill(eng.params, batch, eng.cache_len)
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.full((2,), batch["tokens"].shape[1], jnp.int32)
+    return batch, cache, tok0, pos
+
+
+def test_rollback_contiguous(tiny):
+    batch, cache, tok0, pos = _prefilled(tiny)
+    chunk = jnp.concatenate(
+        [tok0[:, None], jnp.asarray([[3, 5, 7], [2, 4, 6]], jnp.int32)], axis=1)
+    _, rows = tiny.model.verify(tiny.params, chunk, cache, pos)
+    # full rejection: nothing committed -> cache bit-identical to pre-draft
+    c0 = tiny.model.commit_verify(cache, rows, pos, jnp.zeros((2,), jnp.int32))
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(c0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # partial accept: ONLY slots pos..pos+n-1 may differ from pre-draft
+    c1 = tiny.model.commit_verify(cache, rows, pos, jnp.asarray([2, 1], jnp.int32))
+    p = int(pos[0])
+    for name in ("k", "v"):
+        before, after = np.asarray(cache[name]), np.asarray(c1[name])
+        touched = np.zeros(before.shape, bool)
+        touched[:, 0, p:p + 2] = True
+        touched[:, 1, p:p + 1] = True
+        np.testing.assert_array_equal(before[~touched], after[~touched])
+        assert not np.array_equal(before[touched], after[touched])
+
+
+def test_rollback_paged_and_block0_not_clobbered(tiny):
+    from repro.models.transformer import contiguous_to_paged
+
+    batch, cache, tok0, pos = _prefilled(tiny)
+    pool, table = contiguous_to_paged(cache, 8)
+    chunk = jnp.concatenate(
+        [tok0[:, None], jnp.asarray([[3, 5, 7], [2, 4, 6]], jnp.int32)], axis=1)
+    _, rows = tiny.model.verify_paged(tiny.params, chunk, pool, table, pos)
+    p0 = tiny.model.commit_verify_paged(pool, rows, table, pos,
+                                        jnp.zeros((2,), jnp.int32))
+    for a, b in zip(jax.tree.leaves(pool), jax.tree.leaves(p0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a rejected suffix must not be routed to block 0 — under identity
+    # tables that is row 0's first prompt block, not a sink (regression:
+    # the first paged-commit draft did exactly that)
+    p1 = tiny.model.commit_verify_paged(pool, rows, table, pos,
+                                        jnp.asarray([1, 1], jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(pool["k_pages"])[:, 0], np.asarray(p1["k_pages"])[:, 0])
+    # paged partial commit == contiguous partial commit, pooled
+    n = jnp.asarray([2, 1], jnp.int32)
+    _, rows_c = tiny.model.verify(tiny.params, chunk, cache, pos)
+    cc_pool, _ = contiguous_to_paged(
+        tiny.model.commit_verify(cache, rows_c, pos, n), 8)
+    cp = tiny.model.commit_verify_paged(pool, rows, table, pos, n)
+    for name in ("k_pages", "v_pages"):
+        np.testing.assert_array_equal(np.asarray(cc_pool[name]),
+                                      np.asarray(cp[name]))
+
+
+# ---------------------------------------------------------------------------
+# top-p residual sampling: distribution preservation on a toy vocab
+# ---------------------------------------------------------------------------
+
+def test_residual_sampling_preserves_distribution():
+    """One accept/reject position with a deterministic draft: the output
+    token's distribution must equal the top-p target distribution exactly
+    (accept d w.p. p(d); else sample p with d removed, renormalized).
+    Exact-count check against a 5-sigma binomial envelope."""
+    logits = jnp.asarray([[2.0, 1.0, 0.5, -1.0, -3.0, -3.5]])
+    p, temp = 0.85, 1.0
+    from repro.models.common import NEG_INF
+    from repro.serving.sampling import nucleus_mask
+
+    filt = np.where(np.asarray(nucleus_mask(logits, p)), np.asarray(logits), NEG_INF)
+    target = np.exp(filt[0] - filt[0].max())
+    target /= target.sum()
+    draft_tok = 1                                  # inside the nucleus
+
+    n = 4000
+    chunk = jnp.asarray([[0, draft_tok]], jnp.int32)
+    lg = jnp.stack([logits[0], logits[0]])[None]    # (1, 2, V): row 0 judged
+
+    def one(key):
+        out, n_out = spec_accept(lg, chunk, key, sampler="top_p",
+                                 sampler_kw={"p": p, "temperature": temp})
+        return out[0, 0]
+
+    toks = np.asarray(jax.vmap(one)(jax.random.split(jax.random.PRNGKey(0), n)))
+    counts = np.bincount(toks, minlength=6)
+    assert counts[np.asarray(target) == 0].sum() == 0   # never leaves nucleus
+    for v in range(6):
+        sigma = math.sqrt(max(target[v] * (1 - target[v]) / n, 1e-12))
+        assert abs(counts[v] / n - target[v]) < 5 * sigma + 1e-9, (
+            v, counts[v] / n, target[v])
+
+
+def test_top_p_tiny_p_equals_greedy_spec(tiny):
+    """p -> 0 collapses the nucleus to the argmax: the speculative top-p
+    path (accept + residual) must reproduce greedy output exactly."""
+    batch = _batch(tiny.cfg)
+    van = tiny.generate(batch, 10)
+    res = tiny.generate(batch, 10, spec_k=3, sampler="top_p",
+                        sampler_kw={"p": 1e-9, "temperature": 1.0})
+    np.testing.assert_array_equal(np.asarray(van.tokens), np.asarray(res.tokens))
+
+
+# ---------------------------------------------------------------------------
+# schedulers + plumbing
+# ---------------------------------------------------------------------------
+
+def test_schedulers_spec_token_identical(tiny):
+    rng = np.random.default_rng(2)
+    lens = [2, 5, 9, 14, 3, 7]
+    buds = [12, 3, 10, 4, 8, 6]
+    reqs = [Request(i, rng.integers(1, tiny.cfg.vocab_size, size=(n,))
+                    .astype(int).tolist(), max_new=m)
+            for i, (n, m) in enumerate(zip(lens, buds))]
+    for mode in ("continuous", "paged"):
+        base = serve_ragged(tiny, reqs, 12, mode=mode)
+        spec = serve_ragged(tiny, reqs, 12, mode=mode, spec_k=4)
+        for a, b in zip(base, spec):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.length == b.length
+    stats = [s.last_spec_stats for s in tiny._paged_schedulers.values()
+             if s.last_spec_stats]
+    assert stats and stats[0]["verify_steps"] > 0
+    # 'generated' prices delivered work: every request's full budget,
+    # including the prefill-sampled token (engine-stats-comparable)
+    assert stats[0]["generated"] == sum(buds)
+
+
+def test_ngram_drafter_prompt_lookup():
+    d = NgramDrafter(max_n=3)
+    # trailing [7, 8] occurred earlier, followed by 9, 10, 11
+    assert d.draft([1, 7, 8, 9, 10, 11, 7, 8], 3) == [9, 10, 11]
+    # no match: repeat last token
+    assert d.draft([1, 2, 3], 2) == [3, 3]
+    assert d.draft([], 2) == [0, 0]
+
+
+def test_resolve_drafter():
+    assert isinstance(resolve_drafter(None), NgramDrafter)
+    assert isinstance(resolve_drafter("ngram"), NgramDrafter)
+    md = resolve_drafter("model:tinyllama-1.1b", reduced=True)
+    assert md.name == "model:tinyllama-1.1b"
+    with pytest.raises(ValueError, match="unknown drafter"):
+        resolve_drafter("medusa")
+
+
+def test_spec_validation_errors(tiny):
+    batch = _batch(tiny.cfg)
+    with pytest.raises(ValueError, match="spec_k must be >= 2"):
+        tiny.generate(batch, 4, spec_k=1)
+    with pytest.raises(ValueError, match="spec_k=4"):
+        # vanilla fit (8 + 56 = 64) but no spec slack left
+        tiny.generate(batch, 56, spec_k=4)
+    rwkv = build(load_config("rwkv6-7b").reduced())
+    reng = InferenceEngine(rwkv, rwkv.init(jax.random.PRNGKey(0)), cache_len=32)
+    with pytest.raises(ValueError, match="no speculative verify"):
+        reng.generate(_batch(rwkv.cfg), 4, spec_k=2)
+    with pytest.raises(ValueError, match="bucketed"):
+        serve_ragged(reng, [Request(0, [1, 2, 3])], 4, spec_k=2)
+
+
+def test_verify_logits_spec_dist():
+    mesh = SimpleNamespace(shape={"data": 16, "model": 16},
+                           axis_names=("data", "model"))
+    from jax.sharding import PartitionSpec as P
+
+    assert verify_logits_spec(mesh, 256) == P(("data",), None, "model")
+    assert verify_logits_spec(mesh, 3) == P(None, None, "model")
