@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.quant import quantization_error_stats, quantize_groupwise
+from repro.core.quant import quantize_groupwise
 
 SHAPES = [  # TinyLlama weight matrices (paper Table I)
     (32000, 2048),   # embeddings

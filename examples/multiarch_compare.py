@@ -7,7 +7,6 @@ logit fidelity — demonstrating the technique is arch-agnostic (DESIGN.md
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import quantize_params, quantized_fraction

@@ -19,7 +19,7 @@ from repro.core.policy import quantize_params
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.registry import build, load_config
 from repro.optim import adamw
-from repro.train.loop import LoopConfig, lm_loss, make_train_step, run_loop
+from repro.train.loop import LoopConfig, lm_loss, run_loop
 
 
 def main():

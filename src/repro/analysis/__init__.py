@@ -1,0 +1,53 @@
+"""repro-lint: repo-specific static analysis (DESIGN.md §11).
+
+``python -m repro.analysis`` runs every registered checker over the tree
+and exits non-zero on findings; deliberate exceptions live in
+``.repro-lint-allow``. See ``engine.py`` for the Checker protocol and
+``__main__.py`` for the CLI.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.engine import (
+    Allowlist,
+    BaseChecker,
+    Checker,
+    Finding,
+    run_analysis,
+)
+from repro.analysis.host_sync import HostSyncChecker
+from repro.analysis.pallas_contract import PallasContractChecker
+from repro.analysis.quant_invariants import QuantInvariantsChecker
+from repro.analysis.recompile import (
+    JitTraceCounter,
+    RecompileChecker,
+    count_jit_traces,
+)
+from repro.analysis.registry_coverage import RegistryCoverageChecker
+
+__all__ = [
+    "Allowlist",
+    "BaseChecker",
+    "Checker",
+    "Finding",
+    "run_analysis",
+    "HostSyncChecker",
+    "RecompileChecker",
+    "PallasContractChecker",
+    "QuantInvariantsChecker",
+    "RegistryCoverageChecker",
+    "JitTraceCounter",
+    "count_jit_traces",
+    "default_checkers",
+]
+
+
+def default_checkers() -> list:
+    """Fresh instances of the five repo checkers, in stable order."""
+    return [
+        HostSyncChecker(),
+        RecompileChecker(),
+        PallasContractChecker(),
+        QuantInvariantsChecker(),
+        RegistryCoverageChecker(),
+    ]

@@ -1,0 +1,103 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean, 1 findings (or stale allowlist entries with
+``--strict-allowlist``), 2 usage/setup error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis import default_checkers
+from repro.analysis.engine import Allowlist, run_analysis
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples", "launch")
+
+
+def find_root(start: str) -> str:
+    """Nearest ancestor containing pyproject.toml (else ``start``)."""
+    d = os.path.abspath(start)
+    while True:
+        if os.path.isfile(os.path.join(d, "pyproject.toml")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return os.path.abspath(start)
+        d = parent
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: repo-specific static analysis")
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to scan (default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detect via pyproject.toml)")
+    ap.add_argument("--allowlist", default=".repro-lint-allow",
+                    help="allowlist file, repo-relative (default: %(default)s)")
+    ap.add_argument("--select", action="append", default=None, metavar="ID",
+                    help="run only these checker ids (repeatable)")
+    ap.add_argument("--list", action="store_true",
+                    help="list checker ids and exit")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON lines")
+    ap.add_argument("--strict-allowlist", action="store_true",
+                    help="fail on unused allowlist entries too")
+    args = ap.parse_args(argv)
+
+    checkers = default_checkers()
+    if args.list:
+        for c in checkers:
+            print(f"{c.id:20s} {c.description}")
+        return 0
+    if args.select:
+        known = {c.id for c in checkers}
+        bad = set(args.select) - known
+        if bad:
+            print(f"unknown checker ids {sorted(bad)}; known: {sorted(known)}",
+                  file=sys.stderr)
+            return 2
+        checkers = [c for c in checkers if c.id in set(args.select)]
+
+    root = os.path.abspath(args.root) if args.root else find_root(os.getcwd())
+    allow_path = os.path.join(root, args.allowlist)
+    try:
+        allowlist = (Allowlist.load(allow_path) if os.path.isfile(allow_path)
+                     else Allowlist.empty())
+    except ValueError as e:
+        print(str(e), file=sys.stderr)
+        return 2
+
+    paths = args.paths or [p for p in DEFAULT_PATHS
+                           if os.path.exists(os.path.join(root, p))]
+    findings, suppressed = run_analysis(checkers, paths, root, allowlist)
+
+    if args.as_json:
+        for f in findings:
+            print(json.dumps(f.__dict__))
+    else:
+        for f in findings:
+            print(f.render())
+
+    unused = allowlist.unused()
+    for rule in unused:
+        print(f"{args.allowlist}:{rule.lineno}: warning[allowlist] unused "
+              f"entry `{rule.checker} {rule.pattern}` — remove it or the "
+              "file rots", file=sys.stderr)
+
+    n_err = len(findings)
+    summary = (f"repro-lint: {n_err} finding(s), "
+               f"{len(suppressed)} suppressed by allowlist, "
+               f"{len(checkers)} checker(s)")
+    print(summary, file=sys.stderr)
+    if n_err or (args.strict_allowlist and unused):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,257 @@
+"""repro-lint engine: repo-specific static analysis as CI-gated checks.
+
+The serving/kernel stack rests on invariants the hardware never forgives —
+one host sync per scheduler chunk, Pallas grids that tile their dims
+exactly, pack groups that never straddle a shard — and until now they were
+enforced only by runtime asserts and whichever test happened to trip them.
+This package promotes them to a static-analysis pass, the way
+``launch/hlo_analysis.py`` does for post-SPMD cost accounting: a small
+AST-walking engine, a :class:`Checker` protocol, and five repo-specific
+checkers (see ``repro.analysis.__init__``).
+
+Two checker shapes exist:
+
+- **file checkers** implement ``check_file(path, tree, source)`` and run on
+  every scanned ``*.py`` (AST only, no imports);
+- **project checkers** implement ``check_project(root)`` and run once per
+  invocation — these may import repo modules (the quant registry, the model
+  registry) to validate live objects against the declared contracts.
+
+Deliberate exceptions live in an allowlist file (default
+``.repro-lint-allow`` at the repo root): one finding pattern per line,
+
+    <checker-id>  <relpath-glob[:line]>  <justification...>
+
+Every suppression must carry a justification; unused allowlist entries are
+themselves reported (severity ``warning``) so the file cannot rot.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import os
+from typing import Iterable, Protocol, runtime_checkable
+
+SEVERITIES = ("error", "warning")
+
+# directories never scanned for file checks
+SKIP_DIRS = {".git", "__pycache__", ".github", "analysis_fixtures",
+             ".pytest_cache", "node_modules", ".venv"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One defect: checker id, anchor (file:line:col), severity, message."""
+
+    checker: str
+    path: str            # repo-relative posix path
+    line: int
+    message: str
+    severity: str = "error"
+    col: int = 0
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity must be one of {SEVERITIES}, "
+                             f"got {self.severity!r}")
+
+    @property
+    def anchor(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.severity}[{self.checker}] {self.message}")
+
+
+@runtime_checkable
+class Checker(Protocol):
+    """A lint pass. ``id`` is the allowlist/selection key; implement
+    ``check_file`` for per-file AST checks, ``check_project`` for one-shot
+    repo-level checks, or both."""
+
+    id: str
+    description: str
+
+    def check_file(self, path: str, tree: ast.AST,
+                   source: str) -> Iterable[Finding]:
+        ...
+
+    def check_project(self, root: str) -> Iterable[Finding]:
+        ...
+
+
+class BaseChecker:
+    """No-op defaults so concrete checkers implement only one hook."""
+
+    id = "base"
+    description = ""
+
+    def check_file(self, path: str, tree: ast.AST,
+                   source: str) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, root: str) -> Iterable[Finding]:
+        return ()
+
+
+# ---------------------------------------------------------------------------
+# allowlist
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AllowRule:
+    checker: str
+    pattern: str         # fnmatch over "relpath" or "relpath:line"
+    reason: str
+    lineno: int
+    hits: int = 0
+
+    def matches(self, f: Finding) -> bool:
+        if self.checker not in ("*", f.checker):
+            return False
+        return (fnmatch.fnmatch(f.path, self.pattern)
+                or fnmatch.fnmatch(f.anchor, self.pattern))
+
+
+class Allowlist:
+    """Parsed allowlist file. Lines: ``checker glob justification...``;
+    ``#`` comments and blank lines ignored. A justification is mandatory —
+    an exception nobody can explain is a bug with paperwork."""
+
+    def __init__(self, rules: list[AllowRule], path: str | None = None):
+        self.rules = rules
+        self.path = path
+
+    @classmethod
+    def load(cls, path: str) -> "Allowlist":
+        rules = []
+        with open(path, encoding="utf-8") as fh:
+            for i, raw in enumerate(fh, 1):
+                line = raw.split("#", 1)[0].strip()
+                if not line:
+                    continue
+                parts = line.split(None, 2)
+                if len(parts) < 3:
+                    raise ValueError(
+                        f"{path}:{i}: allowlist entries are "
+                        "'<checker> <glob> <justification>'; a justification "
+                        "is required")
+                rules.append(AllowRule(parts[0], parts[1], parts[2], i))
+        return cls(rules, path)
+
+    @classmethod
+    def empty(cls) -> "Allowlist":
+        return cls([])
+
+    def filter(self, findings: list[Finding]):
+        """-> (kept, suppressed); increments rule hit counters."""
+        kept, suppressed = [], []
+        for f in findings:
+            rule = next((r for r in self.rules if r.matches(f)), None)
+            if rule is None:
+                kept.append(f)
+            else:
+                rule.hits += 1
+                suppressed.append(f)
+        return kept, suppressed
+
+    def unused(self) -> list[AllowRule]:
+        return [r for r in self.rules if r.hits == 0]
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def iter_python_files(paths: list[str], root: str) -> list[str]:
+    """Expand files/directories into a sorted list of .py paths, skipping
+    SKIP_DIRS (fixtures are analyzed only when named explicitly)."""
+    out: list[str] = []
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap):
+            out.append(ap)
+            continue
+        for dirpath, dirnames, filenames in os.walk(ap):
+            dirnames[:] = [d for d in sorted(dirnames) if d not in SKIP_DIRS]
+            out.extend(os.path.join(dirpath, f) for f in sorted(filenames)
+                       if f.endswith(".py"))
+    return out
+
+
+def run_analysis(checkers: list, paths: list[str], root: str,
+                 allowlist: Allowlist | None = None):
+    """Run every checker over ``paths``; -> (findings, suppressed).
+
+    Findings are allowlist-filtered and sorted by (path, line, checker).
+    A file that fails to parse is itself a finding (checker id ``parse``).
+    """
+    allowlist = allowlist or Allowlist.empty()
+    findings: list[Finding] = []
+    file_checkers = [c for c in checkers
+                     if type(c).check_file is not BaseChecker.check_file]
+    for fp in iter_python_files(paths, root):
+        rel = os.path.relpath(fp, root).replace(os.sep, "/")
+        try:
+            with open(fp, encoding="utf-8") as fh:
+                source = fh.read()
+            tree = ast.parse(source, filename=rel)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            findings.append(Finding("parse", rel,
+                                    getattr(e, "lineno", 0) or 0, str(e)))
+            continue
+        for c in file_checkers:
+            findings.extend(c.check_file(rel, tree, source))
+    for c in checkers:
+        if type(c).check_project is not BaseChecker.check_project:
+            findings.extend(c.check_project(root))
+    findings.sort(key=lambda f: (f.path, f.line, f.checker))
+    return allowlist.filter(findings)
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers (used by several checkers)
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> str:
+    """'jax.device_get' for Attribute/Name chains; '' when not a plain
+    dotted path (calls, subscripts)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def is_jit_expr(node: ast.AST) -> bool:
+    """True for ``jax.jit``, ``jit``, ``partial(jax.jit, ...)``,
+    ``functools.partial(jax.jit, ...)`` and ``jax.jit(...)`` call forms —
+    the decorator/callable spellings that produce a traced scope."""
+    name = dotted_name(node)
+    if name in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call):
+        fname = dotted_name(node.func)
+        if fname in ("jax.jit", "jit"):
+            return True
+        if fname in ("partial", "functools.partial") and node.args:
+            return is_jit_expr(node.args[0])
+    return False
+
+
+def assigned_names(target: ast.AST) -> list[str]:
+    """Flatten assignment targets (incl. tuple unpacks) into plain names."""
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: list[str] = []
+        for elt in target.elts:
+            out.extend(assigned_names(elt))
+        return out
+    return []

@@ -1,0 +1,224 @@
+"""host-sync checker: the async-pipeline contract, statically.
+
+LlamaF's pipeline never lets the host block the accelerator (§IV); our
+serving replay of that invariant is the PR 5 hoist — ONE device round-trip
+per scheduler chunk. Two rules lock it in:
+
+1. **No sync inside a jitted scope.** ``jax.device_get`` / ``np.asarray`` /
+   ``.item()`` / ``.block_until_ready()`` on a tracer either fails at trace
+   time or (worse) silently constant-folds; none of them belong inside a
+   function that is ``jax.jit``-ed (directly, via ``partial(jax.jit, ...)``
+   or by being passed to ``jax.jit(f)``).
+
+2. **Chunk-loop budget** (scheduler files only): inside a ``while`` serve
+   loop, each execution path may perform at most ``max_per_path`` (default
+   2: one admission transfer + one chunk transfer) device round-trips, and
+   NONE may sit inside a nested ``for`` — a per-item sync is exactly the
+   regression that re-serializes the pipeline per request instead of per
+   chunk. Paths are split on ``if ...: ... continue`` arms (the speculative
+   vs vanilla chunk branches).
+
+Sync sites counted: ``jax.device_get``, ``jax.block_until_ready``,
+``.item()``, ``.block_until_ready()``, and ``np.asarray``/``np.array`` on a
+name tainted as a device value (assigned from a jitted/self-underscore
+callable, a call-of-a-call like ``self._prefill_fn(n)(...)``, or carrying
+the ``*_d`` device-naming convention).
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Iterable
+
+from repro.analysis.engine import (
+    BaseChecker,
+    Finding,
+    assigned_names,
+    dotted_name,
+    is_jit_expr,
+)
+
+SYNC_FUNCS = {"jax.device_get", "jax.block_until_ready"}
+NP_CONVERTERS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+SYNC_METHODS = {"item", "block_until_ready"}
+
+DEFAULT_LOOP_FILES = (
+    "*serving/batching.py",
+    "*serving/paged.py",
+    "*serving/engine.py",
+)
+
+
+def _jitted_defs(tree: ast.AST) -> list[ast.FunctionDef]:
+    """Function defs that become traced scopes: jit-decorated, or passed by
+    name to a ``jax.jit(f, ...)`` call anywhere in the module."""
+    by_name: dict[str, list[ast.FunctionDef]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+    out, seen = [], set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(is_jit_expr(d) for d in node.decorator_list):
+                if id(node) not in seen:
+                    seen.add(id(node))
+                    out.append(node)
+        elif isinstance(node, ast.Call) and dotted_name(node.func) in ("jax.jit", "jit"):
+            if node.args and isinstance(node.args[0], ast.Name):
+                for fd in by_name.get(node.args[0].id, ()):
+                    if id(fd) not in seen:
+                        seen.add(id(fd))
+                        out.append(fd)
+    return out
+
+
+def _sync_call_kind(node: ast.Call, tainted: set[str]) -> str | None:
+    """Classify a call node as a host sync; returns a short label or None."""
+    name = dotted_name(node.func)
+    if name in SYNC_FUNCS:
+        return name
+    if name in NP_CONVERTERS:
+        if node.args and isinstance(node.args[0], ast.Name):
+            arg = node.args[0].id
+            if arg in tainted or arg.endswith("_d"):
+                return f"{name}({arg})"
+        return None
+    if isinstance(node.func, ast.Attribute) and node.func.attr in SYNC_METHODS:
+        # x.item() / x.block_until_ready(); skip np.* lookalikes
+        base = dotted_name(node.func.value)
+        if base.split(".")[0] not in ("np", "numpy", "math"):
+            return f".{node.func.attr}()"
+    return None
+
+
+def _taint(fn: ast.AST) -> set[str]:
+    """Names in ``fn`` bound to device values: results of self._* calls,
+    call-of-call expressions, or locally jitted functions."""
+    local_jitted = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(is_jit_expr(d) for d in node.decorator_list):
+                local_jitted.add(node.name)
+    tainted: set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign) or not isinstance(node.value, ast.Call):
+            continue
+        callee = node.value.func
+        device_call = (
+            isinstance(callee, ast.Call)  # self._prefill_fn(n)(...)
+            or (isinstance(callee, ast.Attribute)
+                and isinstance(callee.value, ast.Name)
+                and callee.value.id == "self" and callee.attr.startswith("_"))
+            or (isinstance(callee, ast.Name) and callee.id in local_jitted)
+        )
+        if device_call:
+            for t in node.targets:
+                tainted.update(assigned_names(t))
+    return tainted
+
+
+class _SyncSites(ast.NodeVisitor):
+    """Collect sync call sites under one statement, without descending into
+    nested function definitions (their bodies run elsewhere)."""
+
+    def __init__(self, tainted: set[str]):
+        self.tainted = tainted
+        self.sites: list[tuple[ast.Call, str, bool]] = []  # node, label, in_for
+        self._for_depth = 0
+
+    def visit_FunctionDef(self, node):  # do not descend
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+    def visit_For(self, node):
+        self._for_depth += 1
+        self.generic_visit(node)
+        self._for_depth -= 1
+
+    def visit_Call(self, node):
+        kind = _sync_call_kind(node, self.tainted)
+        if kind is not None:
+            self.sites.append((node, kind, self._for_depth > 0))
+        self.generic_visit(node)
+
+
+def _sites(stmts, tainted) -> list[tuple[ast.Call, str, bool]]:
+    v = _SyncSites(tainted)
+    for s in stmts:
+        v.visit(s)
+    return v.sites
+
+
+def _ends_in_continue(body: list[ast.stmt]) -> bool:
+    return bool(body) and isinstance(body[-1], ast.Continue)
+
+
+class HostSyncChecker(BaseChecker):
+    id = "host-sync"
+    description = ("no device round-trips inside jitted scopes; at most "
+                   "max_per_path per scheduler chunk-loop path, none inside "
+                   "a nested for")
+
+    def __init__(self, loop_files=DEFAULT_LOOP_FILES, max_per_path: int = 2):
+        self.loop_files = loop_files
+        self.max_per_path = max_per_path
+
+    # -- rule 1: jitted scopes ---------------------------------------------
+    def _check_jit_scopes(self, path, tree) -> Iterable[Finding]:
+        for fn in _jitted_defs(tree):
+            for node, kind, _ in _sites(fn.body, tainted=set()):
+                yield Finding(
+                    self.id, path, node.lineno,
+                    f"host sync {kind} inside jitted `{fn.name}`: device "
+                    "round-trips in a traced scope stall the pipeline (or "
+                    "constant-fold a tracer)", col=node.col_offset)
+
+    # -- rule 2: chunk loops ------------------------------------------------
+    def _check_chunk_loops(self, path, tree) -> Iterable[Finding]:
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            tainted = _taint(fn)
+            for loop in ast.walk(fn):
+                if not isinstance(loop, ast.While):
+                    continue
+                yield from self._check_loop(path, fn, loop, tainted)
+
+    def _check_loop(self, path, fn, loop, tainted) -> Iterable[Finding]:
+        # nested-for rule
+        for node, kind, in_for in _sites(loop.body, tainted):
+            if in_for:
+                yield Finding(
+                    self.id, path, node.lineno,
+                    f"host sync {kind} inside a for-loop of `{fn.name}`'s "
+                    "serve loop: per-item round-trips re-serialize the "
+                    "pipeline — batch the transfer and sync once per chunk",
+                    col=node.col_offset)
+        # path budget: one path per `if ...: ... continue` arm + fallthrough
+        paths: list[list] = []
+        prefix: list = []
+        for stmt in loop.body:
+            if isinstance(stmt, ast.If) and _ends_in_continue(stmt.body):
+                paths.append(prefix + _sites(stmt.body, tainted))
+                prefix = prefix + _sites(stmt.orelse, tainted)
+            else:
+                prefix = prefix + _sites([stmt], tainted)
+        paths.append(prefix)
+        for sites in paths:
+            sites = [s for s in sites if not s[2]]  # for-loop sites already flagged
+            if len(sites) > self.max_per_path:
+                node, kind, _ = sites[self.max_per_path]
+                yield Finding(
+                    self.id, path, node.lineno,
+                    f"{len(sites)} host syncs on one path of `{fn.name}`'s "
+                    f"serve loop (budget {self.max_per_path}): the chunk "
+                    "contract is one admission transfer + one chunk "
+                    f"transfer; extra site is {kind}", col=node.col_offset)
+
+    def check_file(self, path, tree, source) -> Iterable[Finding]:
+        yield from self._check_jit_scopes(path, tree)
+        if any(fnmatch.fnmatch(path, g) for g in self.loop_files):
+            yield from self._check_chunk_loops(path, tree)

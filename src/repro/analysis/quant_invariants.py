@@ -1,0 +1,156 @@
+"""quant-invariants checker: the format registry and pack/shard geometry.
+
+The paper's compression (4.4 GB -> 1.1 GB) and the PR 3 format registry
+both live or die on arithmetic that nothing in the type system states:
+``bits * pack`` must fill the storage dtype exactly, ``qmax`` must be the
+symmetric range of ``bits``, packed formats must ship pack/unpack hooks and
+a GQMV kernel hook, and — the invariant `dist/sharding.py` only enforces at
+RUNTIME via ``validate_quant_partition`` — no tensor-parallel shard
+boundary may fall inside a pack group, or one storage byte would hold
+elements of two shards.
+
+This is a **project** checker: it imports the live registries (quant
+formats, arch configs) and validates the objects, not their source text.
+Fixture tests inject synthetic formats/configs through the constructor.
+
+Straddle check, statically: for every arch config, every quantizable dim
+(d_model, q/kv projections, d_ff, vocab_padded, expert/MLA dims) and every
+tp degree we serve at, the per-shard contraction length must stay a whole
+number of storage elements for every packed format, and the per-leaf group
+size ``largest_pow2_group`` would pick must be a multiple of ``pack``.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from repro.analysis.engine import BaseChecker, Finding
+
+TP_DEGREES = (1, 2, 4, 8)
+REGISTRY_ANCHOR = "src/repro/core/quant.py"
+CONFIG_ANCHOR = "src/repro/configs"
+
+
+def _config_dims(cfg) -> dict[str, int]:
+    """Named quantizable contraction/output dims of one arch config."""
+    dims = {
+        "d_model": cfg.d_model,
+        "q_dim": cfg.q_dim,
+        "kv_dim": cfg.kv_dim,
+        "d_ff": cfg.d_ff,
+        "vocab_padded": cfg.vocab_padded,
+    }
+    if cfg.moe:
+        dims["moe.d_expert"] = cfg.moe.d_expert
+    if cfg.mla:
+        dims["mla.kv_lora_rank"] = cfg.mla.kv_lora_rank
+        if cfg.mla.q_lora_rank:
+            dims["mla.q_lora_rank"] = cfg.mla.q_lora_rank
+    if cfg.ssm:
+        dims["ssm.d_inner"] = cfg.ssm.expand * cfg.d_model
+    return dims
+
+
+class QuantInvariantsChecker(BaseChecker):
+    id = "quant-invariants"
+    description = ("QuantFormat entries internally consistent; no tp shard "
+                   "boundary can straddle a pack group on any arch config")
+
+    def __init__(self, formats=None, configs=None, kernel_hooks=None,
+                 tp_degrees: Sequence[int] = TP_DEGREES):
+        """``formats``: {name: QuantFormat}-like mapping; ``configs``:
+        iterable of ModelConfig; ``kernel_hooks``: set of valid kernel hook
+        names. Defaults (None) load the live repo registries."""
+        self._formats = formats
+        self._configs = configs
+        self._kernel_hooks = kernel_hooks
+        self.tp_degrees = tuple(tp_degrees)
+
+    # -- lazy registry access (fixtures inject, prod imports) ---------------
+    def _load(self):
+        import numpy as np
+
+        if self._formats is None:
+            from repro.core import quant
+            self._formats = dict(quant._FORMATS)
+        if self._kernel_hooks is None:
+            from repro.kernels.ops import KERNEL_HOOKS
+            self._kernel_hooks = set(KERNEL_HOOKS)
+        if self._configs is None:
+            from repro.models.registry import ARCH_IDS, load_config
+            self._configs = [load_config(a) for a in ARCH_IDS]
+        self._np = np
+
+    def check_project(self, root: str) -> Iterable[Finding]:
+        self._load()
+        yield from self._check_formats()
+        yield from self._check_straddle()
+
+    # -- per-format internal consistency ------------------------------------
+    def _check_formats(self) -> Iterable[Finding]:
+        def err(msg):
+            return Finding(self.id, REGISTRY_ANCHOR, 1, msg)
+
+        for name, fmt in sorted(self._formats.items()):
+            tag = f"format {name!r}:"
+            storage_bits = 8 * self._np.dtype(fmt.storage_dtype).itemsize
+            if fmt.pack < 1 or fmt.pack & (fmt.pack - 1):
+                yield err(f"{tag} pack factor {fmt.pack} must be a power of "
+                          "two (group sizes are powers of two; any other "
+                          "pack cannot tile a group)")
+                continue
+            if fmt.bits * fmt.pack != storage_bits:
+                yield err(f"{tag} bits({fmt.bits}) x pack({fmt.pack}) = "
+                          f"{fmt.bits * fmt.pack} does not fill the "
+                          f"{storage_bits}-bit storage dtype — packed bytes "
+                          "would carry dead or truncated bits")
+            if fmt.qmax != 2 ** (fmt.bits - 1) - 1:
+                yield err(f"{tag} qmax {fmt.qmax} != 2^{fmt.bits - 1}-1 = "
+                          f"{2 ** (fmt.bits - 1) - 1} — the symmetric range "
+                          "of Eq. 1 for this bit width")
+            if fmt.pack > 1 and (fmt.pack_fn is None or fmt.unpack_fn is None):
+                yield err(f"{tag} pack > 1 requires pack_fn/unpack_fn "
+                          "(checkpoint resharding round-trips through "
+                          "logical values)")
+            if fmt.kernel not in self._kernel_hooks:
+                yield err(f"{tag} kernel hook {fmt.kernel!r} not in "
+                          f"kernels/ops.py KERNEL_HOOKS "
+                          f"{sorted(self._kernel_hooks)} — qlinear would "
+                          "fall back to dequantize-then-matmul silently")
+
+    # -- pack-group vs shard geometry ---------------------------------------
+    def _check_straddle(self) -> Iterable[Finding]:
+        from repro.core.quant import largest_pow2_group
+
+        packed = [(n, f) for n, f in sorted(self._formats.items()) if f.pack > 1]
+        if not packed:
+            return
+        for cfg in self._configs:
+            gs_pref = cfg.group_size
+            if gs_pref & (gs_pref - 1):
+                yield Finding(
+                    self.id, CONFIG_ANCHOR, 1,
+                    f"{cfg.arch_id}: group_size {gs_pref} is not a power of "
+                    "two — the per-leaf GS descent assumes pow2")
+                continue
+            for dim_name, n in _config_dims(cfg).items():
+                for tp in self.tp_degrees:
+                    if n % tp:
+                        continue  # this (dim, tp) is not shardable; skip
+                    shard = n // tp
+                    gs = largest_pow2_group(shard, gs_pref, min_gs=16)
+                    for fname, fmt in packed:
+                        if shard % fmt.pack:
+                            yield Finding(
+                                self.id, CONFIG_ANCHOR, 1,
+                                f"{cfg.arch_id}: {dim_name}={n} at tp={tp} "
+                                f"gives shard {shard}, not a multiple of "
+                                f"{fname}'s pack {fmt.pack} — a storage "
+                                "element would straddle the shard boundary")
+                        elif gs is not None and gs % fmt.pack:
+                            yield Finding(
+                                self.id, CONFIG_ANCHOR, 1,
+                                f"{cfg.arch_id}: {dim_name}={n} at tp={tp} "
+                                f"picks GS={gs}, not a multiple of "
+                                f"{fname}'s pack {fmt.pack} — a pack group "
+                                "would straddle a quantization group")

@@ -1,0 +1,207 @@
+"""recompile-guard: jit cache misses counted at runtime, retrace traps
+caught statically.
+
+The scheduler decode loops are built to compile ONCE per shape bucket
+(``SlotScheduler.decode_chunk``, ``PagedScheduler.decode_until``; prefill
+retraces only per padded bucket length). A shape-dependent retrace —
+a Python int that becomes a weak type, a donated buffer rebound to a new
+shape, an argument that should be static but varies — silently multiplies
+decode latency by compile time. Two halves:
+
+- :class:`JitTraceCounter` — a context manager that patches ``jax.jit`` so
+  every function jitted UNDER the context counts its traces (a trace == a
+  cache miss; XLA only re-invokes the Python callable when the signature
+  is new). Schedulers constructed inside the context are fully counted
+  because they build their jitted programs in ``__init__``. Used by the
+  ``jit_trace_counter`` pytest fixture (tests/test_analysis.py).
+
+- :class:`RecompileChecker` — static detection of the two retrace traps a
+  counter only finds after the fact: ``jax.jit`` called inside a loop body
+  (a fresh compile cache per iteration) and call sites that pass an
+  unhashable literal (list/dict/set display) in a ``static_argnums`` /
+  ``static_argnames`` position of a same-module jitted function.
+"""
+
+from __future__ import annotations
+
+import ast
+import contextlib
+import functools
+from collections import Counter
+from typing import Iterable
+
+import jax
+
+from repro.analysis.engine import BaseChecker, Finding, dotted_name, is_jit_expr
+
+
+class JitTraceCounter:
+    """Counts traces per jitted-function name for jits created while active.
+
+    >>> with JitTraceCounter() as jc:
+    ...     sched = SlotScheduler(engine, ...)   # builds its jitted programs
+    ...     sched.serve(trace_a, 8)
+    ...     sched.serve(trace_b, 8)
+    >>> jc.counts["decode_chunk"]
+    1
+    """
+
+    def __init__(self):
+        self.counts: Counter[str] = Counter()
+        self._orig = None
+
+    def __enter__(self):
+        self._orig = jax.jit
+        counts = self.counts
+
+        def counting_jit(fun=None, **kw):
+            if fun is None:          # @jax.jit(static_argnames=...) form
+                return lambda f: counting_jit(f, **kw)
+            name = getattr(fun, "__name__", repr(fun))
+
+            @functools.wraps(fun)
+            def traced(*a, **k):
+                counts[name] += 1    # invoked only on a cache miss
+                return fun(*a, **k)
+
+            return self._orig(traced, **kw)
+
+        jax.jit = counting_jit
+        return self
+
+    def __exit__(self, *exc):
+        jax.jit = self._orig
+        return False
+
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def assert_traces(self, name: str, expected: int) -> None:
+        got = self.counts.get(name, 0)
+        if got != expected:
+            raise AssertionError(
+                f"`{name}` traced {got}x, expected exactly {expected}: a "
+                "retrace means a shape/static-arg varied per call "
+                f"(all counts: {dict(self.counts)})")
+
+
+@contextlib.contextmanager
+def count_jit_traces():
+    """Function-style alias: ``with count_jit_traces() as jc: ...``"""
+    with JitTraceCounter() as jc:
+        yield jc
+
+
+# ---------------------------------------------------------------------------
+# static half
+# ---------------------------------------------------------------------------
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp, ast.GeneratorExp)
+
+
+def _static_spec(call: ast.Call):
+    """(static_positions, static_names) literals of a jax.jit call."""
+    nums: list[int] = []
+    names: list[str] = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.append(n.value)
+        elif kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.append(n.value)
+    return nums, names
+
+
+class RecompileChecker(BaseChecker):
+    id = "recompile-guard"
+    description = ("no jax.jit inside loop bodies; no unhashable literals "
+                   "in static-arg positions of jitted call sites")
+
+    def check_file(self, path, tree, source) -> Iterable[Finding]:
+        yield from self._jit_in_loops(path, tree)
+        yield from self._unhashable_statics(path, tree)
+
+    def _jit_in_loops(self, path, tree) -> Iterable[Finding]:
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.hits: list[ast.AST] = []
+                self._loop = 0
+
+            def visit_For(self, node):
+                self._loop += 1
+                self.generic_visit(node)
+                self._loop -= 1
+
+            visit_While = visit_For
+
+            def visit_FunctionDef(self, node):
+                # decorators run at def time — in the enclosing loop context;
+                # the body runs later, so its loop depth resets
+                if self._loop:
+                    self.hits.extend(d for d in node.decorator_list
+                                     if is_jit_expr(d))
+                loop, self._loop = self._loop, 0
+                for stmt in node.body:
+                    self.visit(stmt)
+                self._loop = loop
+
+            visit_AsyncFunctionDef = visit_FunctionDef
+
+            def visit_Lambda(self, node):
+                loop, self._loop = self._loop, 0
+                self.generic_visit(node)
+                self._loop = loop
+
+            def visit_Call(self, node):
+                if self._loop and is_jit_expr(node):
+                    self.hits.append(node)
+                self.generic_visit(node)
+
+        v = V()
+        v.visit(tree)
+        for node in v.hits:
+            yield Finding(
+                self.id, path, node.lineno,
+                "jax.jit called inside a loop body: every iteration builds a "
+                "fresh compile cache — hoist the jit (or cache the jitted "
+                "callable) outside the loop", col=node.col_offset)
+
+    def _unhashable_statics(self, path, tree) -> Iterable[Finding]:
+        # module-level best effort: name -> (static nums, static names)
+        specs: dict[str, tuple[list[int], list[str]]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) and is_jit_expr(dec):
+                        specs[node.name] = _static_spec(dec)
+            elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                call = node.value
+                if dotted_name(call.func) in ("jax.jit", "jit") and call.args:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            specs[t.id] = _static_spec(call)
+        if not specs:
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call) or not isinstance(node.func, ast.Name):
+                continue
+            spec = specs.get(node.func.id)
+            if spec is None:
+                continue
+            nums, names = spec
+            bad: list[ast.AST] = []
+            bad += [a for i, a in enumerate(node.args)
+                    if i in nums and isinstance(a, _UNHASHABLE)]
+            bad += [kw.value for kw in node.keywords
+                    if kw.arg in names and isinstance(kw.value, _UNHASHABLE)]
+            for b in bad:
+                yield Finding(
+                    self.id, path, b.lineno,
+                    f"unhashable literal passed in a static position of "
+                    f"jitted `{node.func.id}`: static args must hash stably "
+                    "or every call recompiles (TypeError at best)",
+                    col=b.col_offset)

@@ -1,0 +1,156 @@
+"""registry-coverage checker: capability flags vs callables vs test matrix.
+
+A new model family gets its fast paths (ragged prefill, paged KV, spec
+decode) only through three ``Model`` flags — and a flag nobody tests is a
+fast path that silently rots. Three layers of coverage:
+
+1. **Declaration** (file check on ``models/registry.py``): every
+   ``Model(...)`` construction spells out the full capability surface —
+   ``supports_lengths`` / ``supports_paged`` / ``supports_spec`` — even
+   when False. Dataclass defaults would make omission legal; omission is
+   exactly how a family misses a fast path without anyone deciding that.
+
+2. **Consistency** (project check): for each arch, a True flag must come
+   with its callables (``supports_paged`` => ``init_paged_cache`` +
+   ``decode_paged``; ``supports_spec`` => ``verify``/``commit_verify``)
+   and a False flag must NOT ship them (dead capability).
+
+3. **Test matrix** (project check): each True flag appears in the matching
+   list in ``tests/arch_matrix.py`` (``RAGGED_ARCHS`` / ``PAGED_ARCHS`` /
+   ``SPEC_ARCHS``) — parsed as literals, no test import — and the matrix
+   holds no unknown ids or capability-less entries.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+import os
+from typing import Iterable
+
+from repro.analysis.engine import BaseChecker, Finding
+
+CAP_FLAGS = ("supports_lengths", "supports_paged", "supports_spec")
+
+# flag -> (matrix list name, [required Model attributes when True])
+CAPS = {
+    "supports_lengths": ("RAGGED_ARCHS", []),
+    "supports_paged": ("PAGED_ARCHS", ["init_paged_cache", "decode_paged"]),
+    "supports_spec": ("SPEC_ARCHS", ["verify", "commit_verify"]),
+}
+
+DEFAULT_MATRIX = "tests/arch_matrix.py"
+REGISTRY_GLOB = "*models/registry.py"
+REGISTRY_ANCHOR = "src/repro/models/registry.py"
+
+
+def _matrix_lists(path: str) -> dict[str, tuple[int, list[str]]]:
+    """{LIST_NAME: (lineno, [arch ids])} for top-level list-of-str assigns."""
+    with open(path, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    out: dict[str, tuple[int, list[str]]] = {}
+    for node in tree.body:
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, (ast.List, ast.Tuple))):
+            continue
+        elts = node.value.elts
+        if not all(isinstance(e, ast.Constant) and isinstance(e.value, str)
+                   for e in elts):
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Name):
+                out[t.id] = (node.lineno, [e.value for e in elts])
+    return out
+
+
+class RegistryCoverageChecker(BaseChecker):
+    id = "registry-coverage"
+    description = ("every Model declares supports_lengths/paged/spec "
+                   "explicitly; True flags have callables and a test-matrix "
+                   "entry")
+
+    def __init__(self, archs=None, matrix_path: str = DEFAULT_MATRIX,
+                 build=None, registry_glob: str = REGISTRY_GLOB):
+        """``archs``: arch ids to audit (default: the live ARCH_IDS);
+        ``build``: arch_id -> Model (default: registry ``build_arch``);
+        ``matrix_path``: repo-relative test-matrix module."""
+        self._archs = archs
+        self._build = build
+        self.matrix_path = matrix_path
+        self.registry_glob = registry_glob
+
+    # -- 1. explicit declaration (static) ------------------------------------
+    def check_file(self, path, tree, source) -> Iterable[Finding]:
+        if not fnmatch.fnmatch(path, self.registry_glob):
+            return
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "Model"):
+                continue
+            given = {kw.arg for kw in node.keywords if kw.arg}
+            missing = [f for f in CAP_FLAGS if f not in given]
+            if missing:
+                yield Finding(
+                    self.id, path, node.lineno,
+                    f"Model(...) omits capability flags {missing}: declare "
+                    "the full surface explicitly (False included) so a new "
+                    "family never misses a fast path by default",
+                    col=node.col_offset)
+
+    # -- 2 + 3. live consistency and matrix coverage -------------------------
+    def check_project(self, root: str) -> Iterable[Finding]:
+        if self._archs is None or self._build is None:
+            from repro.models import registry
+            self._archs = self._archs or list(registry.ARCH_IDS)
+            self._build = self._build or registry.build_arch
+
+        mpath = os.path.join(root, self.matrix_path)
+        if not os.path.isfile(mpath):
+            yield Finding(self.id, self.matrix_path, 1,
+                          "test matrix module missing: capability flags have "
+                          "no test coverage ledger")
+            return
+        lists = _matrix_lists(mpath)
+
+        caps: dict[str, dict[str, bool]] = {}
+        for arch in self._archs:
+            model = self._build(arch)
+            caps[arch] = {f: bool(getattr(model, f)) for f in CAP_FLAGS}
+            for flag, (_, attrs) in CAPS.items():
+                have = [a for a in attrs if getattr(model, a) is not None]
+                if caps[arch][flag] and len(have) != len(attrs):
+                    yield Finding(
+                        self.id, REGISTRY_ANCHOR, 1,
+                        f"{arch}: {flag}=True but missing callables "
+                        f"{sorted(set(attrs) - set(have))}")
+                elif not caps[arch][flag] and have:
+                    yield Finding(
+                        self.id, REGISTRY_ANCHOR, 1,
+                        f"{arch}: {flag}=False yet ships {have} — dead "
+                        "capability; either set the flag or drop the hooks")
+
+        for flag, (list_name, _) in CAPS.items():
+            if list_name not in lists:
+                yield Finding(
+                    self.id, self.matrix_path, 1,
+                    f"matrix list {list_name} missing (needed to cover "
+                    f"{flag})")
+                continue
+            lineno, ids = lists[list_name]
+            for arch in self._archs:
+                if caps[arch][flag] and arch not in ids:
+                    yield Finding(
+                        self.id, self.matrix_path, lineno,
+                        f"{arch} has {flag}=True but no {list_name} entry: "
+                        "the fast path is untested")
+            for aid in ids:
+                if aid not in caps:
+                    yield Finding(
+                        self.id, self.matrix_path, lineno,
+                        f"{list_name} names unknown arch {aid!r}")
+                elif not caps[aid][flag]:
+                    yield Finding(
+                        self.id, self.matrix_path, lineno,
+                        f"{list_name} lists {aid} but its {flag} is False — "
+                        "the matrix overstates coverage")

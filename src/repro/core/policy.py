@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import QuantizedTensor, get_format, largest_pow2_group
+from repro.core.treepath import path_str as _tree_path_str
 
 # Leaf-name patterns that are never quantized (generalizes the paper's
 # RMSNorm exemption).
@@ -38,9 +39,6 @@ EXCLUDE_PATTERNS = (
 )
 
 MIN_QUANT_DIM = 32  # don't quantize anything smaller than one group
-
-
-from repro.core.treepath import path_str as _tree_path_str
 
 
 def _path_str(path) -> str:

@@ -62,6 +62,18 @@ def _pick_block(dim: int, preferred: int, multiple_of: int = 1) -> int:
     raise ValueError(f"no block for dim={dim} multiple_of={multiple_of}")
 
 
+def _check_divides(dim: int, blk: int, axis: str, multiple_of: int = 1) -> int:
+    """Validate a (possibly caller-supplied) block size: the grid is built
+    as ``dim // blk``, so a non-dividing block would silently drop the tail
+    rows; the n axis must additionally stay a whole number of quantization
+    groups / storage elements."""
+    if dim % blk or blk % multiple_of:
+        raise ValueError(
+            f"block {blk} invalid for {axis}={dim} "
+            f"(multiple_of={multiple_of}): the grid would drop the tail")
+    return blk
+
+
 # ---------------------------------------------------------------------------
 # GQMV: out (1, m)  =  W(q) (m, n)  @  x(q) (1, n)     -- paper's batch-1 core
 # ---------------------------------------------------------------------------
@@ -110,8 +122,11 @@ def _gqmv_call(kernel, wq, ws, xq, xs, *, group_size, pack,
     factor (wq's trailing axis holds n // pack storage elements)."""
     m = wq.shape[0]
     n = xq.shape[-1]
-    bm = block_m or _pick_block(m, DEFAULT_BM)
-    bn = block_n or _pick_block(n, DEFAULT_BN, multiple_of=max(group_size, pack))
+    gmult = max(group_size, pack)
+    bm = _check_divides(m, block_m or _pick_block(m, DEFAULT_BM), "m")
+    bn = _check_divides(
+        n, block_n or _pick_block(n, DEFAULT_BN, multiple_of=gmult), "n",
+        multiple_of=gmult)
     ng = bn // group_size
     grid = (m // bm, n // bn)
 
@@ -208,9 +223,12 @@ def _gqmm_call(kernel, wq, ws, xq, xs, *, group_size, pack,
                block_b, block_m, block_n, interpret):
     m = wq.shape[0]
     b, n = xq.shape
-    bb = block_b or _pick_block(b, DEFAULT_BB)
-    bm = block_m or _pick_block(m, DEFAULT_BM)
-    bn = block_n or _pick_block(n, DEFAULT_BN, multiple_of=max(group_size, pack))
+    gmult = max(group_size, pack)
+    bb = _check_divides(b, block_b or _pick_block(b, DEFAULT_BB), "b")
+    bm = _check_divides(m, block_m or _pick_block(m, DEFAULT_BM), "m")
+    bn = _check_divides(
+        n, block_n or _pick_block(n, DEFAULT_BN, multiple_of=gmult), "n",
+        multiple_of=gmult)
     ng = bn // group_size
     grid = (b // bb, m // bm, n // bn)
 

@@ -25,7 +25,6 @@ from functools import partial
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.quant import QuantizedTensor, get_format, quantize_activation
 from repro.kernels import gqmv as _pallas

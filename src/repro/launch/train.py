@@ -10,8 +10,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.dist import logical

@@ -16,7 +16,7 @@ from repro.configs.base import ModelConfig
 from repro.core.qlinear import embedding_lookup, linear, split_fused
 from repro.models import attention as attn
 from repro.models import mlp as mlpmod
-from repro.models.common import NEG_INF, apply_rope, dense_init, embed_init, rmsnorm
+from repro.models.common import dense_init, embed_init, rmsnorm
 
 # cross-attention encoder-memory length used by decode-shape input specs
 DEFAULT_MEMORY_LEN = 4096

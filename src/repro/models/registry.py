@@ -137,6 +137,11 @@ def build(cfg: ModelConfig) -> Model:
             init_cache=lambda b, t, dt: _rwkv.rwkv_init_state(cfg, b, dt),
             prefill=lambda p, batch, t: _rwkv.rwkv_prefill(p, batch["tokens"], cfg, t),
             decode=lambda p, tok, cache, pos: _rwkv.rwkv_decode(p, tok, cache, pos, cfg),
+            # recurrent state: prefill cannot skip pad tokens, no paged
+            # layout, no uncommitted k-token verify — all deliberate
+            supports_lengths=False,
+            supports_paged=False,
+            supports_spec=False,
         )
 
     if cfg.model_type == "zamba2":
@@ -149,6 +154,11 @@ def build(cfg: ModelConfig) -> Model:
             init_cache=lambda b, t, dt: _zamba.zamba_init_cache(cfg, b, t, dt),
             prefill=lambda p, batch, t: _zamba.zamba_prefill(p, batch["tokens"], cfg, t),
             decode=lambda p, tok, cache, pos: _zamba.zamba_decode(p, tok, cache, pos, cfg),
+            # SSM backbone carries sequential scan state through prefill:
+            # same exclusions as rwkv6 (see Model docstring)
+            supports_lengths=False,
+            supports_paged=False,
+            supports_spec=False,
         )
 
     if cfg.model_type == "encdec":
@@ -159,6 +169,11 @@ def build(cfg: ModelConfig) -> Model:
             init_cache=lambda b, t, dt: _encdec.encdec_init_cache(cfg, b, t, dt),
             prefill=lambda p, batch, t: _encdec.encdec_prefill(p, batch, cfg, t),
             decode=lambda p, tok, cache, pos: _encdec.encdec_decode(p, tok, cache, pos, cfg),
+            # encoder output is per-request state the slot/paged schedulers
+            # don't carry; decoder cache stays contiguous
+            supports_lengths=False,
+            supports_paged=False,
+            supports_spec=False,
         )
 
     raise ValueError(f"unknown model_type: {cfg.model_type}")

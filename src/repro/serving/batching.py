@@ -293,24 +293,31 @@ class SlotScheduler:
             take = [pending.popleft() for _ in range(min(len(free), len(pending)))]
             for r in take:
                 admitted[bucket_length(len(r.tokens))].append(r)
+            staged: list[tuple[list[int], list[Request], jax.Array]] = []
             for length, group in admitted.items():
                 slots_g, free = free[: len(group)], free[len(group):]
                 toks_np, lens_np = pad_bucket(group, length)
                 key, kp = jax.random.split(key)
-                t0, rows = self._prefill_fn(length)(
+                t0_d, rows = self._prefill_fn(length)(
                     engine.params, jnp.asarray(toks_np), jnp.asarray(lens_np), kp
                 )
                 cache = self._insert(cache, rows, jnp.asarray(slots_g, jnp.int32))
-                t0 = np.asarray(t0)
-                for s, r, t in zip(slots_g, group, t0):
-                    slot_req[s], slot_toks[s] = r, [int(t)]
-                    tok[s], pos[s] = int(t), len(r.tokens)
-                    if self.last_spec_stats is not None:
-                        # the prefill-sampled token is delivered work too —
-                        # keeps 'generated' comparable with engine spec_stats
-                        self.last_spec_stats["generated"] += 1
-                    if budget(r) <= 1 or (eos is not None and int(t) == eos):
-                        finish(s)
+                staged.append((slots_g, group, t0_d))
+            if staged:
+                # ONE host round-trip for the whole admission wave, not one
+                # per bucket (host-sync chunk budget: admission + chunk)
+                first_toks = jax.device_get([t for _, _, t in staged])
+                for (slots_g, group, _), t0 in zip(staged, first_toks):
+                    for s, r, t in zip(slots_g, group, t0):
+                        slot_req[s], slot_toks[s] = r, [int(t)]
+                        tok[s], pos[s] = int(t), len(r.tokens)
+                        if self.last_spec_stats is not None:
+                            # the prefill-sampled token is delivered work too
+                            # — keeps 'generated' comparable with engine
+                            # spec_stats
+                            self.last_spec_stats["generated"] += 1
+                        if budget(r) <= 1 or (eos is not None and int(t) == eos):
+                            finish(s)
 
             if not any(r is not None for r in slot_req):
                 if pending:

@@ -15,7 +15,6 @@ rebuilt mesh.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Mapping
 
 import jax

@@ -321,27 +321,34 @@ class PagedScheduler:
                 table[s, : len(prompt_blocks)] = prompt_blocks
                 live[s] = True
                 admitted[self._prompt_pad(len(r.tokens))].append((s, r))
+            staged: list[tuple[list[tuple[int, Request]], jax.Array]] = []
             for length, group in admitted.items():
                 reqs_g = [r for _, r in group]
                 toks_np, lens_np = pad_bucket(reqs_g, length)
                 key, kp = jax.random.split(key)
-                t0, rows = self._prefill_fn()(
+                t0_d, rows = self._prefill_fn()(
                     engine.params, jnp.asarray(toks_np), jnp.asarray(lens_np), kp
                 )
                 tables_g = jnp.asarray(
                     np.stack([table[s, : length // bs] for s, _ in group]))
                 cache = self._insert(cache, rows, tables_g)
-                t0 = np.asarray(t0)
-                for (s, r), t in zip(group, t0):
-                    slot_toks[s] = [int(t)]
-                    tok[s], pos[s] = int(t), len(r.tokens)
-                    remaining[s] = budget(r) - 1
-                    if self.last_spec_stats is not None:
-                        # the prefill-sampled token is delivered work too —
-                        # keeps 'generated' comparable with engine spec_stats
-                        self.last_spec_stats["generated"] += 1
-                    if budget(r) <= 1 or (eos is not None and int(t) == eos):
-                        finish(s)
+                staged.append((group, t0_d))
+            if staged:
+                # ONE host round-trip for the whole admission wave, not one
+                # per bucket (host-sync chunk budget: admission + chunk)
+                first_toks = jax.device_get([t for _, t in staged])
+                for (group, _), t0 in zip(staged, first_toks):
+                    for (s, r), t in zip(group, t0):
+                        slot_toks[s] = [int(t)]
+                        tok[s], pos[s] = int(t), len(r.tokens)
+                        remaining[s] = budget(r) - 1
+                        if self.last_spec_stats is not None:
+                            # the prefill-sampled token is delivered work too
+                            # — keeps 'generated' comparable with engine
+                            # spec_stats
+                            self.last_spec_stats["generated"] += 1
+                        if budget(r) <= 1 or (eos is not None and int(t) == eos):
+                            finish(s)
 
             if not live.any():
                 if pending:

@@ -1,0 +1,21 @@
+"""host-sync chunk-loop fixture: per-item syncs and a blown path budget.
+
+Analyzed with HostSyncChecker(loop_files=("*bad_chunk_loop.py",)).
+"""
+
+import jax
+
+
+class Sched:
+    def serve(self, requests):
+        pending = list(requests)
+        out = []
+        while pending:
+            for r in pending:
+                out.append(jax.device_get(r))  # LINT: host-sync
+            a = jax.device_get(pending)
+            b = jax.device_get(pending)
+            c = jax.device_get(pending)  # LINT: host-sync
+            pending = pending[1:]
+            out.extend((a, b, c))
+        return out

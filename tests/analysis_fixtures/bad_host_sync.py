@@ -1,0 +1,24 @@
+"""host-sync fixture: syncs inside jitted scopes. NOT imported — AST only."""
+
+from functools import partial
+
+import jax
+
+
+@jax.jit
+def jitted_device_get(x):
+    y = jax.device_get(x)  # LINT: host-sync
+    return y
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def jitted_item(x):
+    return x.item()  # LINT: host-sync
+
+
+def passed_to_jit(x):
+    jax.block_until_ready(x)  # LINT: host-sync
+    return x
+
+
+run = jax.jit(passed_to_jit)

@@ -1,0 +1,14 @@
+"""registry-coverage fixture matrix: stale, incomplete, and overstated.
+
+Used as ``matrix_path`` with injected fake archs (test_analysis.py):
+- arch-a has supports_paged=True but PAGED_ARCHS is empty (untested path)
+- RAGGED_ARCHS names an arch the registry doesn't know
+- SPEC_ARCHS is missing entirely
+"""
+
+RAGGED_ARCHS = [
+    "arch-a",
+    "unknown-arch",
+]
+
+PAGED_ARCHS = []

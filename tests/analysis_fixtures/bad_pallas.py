@@ -1,0 +1,43 @@
+"""pallas-contract fixture: arity/divisibility/cardinality/VMEM defects.
+
+Never imported (fixtures are AST-only); ``kernel`` is a free name.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def bad_index_map_arity(x, m):
+    bm = 128
+    grid = (m // bm,)  # LINT: pallas-contract
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm,), lambda i, j: (i,))],  # LINT: pallas-contract
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+    )(x)
+
+
+def bad_out_cardinality(x, m):
+    grid = (8,)
+    return pl.pallas_call(  # LINT: pallas-contract
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((8,), lambda i: (i,)),
+                   pl.BlockSpec((8,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((m,), jnp.float32)],
+    )(x)
+
+
+def bad_vmem_budget(x):
+    big = 4096
+    return pl.pallas_call(  # LINT: pallas-contract
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((big, big), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((big, big), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((big, big), jnp.float32),
+    )(x)

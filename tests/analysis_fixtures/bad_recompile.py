@@ -1,0 +1,37 @@
+"""recompile-guard fixture: jit-in-loop and unhashable static args."""
+
+from functools import partial
+
+import jax
+
+
+def jit_per_iteration(xs):
+    outs = []
+    for x in xs:
+        f = jax.jit(lambda v: v + 1)  # LINT: recompile-guard
+        outs.append(f(x))
+    return outs
+
+
+def jit_decorator_in_loop(xs):
+    outs = []
+    for x in xs:
+        @jax.jit  # LINT: recompile-guard
+        def g(v):
+            return v * 2
+        outs.append(g(x))
+    return outs
+
+
+@partial(jax.jit, static_argnames=("dims",))
+def reshaped(x, dims):
+    return x.reshape(dims)
+
+
+sliced = jax.jit(lambda x, n: x[:n], static_argnums=(1,))
+
+
+def callers(x):
+    a = reshaped(x, dims=[2, 2])  # LINT: recompile-guard
+    b = sliced(x, [1])  # LINT: recompile-guard
+    return a, b

@@ -1,0 +1,21 @@
+"""host-sync chunk-loop fixture: budget respected, split over continue arms.
+
+Analyzed with HostSyncChecker(loop_files=("*good_chunk_loop.py",)).
+"""
+
+import jax
+
+
+class Sched:
+    def serve(self, requests):
+        pending = list(requests)
+        out = []
+        while pending:
+            admission = jax.device_get(pending)       # sync 1 (both paths)
+            if not out:
+                out.append(jax.device_get(admission))  # sync 2, spec arm
+                continue
+            chunk = jax.device_get(pending)            # sync 2, vanilla arm
+            pending = pending[1:]
+            out.extend((admission, chunk))
+        return out

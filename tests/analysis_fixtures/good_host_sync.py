@@ -1,0 +1,17 @@
+"""host-sync fixture: clean jitted scopes and host-side conversions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def pure_math(x):
+    return jnp.tanh(x) * 2.0
+
+
+def host_side(xs):
+    # np.asarray on a host list (untainted, no *_d suffix): not a sync site
+    arr = np.asarray(xs)
+    y = pure_math(jnp.asarray(arr))
+    return jax.device_get(y)  # outside any jitted scope / serve loop

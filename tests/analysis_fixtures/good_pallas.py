@@ -1,0 +1,42 @@
+"""pallas-contract fixture: guarded blocks, matched arities, sane VMEM."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pick_block(dim, preferred):
+    cand = min(preferred, dim)
+    while dim % cand:
+        cand //= 2
+    return cand
+
+
+def guarded_blocks(x, m, n):
+    bm = _pick_block(m, 256)          # guard: *pick_block* assignment
+    bq = 256
+    while n % bq:                     # guard: % descent
+        bq //= 2
+    grid = (m // bm, n // bq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bq), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, bm), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.float32),
+    )(x)
+
+
+def prefetch_grid(x, tables, b, kv, mb):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, mb),
+        in_specs=[pl.BlockSpec((1, 8, 16), lambda i, j, k, t, p: (i, j, 0))],
+        out_specs=pl.BlockSpec((1, 8, 16), lambda i, j, k, t, p: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((8, 16), jnp.float32),
+    )(tables, x)

@@ -1,0 +1,21 @@
+"""recompile-guard fixture: hoisted jits, hashable statics."""
+
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, static_argnames=("dims",))
+def reshaped(x, dims):
+    return x.reshape(dims)
+
+
+step = jax.jit(lambda x, n: x[:n], static_argnums=(1,))
+
+
+def run(xs):
+    outs = []
+    for x in xs:                      # jit built once, reused per iteration
+        outs.append(reshaped(x, dims=(2, 2)))
+        outs.append(step(x, 1))
+    return outs

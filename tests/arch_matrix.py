@@ -1,0 +1,46 @@
+"""Capability test matrix: the ledger the registry-coverage checker audits.
+
+One literal list per ``Model`` capability flag. Every arch whose flag is
+True MUST appear in the matching list, and every entry here is exercised by
+``tests/test_capability_matrix.py`` (which parametrizes directly over these
+lists) — so adding a family to the registry with a True flag forces a test,
+and listing an arch without the capability fails the lint.
+
+Lists are parsed as AST literals by ``repro.analysis.registry_coverage``;
+keep them plain lists of string constants (no comprehensions/imports).
+"""
+
+# supports_lengths: ragged right-padded prefill + per-row decode positions.
+# All decoder_lm families (GQA and MLA alike).
+RAGGED_ARCHS = [
+    "tinyllama-1.1b",
+    "pixtral-12b",
+    "minicpm3-4b",
+    "deepseek-coder-33b",
+    "gemma2-2b",
+    "internlm2-1.8b",
+    "dbrx-132b",
+    "deepseek-v2-lite-16b",
+]
+
+# supports_paged: block-pool KV cache + block-table decode.
+# GQA decoder_lm only — the MLA latent cache keeps its contiguous layout.
+PAGED_ARCHS = [
+    "tinyllama-1.1b",
+    "pixtral-12b",
+    "deepseek-coder-33b",
+    "gemma2-2b",
+    "internlm2-1.8b",
+    "dbrx-132b",
+]
+
+# supports_spec: uncommitted k-token verify + accepted-prefix commit.
+# Same layout class as supports_paged.
+SPEC_ARCHS = [
+    "tinyllama-1.1b",
+    "pixtral-12b",
+    "deepseek-coder-33b",
+    "gemma2-2b",
+    "internlm2-1.8b",
+    "dbrx-132b",
+]

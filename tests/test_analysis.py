@@ -1,0 +1,350 @@
+"""repro-lint: engine, allowlist, all five checkers, CLI, and the
+recompile-guard runtime fixture (scheduler decode loops compile once).
+
+Checker tests assert EXACT finding counts and file:line anchors. Fixture
+files under tests/analysis_fixtures/ tag every expected finding line with a
+``# LINT: <checker-id>`` comment, so the expectations live next to the code
+that triggers them and can't drift silently.
+"""
+
+import ast
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    HostSyncChecker,
+    JitTraceCounter,
+    PallasContractChecker,
+    QuantInvariantsChecker,
+    RecompileChecker,
+    RegistryCoverageChecker,
+    default_checkers,
+)
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.engine import Allowlist, Finding, run_analysis
+from repro.core.quant import QuantFormat, get_format
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIX = "tests/analysis_fixtures"
+
+
+def fixture_path(name):
+    return os.path.join(FIX, name)
+
+
+def tagged_lines(name, checker_id):
+    """Lines in a fixture carrying ``# LINT: <checker-id>``."""
+    with open(os.path.join(ROOT, FIX, name), encoding="utf-8") as fh:
+        return sorted(i for i, line in enumerate(fh, 1)
+                      if f"# LINT: {checker_id}" in line)
+
+
+def run_one(checker, name):
+    findings, _ = run_analysis([checker], [fixture_path(name)], ROOT)
+    return findings
+
+
+def assert_anchored(findings, name, checker_id):
+    assert [f.checker for f in findings] == [checker_id] * len(findings)
+    assert sorted(f.line for f in findings) == tagged_lines(name, checker_id)
+    for f in findings:
+        assert f.path == f"{FIX}/{name}"
+        assert f.anchor == f"{f.path}:{f.line}"
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+def test_host_sync_flags_syncs_in_jitted_scopes():
+    findings = run_one(HostSyncChecker(), "bad_host_sync.py")
+    assert len(findings) == 3
+    assert_anchored(findings, "bad_host_sync.py", "host-sync")
+
+
+def test_host_sync_chunk_loop_budget_and_nested_for():
+    checker = HostSyncChecker(loop_files=("*bad_chunk_loop.py",))
+    findings = run_one(checker, "bad_chunk_loop.py")
+    assert len(findings) == 2
+    assert_anchored(findings, "bad_chunk_loop.py", "host-sync")
+    msgs = " ".join(f.message for f in findings)
+    assert "for-loop" in msgs and "budget" in msgs
+
+
+@pytest.mark.parametrize("name", ["good_host_sync.py", "good_chunk_loop.py"])
+def test_host_sync_clean_fixtures(name):
+    checker = HostSyncChecker(loop_files=(f"*{name}",))
+    assert run_one(checker, name) == []
+
+
+# ---------------------------------------------------------------------------
+# recompile-guard (static half)
+# ---------------------------------------------------------------------------
+
+def test_recompile_flags_jit_in_loop_and_unhashable_statics():
+    findings = run_one(RecompileChecker(), "bad_recompile.py")
+    assert len(findings) == 4
+    assert_anchored(findings, "bad_recompile.py", "recompile-guard")
+    assert sum("loop" in f.message for f in findings) == 2
+    assert sum("unhashable" in f.message for f in findings) == 2
+
+
+def test_recompile_clean_fixture():
+    assert run_one(RecompileChecker(), "good_recompile.py") == []
+
+
+# ---------------------------------------------------------------------------
+# pallas-contract
+# ---------------------------------------------------------------------------
+
+def test_pallas_contract_flags_all_defect_classes():
+    findings = run_one(PallasContractChecker(), "bad_pallas.py")
+    assert len(findings) == 4
+    assert_anchored(findings, "bad_pallas.py", "pallas-contract")
+    msgs = [f.message for f in findings]
+    assert sum("index_map takes" in m for m in msgs) == 1
+    assert sum("no divisibility guard" in m for m in msgs) == 1
+    assert sum("out_shape has" in m for m in msgs) == 1
+    assert sum("VMEM" in m for m in msgs) == 1
+    assert [f.severity for f in findings if "VMEM" in f.message] == ["warning"]
+
+
+def test_pallas_contract_clean_fixture():
+    assert run_one(PallasContractChecker(), "good_pallas.py") == []
+
+
+def test_pallas_contract_clean_on_real_kernels():
+    findings, _ = run_analysis([PallasContractChecker()],
+                               ["src/repro/kernels"], ROOT)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# quant-invariants
+# ---------------------------------------------------------------------------
+
+def test_quant_invariants_flags_inconsistent_format():
+    weird = QuantFormat(name="weird", bits=4, storage_dtype=jnp.int8,
+                        pack=2, qmax=8, kernel="nope")
+    checker = QuantInvariantsChecker(
+        formats={"weird": weird}, configs=[], kernel_hooks={"gqmv_int8"})
+    msgs = [f.message for f in checker.check_project(ROOT)]
+    assert len(msgs) == 3
+    assert sum("qmax" in m for m in msgs) == 1
+    assert sum("pack_fn" in m for m in msgs) == 1
+    assert sum("kernel hook" in m for m in msgs) == 1
+
+
+def test_quant_invariants_flags_non_pow2_pack():
+    odd = QuantFormat(name="odd", bits=8, storage_dtype=jnp.int8,
+                      pack=3, qmax=127, kernel="gqmv_int8")
+    checker = QuantInvariantsChecker(
+        formats={"odd": odd}, configs=[], kernel_hooks={"gqmv_int8"})
+    msgs = [f.message for f in checker.check_project(ROOT)]
+    assert len(msgs) == 1 and "power of" in msgs[0]
+
+
+def test_quant_invariants_flags_pack_group_straddle():
+    cfg = types.SimpleNamespace(
+        arch_id="fake-6d", group_size=256, d_model=6, q_dim=256, kv_dim=256,
+        d_ff=256, vocab_padded=256, moe=None, mla=None, ssm=None)
+    checker = QuantInvariantsChecker(
+        formats={"int4": get_format("int4")}, configs=[cfg],
+        kernel_hooks={"gqmv_int4"})
+    findings = list(checker.check_project(ROOT))
+    assert len(findings) == 1
+    assert "d_model=6" in findings[0].message
+    assert "straddle" in findings[0].message
+
+
+def test_quant_invariants_clean_on_real_registry():
+    assert list(QuantInvariantsChecker().check_project(ROOT)) == []
+
+
+# ---------------------------------------------------------------------------
+# registry-coverage
+# ---------------------------------------------------------------------------
+
+def test_registry_coverage_requires_explicit_flags():
+    name = "bad_registry.py"
+    with open(os.path.join(ROOT, FIX, name), encoding="utf-8") as fh:
+        src = fh.read()
+    checker = RegistryCoverageChecker(registry_glob=f"*{name}")
+    findings = list(checker.check_file(f"{FIX}/{name}", ast.parse(src), src))
+    assert len(findings) == 2
+    assert_anchored(findings, name, "registry-coverage")
+    # the partially-explicit Model() names only the flag it omitted
+    assert any("['supports_spec']" in f.message for f in findings)
+
+
+def _fake_model(**kw):
+    base = dict(supports_lengths=False, supports_paged=False,
+                supports_spec=False, init_paged_cache=None, decode_paged=None,
+                verify=None, commit_verify=None)
+    base.update(kw)
+    return types.SimpleNamespace(**base)
+
+
+def test_registry_coverage_matrix_cross_check():
+    fakes = {
+        "arch-a": _fake_model(
+            supports_lengths=True, supports_paged=True,
+            init_paged_cache=lambda *a: None, decode_paged=lambda *a: None),
+        "arch-b": _fake_model(decode_paged=lambda *a: None),
+    }
+    checker = RegistryCoverageChecker(
+        archs=list(fakes), build=fakes.__getitem__,
+        matrix_path=f"{FIX}/bad_matrix.py")
+    msgs = [f.message for f in checker.check_project(ROOT)]
+    assert len(msgs) == 4
+    assert sum("dead capability" in m for m in msgs) == 1       # arch-b
+    assert sum("untested" in m for m in msgs) == 1              # arch-a paged
+    assert sum("unknown arch" in m for m in msgs) == 1
+    assert sum("SPEC_ARCHS missing" in m for m in msgs) == 1
+
+
+def test_registry_coverage_clean_on_real_registry():
+    assert list(RegistryCoverageChecker().check_project(ROOT)) == []
+
+
+# ---------------------------------------------------------------------------
+# engine: findings, allowlist, parse errors
+# ---------------------------------------------------------------------------
+
+def test_finding_render_and_severity():
+    f = Finding("host-sync", "src/x.py", 12, "boom", col=4)
+    assert f.anchor == "src/x.py:12"
+    assert f.render() == "src/x.py:12:4: error[host-sync] boom"
+    with pytest.raises(ValueError):
+        Finding("x", "y.py", 1, "m", severity="fatal")
+
+
+def test_allowlist_roundtrip(tmp_path):
+    p = tmp_path / "allow"
+    p.write_text(
+        "# comment\n"
+        "\n"
+        "host-sync src/x.py:12 deliberate admission transfer\n"
+        "* other/*.py blanket grandfathering of a legacy dir\n")
+    al = Allowlist.load(str(p))
+    assert len(al.rules) == 2
+    hit = Finding("host-sync", "src/x.py", 12, "m")
+    miss = Finding("host-sync", "src/x.py", 13, "m")
+    other = Finding("pallas-contract", "other/k.py", 7, "m")
+    kept, suppressed = al.filter([hit, miss, other])
+    assert kept == [miss]
+    assert suppressed == [hit, other]
+    assert al.unused() == []
+
+
+def test_allowlist_requires_justification(tmp_path):
+    p = tmp_path / "allow"
+    p.write_text("host-sync src/x.py\n")
+    with pytest.raises(ValueError, match="justification"):
+        Allowlist.load(str(p))
+
+
+def test_allowlist_unused_rules_reported(tmp_path):
+    p = tmp_path / "allow"
+    p.write_text("host-sync nowhere/*.py never matches anything\n")
+    al = Allowlist.load(str(p))
+    al.filter([])
+    assert [r.pattern for r in al.unused()] == ["nowhere/*.py"]
+
+
+def test_parse_failure_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    findings, _ = run_analysis([HostSyncChecker()], [str(bad)], str(tmp_path))
+    assert [f.checker for f in findings] == ["parse"]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_lists_all_five_checkers(capsys):
+    assert cli_main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for c in default_checkers():
+        assert c.id in out
+
+
+def test_cli_exits_nonzero_on_bad_fixture(capsys):
+    rc = cli_main([fixture_path("bad_recompile.py"), "--root", ROOT,
+                   "--select", "recompile-guard"])
+    assert rc == 1
+    assert "recompile-guard" in capsys.readouterr().out
+
+
+def test_cli_exits_zero_on_good_fixture():
+    assert cli_main([fixture_path("good_recompile.py"), "--root", ROOT,
+                     "--select", "recompile-guard"]) == 0
+
+
+def test_cli_rejects_unknown_checker_id():
+    assert cli_main(["--select", "no-such-checker"]) == 2
+
+
+def test_cli_clean_on_repo_tree():
+    """The acceptance gate: the full five-checker pass over the repo tree
+    (same invocation as CI) reports nothing."""
+    assert cli_main(["--root", ROOT]) == 0
+
+
+# ---------------------------------------------------------------------------
+# recompile-guard, runtime half: decode loops compile once per shape bucket
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def eng():
+    from repro.models.registry import build, load_config
+    from repro.serving.engine import InferenceEngine
+
+    cfg = load_config("tinyllama-1.1b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return InferenceEngine(model, params, cache_len=40)
+
+
+@pytest.fixture
+def jit_trace_counter():
+    with JitTraceCounter() as jc:
+        yield jc
+
+
+# mixed-length trace: prompt lens 2/3/10/12 -> two pad buckets (8 and 16)
+MIXED_PROMPTS = [[5, 3], [7, 1, 4], list(range(1, 11)), list(range(2, 14))]
+MIXED_BUDGETS = [3, 4, 2, 3]
+
+
+def _mixed_requests():
+    from repro.serving.batching import Request
+
+    return [Request(i, p, max_new=b)
+            for i, (p, b) in enumerate(zip(MIXED_PROMPTS, MIXED_BUDGETS))]
+
+
+def test_slot_scheduler_decode_compiles_once(eng, jit_trace_counter):
+    from repro.serving.batching import SlotScheduler
+
+    sched = SlotScheduler(eng, slots=2, chunk=2)
+    out = sched.serve(_mixed_requests(), 4)
+    assert len(out) == 4 and all(r.length > 0 for r in out)
+    jit_trace_counter.assert_traces("decode_chunk", 1)
+    # prefill retraces only per padded bucket length (8 and 16)
+    jit_trace_counter.assert_traces("prefill_group", 2)
+
+
+def test_paged_scheduler_decode_compiles_once(eng, jit_trace_counter):
+    from repro.serving.paged import PagedScheduler
+
+    sched = PagedScheduler(eng, slots=2, chunk=2, block_size=8)
+    out = sched.serve(_mixed_requests(), 4)
+    assert len(out) == 4 and all(r.length > 0 for r in out)
+    jit_trace_counter.assert_traces("decode_until", 1)
+    jit_trace_counter.assert_traces("prefill_group", 2)

@@ -6,16 +6,15 @@ import subprocess
 import sys
 from types import SimpleNamespace
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.sharding import batch_specs, cache_spec, param_spec, param_specs
 from repro.launch import hlo_analysis
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MESH16 = SimpleNamespace(shape={"data": 16, "model": 16},
                          axis_names=("data", "model"))

@@ -3,12 +3,11 @@
 Kernels execute in interpret mode (CPU container); shapes/dtypes/GS swept.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
+from _hypothesis_compat import given, settings, st
 from repro.core.quant import quantize_activation, quantize_groupwise, quantize_int4
 from repro.kernels import ops
 from repro.kernels.gqmv import (

@@ -18,12 +18,12 @@ Satellite regressions (each failed before its fix):
 """
 
 import math
+from types import SimpleNamespace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from types import SimpleNamespace
 
 from repro.core import flags
 from repro.models.common import decode_mask

@@ -4,10 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
+from _hypothesis_compat import given, settings, st
 from repro.core.quant import (
-    QuantizedTensor,
     choose_group_size,
     dequantize,
     quantization_error_stats,

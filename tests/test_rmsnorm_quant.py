@@ -1,11 +1,10 @@
 """Fused RMSNorm+quantize Pallas kernel vs composed oracle."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
+from _hypothesis_compat import given, settings, st
 from repro.kernels.rmsnorm_quant import rmsnorm_quant_pallas, rmsnorm_quant_ref
 
 

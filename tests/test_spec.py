@@ -16,12 +16,12 @@ Tentpole regressions:
 """
 
 import math
+from types import SimpleNamespace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from types import SimpleNamespace
 
 from repro.dist.sharding import verify_logits_spec
 from repro.models.registry import build, load_config
