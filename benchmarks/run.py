@@ -15,6 +15,9 @@
                               BENCH_spec.json; exits non-zero if greedy
                               speculative output diverges from vanilla or
                               the repetitive trace misses the 1.5x gate)
+  recurrent -> throughput    (rwkv6 slot-state continuous batching vs
+                              exact-length bucket-serial; exits non-zero
+                              below the 1.3x tok/s gate)
 
 A suite returning False marks the run failed (exit 1).
 """
@@ -50,6 +53,7 @@ def main() -> int:
         "quant": quant_bench.run,
         "paged": throughput.run_paged,
         "spec": throughput.run_spec,
+        "recurrent": throughput.run_recurrent,
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; valid: {', '.join(suites)}", file=sys.stderr)

@@ -45,6 +45,7 @@ SYNC_METHODS = {"item", "block_until_ready"}
 
 DEFAULT_LOOP_FILES = (
     "*serving/batching.py",
+    "*serving/core.py",
     "*serving/paged.py",
     "*serving/engine.py",
 )

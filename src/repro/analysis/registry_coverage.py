@@ -6,19 +6,26 @@ fast path that silently rots. Three layers of coverage:
 
 1. **Declaration** (file check on ``models/registry.py``): every
    ``Model(...)`` construction spells out the full capability surface —
-   ``supports_lengths`` / ``supports_paged`` / ``supports_spec`` — even
-   when False. Dataclass defaults would make omission legal; omission is
-   exactly how a family misses a fast path without anyone deciding that.
+   ``supports_lengths`` / ``supports_paged`` / ``supports_spec`` plus the
+   scheduling-core ``cache_kind`` — even when False/"none". Dataclass
+   defaults would make omission legal; omission is exactly how a family
+   misses a fast path without anyone deciding that.
 
 2. **Consistency** (project check): for each arch, a True flag must come
    with its callables (``supports_paged`` => ``init_paged_cache`` +
    ``decode_paged``; ``supports_spec`` => ``verify``/``commit_verify``)
-   and a False flag must NOT ship them (dead capability).
+   and a False flag must NOT ship them (dead capability). ``cache_kind``
+   must be one of ``kv``/``state``/``none``; kv and state families must
+   ship the slot hooks (``insert_slots`` + ``gather_slots`` — the
+   scheduling core's continuous-batching contract, serving/core.py) and
+   ``none`` families must not.
 
 3. **Test matrix** (project check): each True flag appears in the matching
    list in ``tests/arch_matrix.py`` (``RAGGED_ARCHS`` / ``PAGED_ARCHS`` /
    ``SPEC_ARCHS``) — parsed as literals, no test import — and the matrix
-   holds no unknown ids or capability-less entries.
+   holds no unknown ids or capability-less entries. When any audited arch
+   has ``cache_kind="state"``, a ``SLOT_STATE_ARCHS`` list must cover the
+   slot-state continuous-batching families the same way.
 """
 
 from __future__ import annotations
@@ -32,12 +39,19 @@ from repro.analysis.engine import BaseChecker, Finding
 
 CAP_FLAGS = ("supports_lengths", "supports_paged", "supports_spec")
 
+# declaration surface: the bool flags plus the scheduling-core cache kind
+DECLARED = CAP_FLAGS + ("cache_kind",)
+
 # flag -> (matrix list name, [required Model attributes when True])
 CAPS = {
     "supports_lengths": ("RAGGED_ARCHS", []),
     "supports_paged": ("PAGED_ARCHS", ["init_paged_cache", "decode_paged"]),
     "supports_spec": ("SPEC_ARCHS", ["verify", "commit_verify"]),
 }
+
+CACHE_KINDS = ("kv", "state", "none")
+SLOT_HOOKS = ("insert_slots", "gather_slots")
+SLOT_STATE_LIST = "SLOT_STATE_ARCHS"
 
 DEFAULT_MATRIX = "tests/arch_matrix.py"
 REGISTRY_GLOB = "*models/registry.py"
@@ -65,9 +79,9 @@ def _matrix_lists(path: str) -> dict[str, tuple[int, list[str]]]:
 
 class RegistryCoverageChecker(BaseChecker):
     id = "registry-coverage"
-    description = ("every Model declares supports_lengths/paged/spec "
-                   "explicitly; True flags have callables and a test-matrix "
-                   "entry")
+    description = ("every Model declares supports_lengths/paged/spec and "
+                   "cache_kind explicitly; capabilities have callables, "
+                   "slot hooks, and a test-matrix entry")
 
     def __init__(self, archs=None, matrix_path: str = DEFAULT_MATRIX,
                  build=None, registry_glob: str = REGISTRY_GLOB):
@@ -89,7 +103,7 @@ class RegistryCoverageChecker(BaseChecker):
                     and node.func.id == "Model"):
                 continue
             given = {kw.arg for kw in node.keywords if kw.arg}
-            missing = [f for f in CAP_FLAGS if f not in given]
+            missing = [f for f in DECLARED if f not in given]
             if missing:
                 yield Finding(
                     self.id, path, node.lineno,
@@ -114,6 +128,7 @@ class RegistryCoverageChecker(BaseChecker):
         lists = _matrix_lists(mpath)
 
         caps: dict[str, dict[str, bool]] = {}
+        slot_state: dict[str, bool] = {}
         for arch in self._archs:
             model = self._build(arch)
             caps[arch] = {f: bool(getattr(model, f)) for f in CAP_FLAGS}
@@ -129,6 +144,27 @@ class RegistryCoverageChecker(BaseChecker):
                         self.id, REGISTRY_ANCHOR, 1,
                         f"{arch}: {flag}=False yet ships {have} — dead "
                         "capability; either set the flag or drop the hooks")
+            kind = getattr(model, "cache_kind", "none")
+            slot_state[arch] = kind == "state"
+            if kind not in CACHE_KINDS:
+                yield Finding(
+                    self.id, REGISTRY_ANCHOR, 1,
+                    f"{arch}: cache_kind={kind!r} is not one of "
+                    f"{'/'.join(CACHE_KINDS)}")
+                continue
+            hooks = [a for a in SLOT_HOOKS
+                     if getattr(model, a, None) is not None]
+            if kind in ("kv", "state") and len(hooks) != len(SLOT_HOOKS):
+                yield Finding(
+                    self.id, REGISTRY_ANCHOR, 1,
+                    f"{arch}: cache_kind={kind!r} but missing slot hooks "
+                    f"{sorted(set(SLOT_HOOKS) - set(hooks))} — the "
+                    "scheduling core cannot serve this family continuously")
+            elif kind == "none" and hooks:
+                yield Finding(
+                    self.id, REGISTRY_ANCHOR, 1,
+                    f"{arch}: cache_kind='none' yet ships {hooks} — dead "
+                    "capability; either declare the kind or drop the hooks")
 
         for flag, (list_name, _) in CAPS.items():
             if list_name not in lists:
@@ -154,3 +190,32 @@ class RegistryCoverageChecker(BaseChecker):
                         self.id, self.matrix_path, lineno,
                         f"{list_name} lists {aid} but its {flag} is False — "
                         "the matrix overstates coverage")
+
+        # slot-state continuous batching: only audited when a state family
+        # exists, so fixture registries without recurrent archs stay clean
+        if any(slot_state.values()):
+            if SLOT_STATE_LIST not in lists:
+                yield Finding(
+                    self.id, self.matrix_path, 1,
+                    f"matrix list {SLOT_STATE_LIST} missing (needed to "
+                    "cover cache_kind='state' slot-state serving)")
+            else:
+                lineno, ids = lists[SLOT_STATE_LIST]
+                for arch, is_state in slot_state.items():
+                    if is_state and arch not in ids:
+                        yield Finding(
+                            self.id, self.matrix_path, lineno,
+                            f"{arch} has cache_kind='state' but no "
+                            f"{SLOT_STATE_LIST} entry: the slot-state "
+                            "continuous path is untested")
+                for aid in ids:
+                    if aid not in slot_state:
+                        yield Finding(
+                            self.id, self.matrix_path, lineno,
+                            f"{SLOT_STATE_LIST} names unknown arch {aid!r}")
+                    elif not slot_state[aid]:
+                        yield Finding(
+                            self.id, self.matrix_path, lineno,
+                            f"{SLOT_STATE_LIST} lists {aid} but its "
+                            "cache_kind is not 'state' — the matrix "
+                            "overstates coverage")

@@ -190,11 +190,17 @@ def cache_spec(name: str, shape, *, mesh, batch: int) -> P:
     for KV caches, heads for RWKV/SSM states) -> model. The batch-1
     long-context case spreads the sequence over the FULL mesh instead —
     there is no batch to shard, and a 512k cache is the dominant tensor.
-    ``name`` is the leaf name: ``*_pages`` leaves are the paged block pool
-    (L, NB, BS, KV, hd) — kv heads -> model, and the BLOCK axis is NEVER
-    sharded (blocks migrate between requests through the block tables;
+    ``name`` is the leaf name or its full ``/``-joined pytree path (as
+    produced by :func:`cache_specs`). ``*_pages`` leaves are the paged block
+    pool (L, NB, BS, KV, hd) — kv heads -> model, and the BLOCK axis is
+    NEVER sharded (blocks migrate between requests through the block tables;
     splitting the pool would turn every table lookup into a cross-shard
-    gather and every block free/alloc into a resharding event)."""
+    gather and every block free/alloc into a resharding event). Leaves under
+    a ``mamba`` subtree are zamba's double-stacked SSM states
+    (groups, per_group, batch, ...): the batch is PINNED to axis 2 — the
+    value search below cannot tell per_group from batch when they collide,
+    which is exactly the slot-state serving case (per-slot rows gathered and
+    scattered on that axis must stay on their data shard)."""
     sizes = _sizes(mesh)
     ndim = len(shape)
     spec: list[Any] = [None] * ndim
@@ -202,10 +208,13 @@ def cache_spec(name: str, shape, *, mesh, batch: int) -> P:
         if ndim >= 2:
             spec[-2] = _fit(shape[-2], MODEL_AXIS, sizes)
         return P(*spec)
+    parents = name.split("/")[:-1]
     # Locate the batch dim. Every cache leaf leads with at least one stack
     # axis (layers or layer-groups), so the search starts at index 1 — a
     # leading L equal to the batch size must not be mistaken for the batch.
-    if ndim >= 3:
+    if "mamba" in parents and ndim >= 4:
+        b_idx = 2
+    elif ndim >= 3:
         search = range(1, max(2, ndim - 2))
         b_idx = next((i for i in search if shape[i] == batch), 1)
     else:
@@ -224,11 +233,12 @@ def cache_spec(name: str, shape, *, mesh, batch: int) -> P:
 
 
 def cache_specs(cache, mesh, batch: int):
-    """cache_spec over a cache pytree keyed by each leaf's name."""
+    """cache_spec over a cache pytree keyed by each leaf's full path, so
+    path-dependent layouts (zamba's ``mamba/*`` double-stacked states)
+    resolve their batch axis correctly."""
 
     def one(path, leaf):
-        nm = path_str(path).rsplit("/", 1)[-1]
-        return cache_spec(nm, leaf.shape, mesh=mesh, batch=batch)
+        return cache_spec(path_str(path), leaf.shape, mesh=mesh, batch=batch)
 
     return jax.tree_util.tree_map_with_path(one, cache)
 

@@ -44,8 +44,9 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4,
                     help="decode slots for --ragged continuous batching")
     ap.add_argument("--mode", default="auto",
-                    choices=["auto", "paged", "continuous", "bucketed"],
-                    help="--ragged scheduler (auto prefers paged)")
+                    help="--ragged scheduler: auto, paged, continuous, or "
+                         "bucketed (auto prefers paged; validated against "
+                         "the arch's capabilities, not a static list)")
     ap.add_argument("--block-size", type=int, default=8,
                     help="KV block size (tokens) for the paged scheduler")
     ap.add_argument("--spec-k", type=int, default=0,
@@ -99,7 +100,10 @@ def main(argv=None):
                 for i, n in enumerate(lengths)]
         from repro.serving.batching import resolve_mode
 
-        mode = resolve_mode(engine, args.mode)    # resolved for the report
+        try:
+            mode = resolve_mode(engine, args.mode)    # resolved for the report
+        except ValueError as e:
+            ap.error(str(e))    # lists the valid modes for this arch
         kw = dict(sampler=args.sampler, sampler_kw=sampler_kw,
                   slots=args.slots, mode=mode, block_size=args.block_size,
                   spec_k=spec_k, drafter=drafter)

@@ -78,6 +78,19 @@ class Model:
     commit_verify: Callable | None = None      # (cache, rows, pos, n_commit) -> cache
     verify_paged: Callable | None = None       # (params, toks, pool, table, pos) -> (logits, rows)
     commit_verify_paged: Callable | None = None  # (pool, rows, table, pos, n_commit) -> pool
+    # Cache-kind contract (serving/core.py): which CacheAdapter family can
+    # hold this model's per-request decode state.
+    #   "kv"    — contiguous KV/latent rows, batch on axis 1 of every leaf
+    #             (decoder_lm; the paged pool is an optional layout on top)
+    #   "state" — O(1)-ish per-slot recurrent state served by slot
+    #             gather/scatter (rwkv6, zamba2): continuous batching with
+    #             exact-length admission groups, no paging
+    #   "none"  — no slot-addressable cache: encdec's encoder output is
+    #             per-request state the slot schedulers don't carry
+    # "kv" and "state" families must ship both slot hooks; "none" neither.
+    cache_kind: str = "none"
+    insert_slots: Callable | None = None       # (cache, rows, slots) -> cache
+    gather_slots: Callable | None = None       # (cache, slots) -> per-slot rows
 
 
 def build(cfg: ModelConfig) -> Model:
@@ -127,6 +140,9 @@ def build(cfg: ModelConfig) -> Model:
                 (lambda cache, rows, table, pos, n:
                  _tf.lm_commit_verify_paged(cache, rows, table, pos, n))
                 if paged else None),
+            cache_kind="kv",
+            insert_slots=_tf.lm_insert_slots,
+            gather_slots=_tf.lm_gather_slots,
         )
 
     if cfg.model_type == "rwkv6":
@@ -138,10 +154,15 @@ def build(cfg: ModelConfig) -> Model:
             prefill=lambda p, batch, t: _rwkv.rwkv_prefill(p, batch["tokens"], cfg, t),
             decode=lambda p, tok, cache, pos: _rwkv.rwkv_decode(p, tok, cache, pos, cfg),
             # recurrent state: prefill cannot skip pad tokens, no paged
-            # layout, no uncommitted k-token verify — all deliberate
+            # layout, no uncommitted k-token verify — all deliberate. The
+            # slot-state hooks make continuous batching a state scatter
+            # instead (serving/core.py RecurrentAdapter).
             supports_lengths=False,
             supports_paged=False,
             supports_spec=False,
+            cache_kind="state",
+            insert_slots=_rwkv.rwkv_insert_slots,
+            gather_slots=_rwkv.rwkv_gather_slots,
         )
 
     if cfg.model_type == "zamba2":
@@ -155,10 +176,14 @@ def build(cfg: ModelConfig) -> Model:
             prefill=lambda p, batch, t: _zamba.zamba_prefill(p, batch["tokens"], cfg, t),
             decode=lambda p, tok, cache, pos: _zamba.zamba_decode(p, tok, cache, pos, cfg),
             # SSM backbone carries sequential scan state through prefill:
-            # same exclusions as rwkv6 (see Model docstring)
+            # same exclusions as rwkv6 (see Model docstring); the slot-state
+            # hooks cover both the SSM states and the shared-attention KV
             supports_lengths=False,
             supports_paged=False,
             supports_spec=False,
+            cache_kind="state",
+            insert_slots=_zamba.zamba_insert_slots,
+            gather_slots=_zamba.zamba_gather_slots,
         )
 
     if cfg.model_type == "encdec":
@@ -170,10 +195,11 @@ def build(cfg: ModelConfig) -> Model:
             prefill=lambda p, batch, t: _encdec.encdec_prefill(p, batch, cfg, t),
             decode=lambda p, tok, cache, pos: _encdec.encdec_decode(p, tok, cache, pos, cfg),
             # encoder output is per-request state the slot/paged schedulers
-            # don't carry; decoder cache stays contiguous
+            # don't carry; decoder cache stays contiguous and bucket-served
             supports_lengths=False,
             supports_paged=False,
             supports_spec=False,
+            cache_kind="none",
         )
 
     raise ValueError(f"unknown model_type: {cfg.model_type}")

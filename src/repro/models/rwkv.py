@@ -197,6 +197,21 @@ def rwkv_init_state(cfg: ModelConfig, batch: int, dtype):
     }
 
 
+def rwkv_insert_slots(state, rows, slots):
+    """Scatter per-request prefill ``rows`` into decode ``slots`` of a
+    batched recurrent state: every leaf is (layers, b, ...), so continuous
+    batching for rwkv6 is a single axis-1 state scatter — O(1) per slot, no
+    KV rows, no paging (serving/core.py RecurrentAdapter)."""
+    return jax.tree.map(
+        lambda big, small: big.at[:, slots].set(small), state, rows
+    )
+
+
+def rwkv_gather_slots(state, slots):
+    """Inverse of ``rwkv_insert_slots``: the per-slot state for ``slots``."""
+    return jax.tree.map(lambda big: big[:, slots], state)
+
+
 def rwkv_prefill(params, tokens, cfg: ModelConfig, cache_len: int):
     """Run the prompt, returning last-token logits + decode state.
     cache_len is unused (state is O(1)) but kept for interface parity."""

@@ -148,6 +148,23 @@ def lm_init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def lm_insert_slots(cache, rows, slots):
+    """Scatter per-request prefill cache ``rows`` into decode ``slots`` of a
+    batched contiguous cache. Every decoder_lm cache layout — base, MLA,
+    kvt, int8 quantized — keeps batch on axis 1 of each (layers, b, ...)
+    leaf, so one axis-1 scatter covers them all (the serving core's
+    slot-admission contract, serving/core.py)."""
+    return jax.tree.map(
+        lambda big, small: big.at[:, slots].set(small), cache, rows
+    )
+
+
+def lm_gather_slots(cache, slots):
+    """Inverse of ``lm_insert_slots``: the per-slot cache rows for ``slots``
+    (snapshot/preemption path)."""
+    return jax.tree.map(lambda big: big[:, slots], cache)
+
+
 def lm_init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int, dtype):
     """Block-pool KV cache: (L, NB, BS, KV, hd) leaves named ``*_pages`` so
     the sharding policy can keep the block axis whole (dist/sharding.py).

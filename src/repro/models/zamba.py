@@ -124,6 +124,35 @@ def zamba_init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
     return cache
 
 
+def _slot_axis(path) -> int:
+    """Batch axis of a zamba cache leaf by its pytree path: the mamba
+    conv/h states are stacked (groups, per, batch, ...) so batch sits on
+    axis 2; shared_k/shared_v ((groups, batch, ...) in both KV layouts) and
+    the tail states ((tail, batch, ...)) keep it on axis 1."""
+    return 2 if path[0].key == "mamba" else 1
+
+
+def zamba_insert_slots(cache, rows, slots):
+    """Scatter per-request prefill ``rows`` (SSM state + shared-attention
+    KV) into decode ``slots`` of a batched cache — the slot-state
+    continuous-batching contract (serving/core.py RecurrentAdapter). The
+    batch axis is path-dependent, hence the keyed tree map."""
+    def put(path, big, small):
+        idx = (slice(None),) * _slot_axis(path) + (slots,)
+        return big.at[idx].set(small)
+
+    return jax.tree_util.tree_map_with_path(put, cache, rows)
+
+
+def zamba_gather_slots(cache, slots):
+    """Inverse of ``zamba_insert_slots``: per-slot state rows for ``slots``."""
+    def take(path, big):
+        idx = (slice(None),) * _slot_axis(path) + (slots,)
+        return big[idx]
+
+    return jax.tree_util.tree_map_with_path(take, cache)
+
+
 def zamba_prefill(params, tokens, cfg: ModelConfig, cache_len: int):
     x = embedding_lookup(params["embed"], tokens, cfg.cdtype())
     sp = params["shared"]

@@ -1,42 +1,41 @@
-"""Variable-length request batching for the inference engine.
+"""Variable-length request batching: front-ends over the scheduling core.
 
-Real traffic is ragged. Three serving modes, all length-aware:
+Real traffic is ragged. The serving modes, all length-aware:
 
 - **bucketed** — requests are right-padded to power-of-two buckets and each
   bucket runs one prefill+decode. True lengths ride along in the batch
   (``batch["lengths"]``): prefill masks pad keys, the first token is sampled
   from each row's logits at ``lengths[i]-1``, and decode runs per-request
   position counters, so a padded row decodes exactly like its unpadded self.
+  Recurrent families group by exact length (no pads, always correct).
 - **continuous** (``SlotScheduler``) — a fixed-width decode batch of slots
-  over per-slot ``cache_len`` cache rows. Finished slots (EOS or budget
-  exhausted) are refilled from the queue by a single-request prefill written
-  into the slot's cache row, so the decode pipeline stays full across
-  mixed-length traffic instead of draining one bucket at a time. Decode runs
-  in jitted chunks of ``chunk`` steps between admission points
-  (continuous-batching-lite: a slot that finishes mid-chunk idles — token
-  and position FROZEN — until the chunk boundary).
-- **paged** (``PagedScheduler``, serving/paged.py) — the block-pool KV cache:
-  per-request block tables, on-demand allocation, block reclaim and queue
-  re-admission at ANY decode step. Token-identical greedy outputs to
-  continuous; resident KV scales with live tokens. ``serve_ragged`` prefers
-  it where the family supports it.
+  fed by the scheduling core (serving/core.py). decoder_lm families slot
+  into per-slot ``cache_len`` cache rows (``ContiguousAdapter``); recurrent
+  families (rwkv6, zamba2) slot their O(1) recurrent state in and out with
+  a gather/scatter (``RecurrentAdapter``) — continuous batching is no
+  longer a decoder_lm-only fast path. Decode runs in jitted chunks of
+  ``chunk`` steps between admission points (a slot that finishes mid-chunk
+  idles — token and position FROZEN — until the chunk boundary).
+- **paged** (``PagedScheduler``, serving/paged.py) — the block-pool KV cache
+  behind the same core loop: per-request block tables, on-demand allocation,
+  block reclaim and queue re-admission at ANY decode step. Token-identical
+  greedy outputs to continuous; resident KV scales with live tokens.
+  ``serve_ragged`` prefers it where the family supports it.
 
-Families whose prefill carries sequential state through every token (rwkv6,
-zamba2's SSM backbone, enc-dec) cannot mask pads out of a recurrence; for
-them the bucketed mode groups by exact length (no pads, always correct) and
-the continuous/paged modes are unavailable.
+The admission/refill/finish/finalize loop itself lives in serving/core.py
+(``SchedulerCore``), parameterized by a ``CacheAdapter``; the schedulers
+here are thin fronts that pick the adapter and expose the historical API.
 
-Both schedulers also run **speculatively** (``spec_k``, serving/spec.py):
-each decode round drafts ``spec_k - 1`` candidates per slot from its token
-history and verifies the chunk in one forward pass — 1..spec_k tokens per
-weight stream, token-identical greedy outputs (DESIGN.md §10).
+Both slot schedulers also run **speculatively** (``spec_k``,
+serving/spec.py): each decode round drafts ``spec_k - 1`` candidates per
+slot from its token history and verifies the chunk in one forward pass —
+1..spec_k tokens per weight stream, token-identical greedy outputs
+(DESIGN.md §10).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from collections import defaultdict, deque
-from functools import partial
+from collections import defaultdict
 from typing import Sequence
 
 import jax
@@ -44,59 +43,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import flags
-from repro.serving.sampling import make_sampler, sampler_sig
+from repro.serving.core import (
+    ContiguousAdapter,
+    RecurrentAdapter,
+    Request,
+    Response,
+    SchedulerCore,
+    bucket_length,
+    finalize_tokens,
+    make_response,
+    pad_bucket,
+)
+from repro.serving.sampling import sampler_sig
 
-
-@dataclasses.dataclass
-class Request:
-    id: int
-    tokens: list[int]
-    # per-request decode budget; None falls back to the serve call's
-    # max_new_tokens. Mixed budgets are where continuous batching pays off:
-    # bucketed decode drags every row to its bucket's longest budget, the
-    # slot scheduler frees and refills each slot at its own.
-    max_new: int | None = None
-
-
-@dataclasses.dataclass
-class Response:
-    id: int
-    tokens: np.ndarray
-    # true generated length: tokens[:length] are real, the rest is padding
-    # (EOS, or 0 when the engine has no eos_id — indistinguishable from a
-    # real vocab-0 token, which is exactly why the length rides along).
-    length: int | None = None
-
-
-def finalize_tokens(toks: list[int], budget: int, eos: int | None):
-    """Trim at EOS, pad to ``budget``; returns (tokens (budget,), true length).
-
-    ``length`` counts the real generated tokens (including the EOS itself);
-    callers must not infer it from the pad value — with ``eos None`` the pad
-    token 0 is a legal vocab id."""
-    t = toks[:budget]
-    if eos is not None and eos in t:
-        t = t[: t.index(eos) + 1]
-    length = len(t)
-    t = t + [eos if eos is not None else 0] * (budget - length)
-    return np.asarray(t, np.int32), length
-
-
-def bucket_length(n: int, *, minimum: int = 8) -> int:
-    b = minimum
-    while b < n:
-        b *= 2
-    return b
-
-
-def pad_bucket(reqs: Sequence[Request], length: int, pad_id: int = 0):
-    """Right-pad to ``length``; returns (tokens (b, length), true lengths)."""
-    toks = np.full((len(reqs), length), pad_id, np.int32)
-    lens = np.zeros((len(reqs),), np.int32)
-    for i, r in enumerate(reqs):
-        toks[i, : len(r.tokens)] = r.tokens
-        lens[i] = len(r.tokens)
-    return toks, lens
+__all__ = [
+    "Request",
+    "Response",
+    "SlotScheduler",
+    "bucket_length",
+    "finalize_tokens",
+    "make_response",
+    "pad_bucket",
+    "resolve_mode",
+    "serve_bucketed",
+    "serve_continuous",
+    "serve_ragged",
+    "valid_modes",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -138,9 +111,8 @@ def serve_bucketed(engine, requests: Sequence[Request], max_new_tokens: int,
         )
         gen = np.asarray(res.tokens)
         for i, r in enumerate(reqs):
-            toks_r, n_true = finalize_tokens(
-                [int(t) for t in gen[i, : budgets[i]]], budgets[i], eos)
-            out[r.id] = Response(id=r.id, tokens=toks_r, length=n_true)
+            out[r.id] = make_response(
+                r, [int(t) for t in gen[i, : budgets[i]]], budgets[i], eos)
     return [out[r.id] for r in requests]
 
 
@@ -149,9 +121,12 @@ def serve_bucketed(engine, requests: Sequence[Request], max_new_tokens: int,
 # ---------------------------------------------------------------------------
 
 class SlotScheduler:
-    """Slot-based continuous batching over one engine.
+    """Slot-based continuous batching over one engine: the scheduling-core
+    loop behind a ``ContiguousAdapter`` (decoder_lm families: per-slot
+    ``cache_len`` cache rows) or a ``RecurrentAdapter`` (cache_kind="state"
+    families: O(1) per-slot recurrent state, exact-length admission groups).
 
-    Holds the jitted decode-chunk and per-bucket prefill programs, so a
+    Holds the jitted decode-chunk and per-group prefill programs, so a
     long-lived scheduler serves successive traces with no recompilation.
     Responses always contain exactly ``max_new_tokens`` tokens; sequences
     that hit EOS early are padded with EOS (parity with the bucketed mode).
@@ -160,229 +135,33 @@ class SlotScheduler:
     def __init__(self, engine, *, slots: int = 4, chunk: int = 4,
                  sampler: str = "greedy", sampler_kw=None,
                  spec_k: int | None = None, drafter=None):
-        if not engine.model.supports_lengths:
+        if engine.model.cache_kind == "state":
+            adapter = RecurrentAdapter(engine)
+        elif engine.model.supports_lengths:
+            adapter = ContiguousAdapter(engine)
+        else:
             raise ValueError(
-                f"{engine.cfg.arch_id}: continuous batching needs length-aware "
-                "prefill and per-request decode positions (decoder_lm families)"
+                f"{engine.cfg.arch_id}: continuous batching needs "
+                "length-aware prefill (decoder_lm families) or O(1) per-slot "
+                "recurrent state (cache_kind='state' families)"
             )
-        if spec_k is not None:
-            if spec_k < 2:
-                raise ValueError(f"spec_k must be >= 2, got {spec_k}")
-            if not engine.model.supports_spec:
-                raise ValueError(
-                    f"{engine.cfg.arch_id}: model family has no speculative "
-                    "verify path (GQA decoder_lm families only)"
-                )
         self.engine = engine
+        self.adapter = adapter
+        self._core = SchedulerCore(engine, adapter, slots=slots, chunk=chunk,
+                                   sampler=sampler, sampler_kw=sampler_kw,
+                                   spec_k=spec_k, drafter=drafter)
         self.slots = slots
         self.chunk = chunk
         self.spec_k = spec_k
-        self._sampler = make_sampler(sampler, **dict(sampler_kw or {}))
-        self._prefill_jit: dict[int, callable] = {}
         self.last_positions = None     # final per-slot positions (debug)
         self.last_spec_stats = None    # per-serve speculative accounting
-        if spec_k is not None:
-            from repro.serving.spec import NgramDrafter, build_verify_step
-
-            self._drafter = drafter if drafter is not None else NgramDrafter()
-            # verify -> accept -> commit-accepted-prefix in one jitted
-            # program; per-slot budgets and the live mask clamp the commit
-            self._verify_step = build_verify_step(
-                engine.model, sampler=sampler, sampler_kw=sampler_kw,
-                paged=False)
-
-        model, sample = engine.model, self._sampler
-
-        # the cache is donated: the scheduler always rebinds it to the
-        # result, and without donation XLA keeps both buffers live across
-        # every chunk — a full extra cache of device memory
-        @partial(jax.jit, donate_argnums=(2,))
-        def decode_chunk(params, tok, cache, pos, live, keys):
-            # ``live`` (b,) freezes finished/empty slots: their token and
-            # position stop advancing, so a slot idling to the chunk
-            # boundary keeps committing the SAME in-bounds cache slot of its
-            # own (dead) row instead of drifting past cache_len, where the
-            # commit would clamp/drop against the cache edge.
-            def step(carry, k):
-                tok, cache, pos = carry
-                logits, cache = model.decode(params, tok, cache, pos)
-                nxt = sample(logits, k)
-                nxt = jnp.where(live, nxt, tok)
-                pos = jnp.where(live, pos + 1, pos)
-                return (nxt, cache, pos), nxt
-
-            (tok, cache, pos), toks = jax.lax.scan(step, (tok, cache, pos), keys)
-            return toks, cache, pos
-
-        @partial(jax.jit, donate_argnums=(0,))
-        def insert(cache, rows, slots):
-            # every decoder_lm cache layout keeps batch on axis 1 of each
-            # (layers, b, ...) leaf; the prefill rows replace whole slots
-            return jax.tree.map(
-                lambda big, small: big.at[:, slots].set(small), cache, rows
-            )
-
-        self._decode_chunk = decode_chunk
-        self._insert = insert
-
-    def _prefill_fn(self, length: int):
-        """Jitted batched prefill+sample, cached per padded bucket length
-        (retraces per admission-group size via jit's shape cache)."""
-        if length not in self._prefill_jit:
-            model, cache_len, sample = self.engine.model, self.engine.cache_len, self._sampler
-
-            @jax.jit
-            def prefill_group(params, toks, lens, key):
-                logits, cache = model.prefill(
-                    params, {"tokens": toks, "lengths": lens}, cache_len
-                )
-                return sample(logits, key), cache
-
-            self._prefill_jit[length] = prefill_group
-        return self._prefill_jit[length]
 
     def serve(self, requests: Sequence[Request], max_new_tokens: int,
               *, key=None) -> list[Response]:
-        engine, B, chunk = self.engine, self.slots, self.chunk
-        eos = engine.eos_id
-
-        def budget(r: Request) -> int:
-            return r.max_new if r.max_new is not None else max_new_tokens
-
-        # a verify chunk touches score columns up to pos + spec_k - 1, so
-        # speculative serving needs spec_k slots of slack past the vanilla
-        # requirement (frozen slots included: their chunks still index)
-        slack = self.spec_k or 0
-        for r in requests:
-            need = max(bucket_length(len(r.tokens)),
-                       len(r.tokens) + budget(r) + slack)
-            if need > engine.cache_len:
-                raise ValueError(
-                    f"request {r.id}: len={len(r.tokens)} + "
-                    f"max_new={budget(r)}"
-                    + (f" + spec_k={slack}" if slack else "")
-                    + f" needs {need} cache slots "
-                    f"but cache_len={engine.cache_len}"
-                )
-
-        cache = engine.model.init_cache(B, engine.cache_len, engine.cfg.cdtype())
-        pending = deque(requests)
-        slot_req: list[Request | None] = [None] * B
-        slot_toks: list[list[int]] = [[] for _ in range(B)]
-        tok = np.zeros((B,), np.int32)
-        pos = np.zeros((B,), np.int32)
-        out: dict[int, Response] = {}
-        key = key if key is not None else jax.random.PRNGKey(0)
-        self.last_spec_stats = (
-            {"verify_steps": 0, "generated": 0, "drafted": 0, "accepted": 0}
-            if self.spec_k is not None else None)
-
-        def finish(s: int):
-            r = slot_req[s]
-            toks_r, length = finalize_tokens(slot_toks[s], budget(r), eos)
-            out[r.id] = Response(id=r.id, tokens=toks_r, length=length)
-            slot_req[s] = None
-            slot_toks[s] = []
-
-        while pending or any(r is not None for r in slot_req):
-            # refill free slots: one batched prefill per bucket length, one
-            # scatter-insert per group (keeps host round-trips off the
-            # per-request path)
-            free = [s for s in range(B) if slot_req[s] is None]
-            admitted: dict[int, list[Request]] = defaultdict(list)
-            take = [pending.popleft() for _ in range(min(len(free), len(pending)))]
-            for r in take:
-                admitted[bucket_length(len(r.tokens))].append(r)
-            staged: list[tuple[list[int], list[Request], jax.Array]] = []
-            for length, group in admitted.items():
-                slots_g, free = free[: len(group)], free[len(group):]
-                toks_np, lens_np = pad_bucket(group, length)
-                key, kp = jax.random.split(key)
-                t0_d, rows = self._prefill_fn(length)(
-                    engine.params, jnp.asarray(toks_np), jnp.asarray(lens_np), kp
-                )
-                cache = self._insert(cache, rows, jnp.asarray(slots_g, jnp.int32))
-                staged.append((slots_g, group, t0_d))
-            if staged:
-                # ONE host round-trip for the whole admission wave, not one
-                # per bucket (host-sync chunk budget: admission + chunk)
-                first_toks = jax.device_get([t for _, _, t in staged])
-                for (slots_g, group, _), t0 in zip(staged, first_toks):
-                    for s, r, t in zip(slots_g, group, t0):
-                        slot_req[s], slot_toks[s] = r, [int(t)]
-                        tok[s], pos[s] = int(t), len(r.tokens)
-                        if self.last_spec_stats is not None:
-                            # the prefill-sampled token is delivered work too
-                            # — keeps 'generated' comparable with engine
-                            # spec_stats
-                            self.last_spec_stats["generated"] += 1
-                        if budget(r) <= 1 or (eos is not None and int(t) == eos):
-                            finish(s)
-
-            if not any(r is not None for r in slot_req):
-                if pending:
-                    continue
-                break
-
-            live = np.asarray([slot_req[s] is not None for s in range(B)])
-            assert not live.any() or int(pos[live].max()) < engine.cache_len, (
-                f"live slot position escaped the cache: {pos[live]} "
-                f">= cache_len={engine.cache_len}")
-            key, kc = jax.random.split(key)
-            if self.spec_k is not None:
-                # speculative step: draft on the host (per-slot token
-                # history), verify the chunk in one forward pass, keep the
-                # accepted prefix — 1..spec_k tokens per weight stream
-                from repro.serving.spec import draft_chunk, take_accepted
-
-                K = self.spec_k
-                remaining = np.asarray(
-                    [budget(slot_req[s]) - len(slot_toks[s])
-                     if slot_req[s] is not None else 0 for s in range(B)],
-                    np.int32)
-                chunk_np = draft_chunk(
-                    self._drafter, tok, live,
-                    lambda s: slot_req[s].tokens + slot_toks[s], K)
-                out_d, n_out_d, cache, pos_d, _ = self._verify_step(
-                    engine.params, jnp.asarray(chunk_np), cache,
-                    jnp.asarray(pos), jnp.asarray(live),
-                    jnp.asarray(remaining), kc,
-                )
-                out_np, n_out, pos = jax.device_get((out_d, n_out_d, pos_d))
-                pos = pos.copy()
-                st = self.last_spec_stats
-                st["verify_steps"] += 1
-                for s in np.flatnonzero(live):
-                    slot_toks[s].extend(take_accepted(
-                        out_np[s], n_out[s], remaining[s], eos, st, K))
-                    tok[s] = slot_toks[s][-1]
-                    n = budget(slot_req[s])
-                    if len(slot_toks[s]) >= n or (
-                            eos is not None and eos in slot_toks[s][:n]):
-                        finish(s)
-                continue
-            toks_d, cache, pos_d = self._decode_chunk(
-                engine.params, jnp.asarray(tok), cache, jnp.asarray(pos),
-                jnp.asarray(live), jax.random.split(kc, chunk),
-            )
-            # ONE host sync per chunk: separate np.asarray() calls on the
-            # chunk outputs each forced their own device round-trip
-            toks_np, pos = jax.device_get((toks_d, pos_d))   # (chunk, B), (B,)
-            tok = toks_np[-1].copy()
-            pos = pos.copy()
-            for s in range(B):
-                if slot_req[s] is None:
-                    continue
-                n = budget(slot_req[s])
-                slot_toks[s].extend(int(t) for t in toks_np[:, s])
-                done = len(slot_toks[s]) >= n
-                if eos is not None and eos in slot_toks[s][:n]:
-                    done = True
-                if done:
-                    finish(s)
-
-        self.last_positions = pos.copy()
-        return [out[r.id] for r in requests]
+        out = self._core.serve(requests, max_new_tokens, key=key)
+        self.last_positions = self._core.last_positions
+        self.last_spec_stats = self._core.last_spec_stats
+        return out
 
 
 def serve_continuous(engine, requests: Sequence[Request], max_new_tokens: int,
@@ -402,21 +181,51 @@ def serve_continuous(engine, requests: Sequence[Request], max_new_tokens: int,
     return cache[sig].serve(requests, max_new_tokens, key=key)
 
 
+def valid_modes(model) -> list[str]:
+    """Serving modes the family can run, preferred first. ``continuous``
+    covers both the length-aware decoder_lm slot path and the recurrent
+    slot-state path (cache_kind="state"); ``bucketed`` always works."""
+    modes = []
+    if model.supports_paged:
+        modes.append("paged")
+    if model.supports_lengths or model.cache_kind == "state":
+        modes.append("continuous")
+    modes.append("bucketed")
+    return modes
+
+
 def resolve_mode(engine, mode: str) -> str:
-    """Capability dispatch for ``mode="auto"``: paged where the family has a
-    block-pool cache, else continuous where lengths are supported, else
-    bucketed. The single source of truth for every front-end (serve_ragged,
-    the serve CLI)."""
+    """Capability dispatch, the single source of truth for every front-end
+    (serve_ragged, the serve CLI).
+
+    ``mode="auto"`` resolves to the family's preferred mode: paged where it
+    has a block-pool cache (and the KV-layout flags allow it — the paged
+    pool keeps the base float layout), else continuous — decoder_lm slots
+    OR the recurrent slot-state path — else bucketed. Recurrent families
+    (rwkv6, zamba2) therefore land on continuous, not bucket-serial.
+
+    An explicit mode is validated against the family's surface; the error
+    lists the modes valid for the arch (the serve CLI surfaces this as the
+    ``--mode`` error message)."""
+    ok = valid_modes(engine.model)
     if mode != "auto":
+        if mode not in ("paged", "continuous", "bucketed"):
+            raise ValueError(
+                f"unknown serving mode {mode!r}; valid modes for "
+                f"{engine.cfg.arch_id}: {', '.join(ok)} (or 'auto')")
+        if mode not in ok:
+            raise ValueError(
+                f"{engine.cfg.arch_id} does not support mode={mode!r}; "
+                f"valid modes: {', '.join(ok)} (or 'auto')")
         return mode
     # the paged pool keeps the base float KV layout; under the kvt/int8
     # cache flags auto must keep resolving to the contiguous scheduler,
     # whose decode paths support those layouts
-    if (engine.model.supports_paged
+    if ("paged" in ok
             and not flags.get("kvt_cache_layout")
             and not flags.get("int8_kv_cache")):
         return "paged"
-    return "continuous" if engine.model.supports_lengths else "bucketed"
+    return "continuous" if "continuous" in ok else "bucketed"
 
 
 def serve_ragged(engine, requests: Sequence[Request], max_new_tokens: int,
@@ -427,8 +236,9 @@ def serve_ragged(engine, requests: Sequence[Request], max_new_tokens: int,
     """Serve a ragged request set; responses come back in arrival order.
 
     mode="paged" runs the block-pool scheduler (serving/paged.py: admission
-    and block reclaim at any decode step), mode="continuous" the contiguous
-    slot scheduler, mode="bucketed" the per-bucket generate loop;
+    and block reclaim at any decode step), mode="continuous" the slot
+    scheduler (contiguous cache rows for decoder_lm, slot-state for the
+    recurrent families), mode="bucketed" the per-bucket generate loop;
     mode="auto" prefers paged, then continuous, by family capability.
 
     ``spec_k`` >= 2 turns the paged/continuous schedulers speculative: each
@@ -457,7 +267,5 @@ def serve_ragged(engine, requests: Sequence[Request], max_new_tokens: int,
                                 sampler=sampler, sampler_kw=sampler_kw,
                                 key=key, slots=slots, chunk=chunk,
                                 spec_k=spec_k, drafter=drafter)
-    if mode == "bucketed":
-        return serve_bucketed(engine, requests, max_new_tokens,
-                              sampler=sampler, sampler_kw=sampler_kw, key=key)
-    raise ValueError(f"unknown serving mode {mode!r}")
+    return serve_bucketed(engine, requests, max_new_tokens,
+                          sampler=sampler, sampler_kw=sampler_kw, key=key)

@@ -76,6 +76,27 @@ class InferenceEngine:
         self.params = params
         self.quantized_fraction = quantized_fraction(params)
         self._generate_jit: dict[tuple, Callable] = {}
+        self._unbounded_state: bool | None = None
+
+    @property
+    def unbounded_state(self) -> bool:
+        """True for cache_kind="state" families whose decode state is O(1)
+        in ``cache_len`` (rwkv6): no cache leaf's shape depends on the cache
+        length, so there is no capacity to overflow and the generate/serve
+        length validation is skipped. Probed abstractly (eval_shape — no
+        allocation) and cached; zamba2's shared-attention KV rows DO scale
+        with cache_len, so it stays bounded."""
+        if self._unbounded_state is None:
+            if self.model.cache_kind != "state":
+                self._unbounded_state = False
+            else:
+                dt = self.cfg.cdtype()
+                a = jax.eval_shape(lambda: self.model.init_cache(1, 8, dt))
+                b = jax.eval_shape(lambda: self.model.init_cache(1, 16, dt))
+                self._unbounded_state = all(
+                    x.shape == y.shape
+                    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+        return self._unbounded_state
 
     # -- one-step APIs (used by benchmarks and the dry-run) -----------------
     def prefill(self, batch):
@@ -187,7 +208,9 @@ class InferenceEngine:
         # so the speculative path needs spec_k slots of slack past the
         # vanilla requirement
         need = max(prompt_len, start_max + max_new_tokens + (spec_k or 0))
-        if need > self.cache_len:
+        # unbounded-state families (rwkv6: O(1) recurrent state, no cache
+        # axis) have nothing to overflow — any budget is servable
+        if need > self.cache_len and not self.unbounded_state:
             raise ValueError(
                 f"KV cache overflow: prompt_len={prompt_len} (max start "
                 f"{start_max}) + max_new_tokens={max_new_tokens}"

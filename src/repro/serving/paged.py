@@ -1,8 +1,8 @@
-"""Paged KV-cache serving: block-pool allocator + paged continuous batching.
+"""Paged KV-cache serving: block-pool allocator + the paged cache adapter.
 
-The contiguous ``SlotScheduler`` (serving/batching.py) reserves a full
-``slots x cache_len`` KV region up front and lets finished slots idle until
-the next chunk boundary — the capacity/utilization gap LlamaF's weight
+The contiguous slot path (serving/core.py ``ContiguousAdapter``) reserves a
+full ``slots x cache_len`` KV region up front and lets finished slots idle
+until the next chunk boundary — the capacity/utilization gap LlamaF's weight
 streaming attacks on the FPGA, replayed on the serving side. Here the cache
 is a POOL of fixed-size KV blocks:
 
@@ -13,25 +13,27 @@ is a POOL of fixed-size KV blocks:
   data. Blocks are recycled WITHOUT zeroing — the paged attention path
   overwrites the current column's score/value explicitly and masks
   everything beyond ``pos``, so stale block contents are unreachable.
-- ``PagedScheduler`` — continuous batching over the pool. Requests admit
-  into fixed decode slots (one batched prefill per bucket, scattered into
-  their blocks), blocks are allocated ON DEMAND as positions advance (a
-  chunk's worth ahead), and the jitted decode loop is a ``while_loop`` that
-  EXITS the moment any live slot finishes — blocks are freed and the queue
+- ``PagedAdapter`` — the block pool behind the scheduling core's one
+  admission/refill/finish loop (serving/core.py). Requests admit into fixed
+  decode slots (one batched prefill per bucket, scattered into their
+  blocks), blocks are allocated ON DEMAND as positions advance (a round's
+  worth ahead), and the jitted decode loop is a ``while_loop`` that EXITS
+  the moment any live slot finishes — blocks are freed and the queue
   re-admitted at that exact step, not at the next chunk boundary. Resident
   KV memory therefore scales with live tokens (+ block slack), not with
   ``slots x cache_len`` (``benchmarks/run.py paged``).
+- ``PagedScheduler`` — the historical front: picks the adapter, exposes
+  pool sizing and the residency high-water mark.
 
-Admission is reservation-gated: a request is admitted only when the pool can
-cover every live request's worst-case remaining need plus its own, so
-allocation for live slots never fails and no preemption path is needed
-(DESIGN.md §9 allocator invariants).
+Admission is reservation-gated (``can_admit``): a request is admitted only
+when the pool can cover every live request's worst-case remaining need plus
+its own, so allocation for live slots never fails and no preemption path is
+needed (DESIGN.md §9 allocator invariants).
 """
 
 from __future__ import annotations
 
 import math
-from collections import defaultdict, deque
 from functools import partial
 from typing import Sequence
 
@@ -40,14 +42,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import flags
-from repro.serving.batching import (
+from repro.serving.core import (
+    CacheAdapter,
     Request,
     Response,
+    SchedulerCore,
     bucket_length,
-    finalize_tokens,
-    pad_bucket,
 )
-from repro.serving.sampling import make_sampler, sampler_sig
+from repro.serving.sampling import sampler_sig
+
+__all__ = ["BlockPool", "PagedAdapter", "PagedScheduler", "serve_paged"]
 
 
 class BlockPool:
@@ -95,59 +99,56 @@ class BlockPool:
             self._free_set.add(b)
 
 
-class PagedScheduler:
-    """Paged continuous batching over one engine (see module docstring).
+class PagedAdapter(CacheAdapter):
+    """Block-pool cache behind the scheduling core: per-slot block tables
+    over a ``BlockPool``, reservation-gated admission, on-demand block
+    growth before each round, blocks reclaimed the step a slot finishes."""
 
-    Produces token-identical greedy outputs to the contiguous
-    ``SlotScheduler`` / ``serve_ragged(mode="continuous")`` on any trace —
-    the paged attention path is parity-tested bit-exact against the
-    contiguous deferred decode (tests/test_paged.py).
-    """
+    kind = "paged"
+    spec_capable = True
 
-    def __init__(self, engine, *, slots: int = 4, chunk: int = 4,
-                 block_size: int = 8, num_blocks: int | None = None,
-                 max_len: int | None = None, sampler: str = "greedy",
-                 sampler_kw=None, spec_k: int | None = None, drafter=None):
+    def __init__(self, engine, *, block_size: int = 8,
+                 num_blocks: int | None = None, max_len: int | None = None):
         if not engine.model.supports_paged:
             raise ValueError(
                 f"{engine.cfg.arch_id}: paged serving needs a block-pool cache "
-                "(GQA decoder_lm families; MLA/recurrent keep the contiguous path)"
+                "(GQA decoder_lm families; MLA/recurrent keep the contiguous "
+                "and slot-state paths)"
             )
-        if spec_k is not None and spec_k < 2:
-            raise ValueError(f"spec_k must be >= 2, got {spec_k}")
         self.engine = engine
-        self.slots = slots
-        self.chunk = chunk
-        self.spec_k = spec_k
         self.block_size = block_size
         self.max_len = max_len if max_len is not None else engine.cache_len
         self.blocks_per_req = math.ceil(self.max_len / block_size)
+        self._num_blocks_arg = num_blocks
+        self.num_blocks: int | None = None   # resolved at bind (needs slots)
+        self.pool: BlockPool | None = None   # per-serve allocator
+
+    def bind(self, core, *, sampler, sampler_kw):
+        engine = self.engine
+        self.core = core
         # default pool matches the contiguous footprint (worst case for every
         # slot); benchmarks/tests hand in smaller pools to exercise
         # backpressure — correctness never depends on pool size
-        self.num_blocks = (num_blocks if num_blocks is not None
-                           else slots * self.blocks_per_req + 1)
-        self._sampler = make_sampler(sampler, **dict(sampler_kw or {}))
-        self._prefill_jit = None
-        self.last_peak_blocks = 0          # residency high-water of last serve
-        self.last_positions: np.ndarray | None = None   # debug/introspection
-        self.last_spec_stats = None        # per-serve speculative accounting
+        self.num_blocks = (self._num_blocks_arg
+                           if self._num_blocks_arg is not None
+                           else core.slots * self.blocks_per_req + 1)
         # block lookahead per decode round: a verify chunk commits up to
         # spec_k rows per slot in one step
-        self._ahead = chunk if spec_k is None else max(chunk, spec_k)
-        if spec_k is not None:
-            from repro.serving.spec import NgramDrafter, build_verify_step
+        self._ahead = (core.chunk if core.spec_k is None
+                       else max(core.chunk, core.spec_k))
+        self._prefill_jit = None
+        if core.spec_k is not None:
+            from repro.serving.spec import build_verify_step
 
-            self._drafter = drafter if drafter is not None else NgramDrafter()
             self._verify_step = build_verify_step(
                 engine.model, sampler=sampler, sampler_kw=sampler_kw,
                 paged=True)
 
-        model, sample, eos = engine.model, self._sampler, engine.eos_id
-        mb = self.blocks_per_req
+        model, sample, eos = engine.model, core._sampler, engine.eos_id
+        block_size = self.block_size
 
-        # pool buffers are donated: the serve loop always rebinds the cache
-        # to each call's result, and an undonated pool would transiently
+        # pool buffers are donated: the core always rebinds the cache to
+        # each round's result, and an undonated pool would transiently
         # double the very footprint this subsystem exists to shrink
         @partial(jax.jit, donate_argnums=(2,))
         def decode_until(params, tok, cache, table, pos, live, remaining, keys):
@@ -191,25 +192,8 @@ class PagedScheduler:
 
         self._decode_until = decode_until
         self._insert = insert
-        self._mb = mb
 
-    # -- helpers ------------------------------------------------------------
-
-    def _prefill_fn(self):
-        if self._prefill_jit is None:
-            model, sample = self.engine.model, self._sampler
-
-            @jax.jit
-            def prefill_group(params, toks, lens, key):
-                # pad target == the padded prompt length: the paged pool is
-                # the only persistent cache, so no cache_len-wide row exists
-                logits, cache = model.prefill(
-                    params, {"tokens": toks, "lengths": lens}, toks.shape[1]
-                )
-                return sample(logits, key), cache
-
-            self._prefill_jit = prefill_group
-        return self._prefill_jit
+    # -- sizing helpers -----------------------------------------------------
 
     def _prompt_pad(self, n: int) -> int:
         """Padded prefill length: the power-of-two bucket, rounded up to a
@@ -223,22 +207,31 @@ class PagedScheduler:
         last = len(r.tokens) + max(budget - 1, 0)
         return math.ceil(max(last, 1) / self.block_size)
 
-    # -- serving ------------------------------------------------------------
+    def _reserved_backlog(self) -> int:
+        """Blocks the live slots may still demand beyond what they hold."""
+        return sum(self._slot_need[s] - len(self._slot_blocks[s])
+                   for s in range(len(self._slot_need)) if self._slot_live[s])
 
-    def serve(self, requests: Sequence[Request], max_new_tokens: int,
-              *, key=None) -> list[Response]:
+    def _ensure_blocks(self, s: int, p: int) -> None:
+        """Grow slot ``s`` to cover the next round of decode commits
+        (``chunk`` single-token steps, or one spec_k-row verify chunk) —
+        reservation-gated admission guarantees this never fails."""
+        bs = self.block_size
+        target = min(math.ceil((p + self._ahead) / bs), self._slot_need[s])
+        delta = target - len(self._slot_blocks[s])
+        if delta > 0:
+            new = self.pool.alloc(delta)
+            start = len(self._slot_blocks[s])
+            self._slot_blocks[s].extend(new)
+            self.table[s, start:start + len(new)] = new
+
+    # -- CacheAdapter surface ------------------------------------------------
+
+    def validate(self, requests, budget, slack):
         if flags.get("kvt_cache_layout") or flags.get("int8_kv_cache"):
             raise ValueError("paged serving supports the base float KV layout "
                              "(kvt_cache_layout / int8_kv_cache flags off)")
-        engine, B, bs, mb = self.engine, self.slots, self.block_size, self._mb
-        eos = engine.eos_id
-
-        def budget(r: Request) -> int:
-            return r.max_new if r.max_new is not None else max_new_tokens
-
-        # verify chunks index score columns up to pos + spec_k - 1, so the
-        # speculative mode needs spec_k columns of table slack
-        slack = self.spec_k or 0
+        mb, bs = self.blocks_per_req, self.block_size
         for r in requests:
             need = max(self._prompt_pad(len(r.tokens)),
                        len(r.tokens) + budget(r) + slack)
@@ -255,174 +248,135 @@ class PagedScheduler:
                     f"blocks but the pool has {self.num_blocks - 1}"
                 )
 
-        pool = BlockPool(self.num_blocks, bs)
-        cache = engine.model.init_paged_cache(self.num_blocks, bs,
-                                              engine.cfg.cdtype())
-        pending = deque(requests)
-        slot_req: list[Request | None] = [None] * B
-        slot_toks: list[list[int]] = [[] for _ in range(B)]
-        slot_blocks: list[list[int]] = [[] for _ in range(B)]
-        slot_need = [0] * B                    # worst-case total blocks
-        table = np.zeros((B, mb), np.int32)    # 0 = sink
-        tok = np.zeros((B,), np.int32)
-        pos = np.zeros((B,), np.int32)
-        live = np.zeros((B,), bool)
-        remaining = np.zeros((B,), np.int32)
-        out: dict[int, Response] = {}
-        key = key if key is not None else jax.random.PRNGKey(0)
-        self.last_spec_stats = (
-            {"verify_steps": 0, "generated": 0, "drafted": 0, "accepted": 0}
-            if self.spec_k is not None else None)
+    def begin_serve(self):
+        B, bs = self.core.slots, self.block_size
+        self.pool = BlockPool(self.num_blocks, bs)
+        self.table = np.zeros((B, self.blocks_per_req), np.int32)  # 0 = sink
+        self._slot_blocks: list[list[int]] = [[] for _ in range(B)]
+        self._slot_need = [0] * B              # worst-case total blocks
+        self._slot_live = np.zeros((B,), bool)
+        return self.engine.model.init_paged_cache(
+            self.num_blocks, bs, self.engine.cfg.cdtype())
 
-        def reserved_backlog() -> int:
-            """Blocks the live slots may still demand beyond what they hold."""
-            return sum(slot_need[s] - len(slot_blocks[s])
-                       for s in range(B) if live[s])
+    def can_admit(self, r, budget):
+        # reservation-gated: admit only when the pool covers every live
+        # slot's worst-case remaining growth plus this request's whole need
+        return (self._blocks_needed(r, budget)
+                <= self.pool.free_blocks - self._reserved_backlog())
 
-        def finish(s: int):
-            r = slot_req[s]
-            toks_r, length = finalize_tokens(slot_toks[s], budget(r), eos)
-            out[r.id] = Response(id=r.id, tokens=toks_r, length=length)
-            pool.free(slot_blocks[s])
-            slot_req[s], slot_toks[s], slot_blocks[s] = None, [], []
-            slot_need[s] = 0
-            table[s, :] = 0                    # stray writes go to the sink
-            live[s] = False                    # position stays frozen
+    def on_admit(self, s, r, budget):
+        prompt_blocks = self.pool.alloc(
+            math.ceil(len(r.tokens) / self.block_size))
+        self._slot_blocks[s] = prompt_blocks
+        self._slot_need[s] = self._blocks_needed(r, budget)
+        self.table[s, :] = 0
+        self.table[s, : len(prompt_blocks)] = prompt_blocks
+        self._slot_live[s] = True
 
-        def ensure_blocks(s: int):
-            """Grow slot ``s`` to cover the next round of decode commits
-            (``chunk`` single-token steps, or one spec_k-row verify chunk) —
-            reservation-gated admission guarantees this never fails."""
-            target = min(math.ceil((int(pos[s]) + self._ahead) / bs), slot_need[s])
-            delta = target - len(slot_blocks[s])
-            if delta > 0:
-                new = pool.alloc(delta)
-                start = len(slot_blocks[s])
-                slot_blocks[s].extend(new)
-                table[s, start:start + len(new)] = new
+    def group_len(self, n):
+        return self._prompt_pad(n)
 
-        while pending or live.any():
-            # admit in arrival order while a slot AND worst-case pool space
-            # are both available; one batched prefill per padded length
-            free_slots = [s for s in range(B) if slot_req[s] is None]
-            admitted: dict[int, list[tuple[int, Request]]] = defaultdict(list)
-            while free_slots and pending:
-                r = pending[0]
-                nb = self._blocks_needed(r, budget(r))
-                if nb > pool.free_blocks - reserved_backlog():
-                    break                       # backpressure: decode frees
-                pending.popleft()
-                s = free_slots.pop(0)
-                prompt_blocks = pool.alloc(math.ceil(len(r.tokens) / bs))
-                slot_req[s], slot_toks[s] = r, []
-                slot_blocks[s] = prompt_blocks
-                slot_need[s] = nb
-                table[s, :] = 0
-                table[s, : len(prompt_blocks)] = prompt_blocks
-                live[s] = True
-                admitted[self._prompt_pad(len(r.tokens))].append((s, r))
-            staged: list[tuple[list[tuple[int, Request]], jax.Array]] = []
-            for length, group in admitted.items():
-                reqs_g = [r for _, r in group]
-                toks_np, lens_np = pad_bucket(reqs_g, length)
-                key, kp = jax.random.split(key)
-                t0_d, rows = self._prefill_fn()(
-                    engine.params, jnp.asarray(toks_np), jnp.asarray(lens_np), kp
+    def prefill(self, length):
+        del length   # pad target rides in via toks.shape: one cached program
+        if self._prefill_jit is None:
+            model, sample = self.engine.model, self.core._sampler
+
+            @jax.jit
+            def prefill_group(params, toks, lens, key):
+                # pad target == the padded prompt length: the paged pool is
+                # the only persistent cache, so no cache_len-wide row exists
+                logits, cache = model.prefill(
+                    params, {"tokens": toks, "lengths": lens}, toks.shape[1]
                 )
-                tables_g = jnp.asarray(
-                    np.stack([table[s, : length // bs] for s, _ in group]))
-                cache = self._insert(cache, rows, tables_g)
-                staged.append((group, t0_d))
-            if staged:
-                # ONE host round-trip for the whole admission wave, not one
-                # per bucket (host-sync chunk budget: admission + chunk)
-                first_toks = jax.device_get([t for _, t in staged])
-                for (group, _), t0 in zip(staged, first_toks):
-                    for (s, r), t in zip(group, t0):
-                        slot_toks[s] = [int(t)]
-                        tok[s], pos[s] = int(t), len(r.tokens)
-                        remaining[s] = budget(r) - 1
-                        if self.last_spec_stats is not None:
-                            # the prefill-sampled token is delivered work too
-                            # — keeps 'generated' comparable with engine
-                            # spec_stats
-                            self.last_spec_stats["generated"] += 1
-                        if budget(r) <= 1 or (eos is not None and int(t) == eos):
-                            finish(s)
+                return sample(logits, key), cache
 
-            if not live.any():
-                if pending:
-                    continue
-                break
+            self._prefill_jit = prefill_group
+        return self._prefill_jit
 
-            for s in range(B):
-                if live[s]:
-                    ensure_blocks(s)
+    def insert(self, cache, rows, group, length):
+        tables_g = jnp.asarray(
+            np.stack([self.table[s, : length // self.block_size]
+                      for s, _ in group]))
+        return self._insert(cache, rows, tables_g)
 
-            key, kc = jax.random.split(key)
-            if self.spec_k is not None:
-                # speculative round: one verify forward advances every live
-                # slot by 1..spec_k tokens; rejected rows never reach the
-                # pool (out-of-bounds drop), blocks were grown to cover the
-                # worst-case accepted chunk by ensure_blocks above
-                from repro.serving.spec import draft_chunk, take_accepted
+    def before_round(self, pos, live):
+        for s in range(len(live)):
+            if live[s]:
+                self._ensure_blocks(s, int(pos[s]))
 
-                K = self.spec_k
-                chunk_np = draft_chunk(
-                    self._drafter, tok, live,
-                    lambda s: slot_req[s].tokens + slot_toks[s], K)
-                out_d, n_out_d, cache, pos_d, _ = self._verify_step(
-                    engine.params, jnp.asarray(chunk_np), cache,
-                    jnp.asarray(table), jnp.asarray(pos), jnp.asarray(live),
-                    jnp.asarray(remaining), kc,
-                )
-                out_np, n_out, pos = jax.device_get((out_d, n_out_d, pos_d))
-                pos = pos.copy()
-                st = self.last_spec_stats
-                st["verify_steps"] += 1
-                assert not live.any() or int(pos[live].max()) < mb * bs, (
-                    f"live verify position escaped the block table: {pos[live]}")
-                for s in np.flatnonzero(live):
-                    slot_toks[s].extend(take_accepted(
-                        out_np[s], n_out[s], remaining[s], eos, st, K))
-                    tok[s] = slot_toks[s][-1]
-                    n = budget(slot_req[s])
-                    remaining[s] = n - len(slot_toks[s])
-                    if len(slot_toks[s]) >= n or (
-                            eos is not None and eos in slot_toks[s][:n]):
-                        finish(s)
-                continue
-            toks_d, steps, cache, pos_d = self._decode_until(
-                engine.params, jnp.asarray(tok), cache, jnp.asarray(table),
-                jnp.asarray(pos), jnp.asarray(live), jnp.asarray(remaining),
-                jax.random.split(kc, self.chunk),
-            )
-            # ONE host sync per round: int(steps) + two np.asarray() calls
-            # were three separate device round-trips on the hot loop
-            steps, toks_all, pos = jax.device_get((steps, toks_d, pos_d))
-            toks_np = toks_all[: int(steps)]              # (steps, B)
-            pos = pos.copy()
-            assert not live.any() or int(pos[live].max()) < mb * bs, (
-                f"live decode position escaped the block table: {pos[live]}")
-            for s in range(B):
-                if not live[s]:
-                    continue
-                n = budget(slot_req[s])
-                slot_toks[s].extend(int(t) for t in toks_np[:, s])
-                tok[s] = slot_toks[s][-1]
-                remaining[s] = n - len(slot_toks[s])
-                done = len(slot_toks[s]) >= n
-                if eos is not None and eos in slot_toks[s][:n]:
-                    done = True
-                if done:
-                    finish(s)
+    def check_positions(self, pos, live):
+        mb, bs = self.blocks_per_req, self.block_size
+        assert not live.any() or int(pos[live].max()) < mb * bs, (
+            f"live slot position escaped the block table: {pos[live]}")
 
-        self.last_positions = pos.copy()
+    def decode_round(self, params, tok, cache, pos, live, remaining, keys):
+        toks, steps, cache, pos = self._decode_until(
+            params, tok, cache, jnp.asarray(self.table), pos, live,
+            remaining, keys)
+        return toks, steps, cache, pos
+
+    def verify_round(self, params, chunk, cache, pos, live, remaining, key):
+        out, n_out, cache, pos, _ = self._verify_step(
+            params, chunk, cache, jnp.asarray(self.table), pos, live,
+            remaining, key)
+        return out, n_out, cache, pos
+
+    def on_finish(self, s):
+        self.pool.free(self._slot_blocks[s])
+        self._slot_blocks[s], self._slot_need[s] = [], 0
+        self.table[s, :] = 0                   # stray writes go to the sink
+        self._slot_live[s] = False
+
+    def snapshot(self, cache, slots):
+        """Pool-level snapshot: the pages plus each slot's block-table row —
+        pool rows are unaddressable without the table (engine.snapshot
+        carries the same pair for the uniform paged path)."""
+        return {"cache": jax.device_get(cache),
+                "table": self.table[np.asarray(slots)].copy()}
+
+
+class PagedScheduler:
+    """Paged continuous batching over one engine (see module docstring).
+
+    Produces token-identical greedy outputs to the contiguous
+    ``SlotScheduler`` / ``serve_ragged(mode="continuous")`` on any trace —
+    the paged attention path is parity-tested bit-exact against the
+    contiguous deferred decode (tests/test_paged.py).
+    """
+
+    def __init__(self, engine, *, slots: int = 4, chunk: int = 4,
+                 block_size: int = 8, num_blocks: int | None = None,
+                 max_len: int | None = None, sampler: str = "greedy",
+                 sampler_kw=None, spec_k: int | None = None, drafter=None):
+        self.adapter = PagedAdapter(engine, block_size=block_size,
+                                    num_blocks=num_blocks, max_len=max_len)
+        self._core = SchedulerCore(engine, self.adapter, slots=slots,
+                                   chunk=chunk, sampler=sampler,
+                                   sampler_kw=sampler_kw, spec_k=spec_k,
+                                   drafter=drafter)
+        self.engine = engine
+        self.slots = slots
+        self.chunk = chunk
+        self.spec_k = spec_k
+        self.block_size = block_size
+        self.max_len = self.adapter.max_len
+        self.blocks_per_req = self.adapter.blocks_per_req
+        self.num_blocks = self.adapter.num_blocks
+        self.last_peak_blocks = 0          # residency high-water of last serve
+        self.last_positions: np.ndarray | None = None   # debug/introspection
+        self.last_spec_stats = None        # per-serve speculative accounting
+
+    def serve(self, requests: Sequence[Request], max_new_tokens: int,
+              *, key=None) -> list[Response]:
+        out = self._core.serve(requests, max_new_tokens, key=key)
+        self.last_positions = self._core.last_positions
+        self.last_spec_stats = self._core.last_spec_stats
         # the allocator's exact high-water mark (sampling pool.live_blocks at
         # loop points would miss peaks freed before the sample, e.g. prompt
         # blocks of budget<=1 requests finished at admission)
-        self.last_peak_blocks = max(self.last_peak_blocks, pool.peak_live)
-        return [out[r.id] for r in requests]
+        self.last_peak_blocks = max(self.last_peak_blocks,
+                                    self.adapter.pool.peak_live)
+        return out
 
 
 def serve_paged(engine, requests: Sequence[Request], max_new_tokens: int,

@@ -243,7 +243,7 @@ def spec_accept(logits, chunk, key, *, sampler: str = "greedy",
 
 
 # ---------------------------------------------------------------------------
-# host-side round bookkeeping (shared by the engine and both schedulers)
+# host-side round bookkeeping (shared by the engine and the scheduling core)
 # ---------------------------------------------------------------------------
 
 def draft_chunk(drafter: Drafter, tok, live, context_fn, k: int):
@@ -281,8 +281,9 @@ def build_verify_step(model, *, sampler: str = "greedy", sampler_kw=(),
                       paged: bool = False):
     """One speculative decode step as a single jitted program:
     verify k chunk tokens -> accept/reject -> commit the accepted prefix ->
-    advance positions. Shared by `InferenceEngine._generate_spec`,
-    `SlotScheduler`, and `PagedScheduler`.
+    advance positions. Shared by `InferenceEngine._generate_spec` and the
+    scheduling core's spec-capable cache adapters (`ContiguousAdapter`,
+    `PagedAdapter` — see serving/core.py).
 
     The commit count is ``min(n_out, remaining)`` gated by ``live``: a row
     past its budget (or a frozen scheduler slot) commits nothing and its

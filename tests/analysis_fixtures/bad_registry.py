@@ -17,4 +17,5 @@ def build(cfg):
         decode=None,
         supports_lengths=True,
         supports_paged=True,
+        cache_kind="kv",
     )

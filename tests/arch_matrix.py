@@ -44,3 +44,10 @@ SPEC_ARCHS = [
     "internlm2-1.8b",
     "dbrx-132b",
 ]
+
+# cache_kind="state": O(1) per-slot recurrent state served through the
+# scheduling core's RecurrentAdapter (slot gather/scatter, no paging).
+SLOT_STATE_ARCHS = [
+    "rwkv6-7b",
+    "zamba2-7b",
+]

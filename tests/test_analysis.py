@@ -184,7 +184,8 @@ def test_registry_coverage_requires_explicit_flags():
 def _fake_model(**kw):
     base = dict(supports_lengths=False, supports_paged=False,
                 supports_spec=False, init_paged_cache=None, decode_paged=None,
-                verify=None, commit_verify=None)
+                verify=None, commit_verify=None, cache_kind="none",
+                insert_slots=None, gather_slots=None)
     base.update(kw)
     return types.SimpleNamespace(**base)
 

@@ -15,6 +15,7 @@ from repro.models.registry import build, load_config, smoke_batch
 from repro.serving.batching import (
     Request,
     SlotScheduler,
+    resolve_mode,
     serve_bucketed,
     serve_continuous,
     serve_ragged,
@@ -161,24 +162,112 @@ def test_prng_streams_independent_per_bucket(engine, monkeypatch):
     assert len(seen) == 2 and not np.array_equal(seen[0], seen[1])
 
 
-def test_recurrent_family_exact_length_grouping():
-    """rwkv6 has sequential prefill state: continuous mode must refuse, and
-    bucketed mode must group by exact length (pads would corrupt the
-    recurrence) while still matching direct generation."""
+@pytest.fixture(scope="module")
+def rwkv_engine():
     cfg = load_config("rwkv6-7b").reduced()
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = InferenceEngine(model, params, cache_len=24)
-    assert not model.supports_lengths
-    with pytest.raises(ValueError, match="continuous"):
-        SlotScheduler(eng)
+    return InferenceEngine(model, params, cache_len=24)
+
+
+def test_recurrent_slot_state_continuous(rwkv_engine):
+    """rwkv6 serves through the slot-state continuous path: exact-length
+    admission groups (no pad token ever enters the recurrence), and the
+    continuous, bucketed and direct outputs agree token-for-token."""
+    eng = rwkv_engine
+    assert not eng.model.supports_lengths
+    assert eng.model.cache_kind == "state"
+    assert resolve_mode(eng, "auto") == "continuous"
+    # the engine's own batch API still refuses ragged lengths — per-slot
+    # raggedness is the scheduler's job now
     with pytest.raises(ValueError, match="ragged"):
         eng.generate({"tokens": jnp.zeros((1, 4), jnp.int32)}, 2,
                      lengths=np.asarray([2], np.int32))
-    prompts = [[4, 2, 9], [8, 8, 1, 3, 5]]
-    out = serve_ragged(eng, [Request(i, p) for i, p in enumerate(prompts)], 4)
-    for r, p in zip(out, prompts):
-        np.testing.assert_array_equal(r.tokens, _direct(eng, p, 4))
+    prompts = [[4, 2, 9], [8, 8, 1, 3, 5], [4, 2, 9, 1]]
+    reqs = [Request(i, p) for i, p in enumerate(prompts)]
+    direct = [_direct(eng, p, 4) for p in prompts]
+    for out in (serve_ragged(eng, reqs, 4),               # -> continuous
+                serve_continuous(eng, reqs, 4, slots=2, chunk=2),
+                serve_bucketed(eng, reqs, 4)):
+        for r, want in zip(out, direct):
+            np.testing.assert_array_equal(r.tokens, want)
+
+
+def test_recurrent_slot_reuse_and_budgets(rwkv_engine):
+    """More recurrent requests than slots + mixed budgets: slots free at
+    each request's own budget and refill, outputs still match direct."""
+    eng = rwkv_engine
+    prompts = [[4, 2, 9], [8, 8, 1, 3, 5], [7, 7], [1, 2, 3], [9, 9, 9, 2]]
+    budgets = [2, 5, 3, 6, 4]
+    reqs = [Request(i, p, max_new=b) for i, (p, b) in
+            enumerate(zip(prompts, budgets))]
+    out = serve_continuous(eng, reqs, 6, slots=2, chunk=2)
+    for r, req in zip(out, reqs):
+        assert r.tokens.shape == (req.max_new,)
+        np.testing.assert_array_equal(
+            r.tokens, _direct(eng, req.tokens, req.max_new))
+
+
+def test_recurrent_unbounded_state_ignores_cache_len(rwkv_engine):
+    """rwkv6's state is fully O(1): no KV axis grows with the sequence, so
+    the scheduler must serve budgets past cache_len instead of refusing."""
+    assert rwkv_engine.unbounded_state
+    out = serve_continuous(rwkv_engine, [Request(0, [4, 2, 9])], 30,
+                           slots=1, chunk=4)   # 3 + 30 > cache_len=24
+    assert out[0].tokens.shape == (30,)
+
+
+def test_recurrent_bounded_state_overflow_raises():
+    """zamba2's shared-attention KV rows are bounded by cache_len: the
+    slot-state path must validate capacity like the contiguous one."""
+    cfg = load_config("zamba2-7b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = InferenceEngine(model, params, cache_len=10)
+    assert eng.model.cache_kind == "state" and not eng.unbounded_state
+    sched = SlotScheduler(eng, slots=2, chunk=2)
+    with pytest.raises(ValueError, match="cache"):
+        sched.serve([Request(0, list(range(8)))], 4)
+    out = sched.serve([Request(0, [3, 1, 4])], 4)    # within bounds fine
+    assert out[0].tokens.shape == (4,)
+
+
+def test_recurrent_snapshot_roundtrip(rwkv_engine):
+    """RecurrentAdapter insert -> snapshot is a per-slot state roundtrip."""
+    eng = rwkv_engine
+    sched = SlotScheduler(eng, slots=3, chunk=2)
+    adapter = sched.adapter
+    cache = adapter.begin_serve()
+    prompt = [4, 2, 9]
+    _, rows = eng.model.prefill(
+        eng.params, {"tokens": jnp.asarray([prompt], jnp.int32)},
+        eng.cache_len)
+    cache = adapter.insert(cache, rows, [(1, Request(0, prompt))], len(prompt))
+    snap = adapter.snapshot(cache, [1])
+    want = jax.device_get(rows)
+    for got, ref in zip(jax.tree.leaves(snap), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_continuous_refuses_encdec():
+    """The refusal moved from recurrent families to the only family with
+    neither length-aware KV rows nor O(1) slot state: the encdec."""
+    import types
+
+    cfg = load_config("seamless-m4t-large-v2").reduced()
+    eng = types.SimpleNamespace(model=build(cfg), cfg=cfg)
+    assert eng.model.cache_kind == "none"
+    with pytest.raises(ValueError, match="continuous"):
+        SlotScheduler(eng)
+
+
+def test_resolve_mode_messages(engine, rwkv_engine):
+    with pytest.raises(ValueError, match="valid modes"):
+        resolve_mode(engine, "warp")
+    # an explicit unsupported mode lists what the arch can actually run
+    with pytest.raises(ValueError, match="continuous, bucketed"):
+        resolve_mode(rwkv_engine, "paged")
+    assert resolve_mode(engine, "auto") == "paged"
 
 
 def test_serve_ragged_empty(engine):

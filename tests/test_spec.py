@@ -342,8 +342,14 @@ def test_spec_validation_errors(tiny):
     reng = InferenceEngine(rwkv, rwkv.init(jax.random.PRNGKey(0)), cache_len=32)
     with pytest.raises(ValueError, match="no speculative verify"):
         reng.generate(_batch(rwkv.cfg), 4, spec_k=2)
-    with pytest.raises(ValueError, match="bucketed"):
+    # rwkv now resolves to the slot-state continuous scheduler, whose core
+    # rejects spec for non-verify families; the bucketed fallback keeps its
+    # own refusal for explicitly-requested bucket-serial serving
+    with pytest.raises(ValueError, match="no speculative verify"):
         serve_ragged(reng, [Request(0, [1, 2, 3])], 4, spec_k=2)
+    with pytest.raises(ValueError, match="bucketed"):
+        serve_ragged(tiny, [Request(0, [1, 2, 3])], 4, spec_k=2,
+                     mode="bucketed")
 
 
 def test_verify_logits_spec_dist():
