@@ -5,7 +5,10 @@
   table5 -> quality          (paper Table V: PPL fp32 vs W8A8)
   table6 -> throughput       (paper Table VI: tok/s, GOPS, scheduling)
   kernels -> kernel_bench    (GQMV/GQMM kernel-shape sweep, interpret mode)
-  ragged -> throughput       (ragged trace: bucket-serial vs continuous slots)
+  ragged -> throughput       (ragged trace: bucket-serial vs continuous slots;
+                              exits non-zero if a sanitize=False scheduler
+                              loses more than 2% tok/s vs the default run —
+                              repro-san's disabled-mode overhead gate)
   quant -> quant_bench       (per-format bytes/weight, decode us/call, errors)
   paged -> throughput        (paged vs contiguous slots: tok/s + resident KV
                               bytes; exits non-zero if paged residency does

@@ -90,12 +90,18 @@ def derived_v5e_roofline():
          f"{(4.0)/(1.0+4.0/256):.2f}x (paper: 14.3-15.8x vs scalar ARM PS)")
 
 
-def ragged_throughput():
+def ragged_throughput() -> bool:
     """Measured useful tok/s on a ragged trace: bucket-serial baseline vs
     the slot scheduler (continuous batching). Same requests, same greedy
     sampling, same per-request budgets — the delta is pure scheduling.
     Both run the deferred decode-cache commit (§Perf), so step cost is not
-    dominated by the scan's full-cache copy."""
+    dominated by the scan's full-cache copy.
+
+    Also gates repro-san's disabled-mode cost (DESIGN.md §13): a scheduler
+    built with ``sanitize=False`` must stay within 2% tok/s of the default
+    continuous run. The sanitizer's per-round hooks sit on the serve hot
+    loop behind ``san is not None`` checks; this pins them (and any future
+    work that creeps outside that gate) to noise when the mode is off."""
     from repro.core import flags
 
     cfg = load_config("tinyllama-1.1b").reduced()
@@ -112,10 +118,16 @@ def ragged_throughput():
     with flags.overrides(deferred_decode_cache=True):
         engine = InferenceEngine(model, params, cache_len=cache_len)
         sched = SlotScheduler(engine, slots=RAGGED_SLOTS, chunk=RAGGED_CHUNK)
+        engine_off = InferenceEngine(model, params, cache_len=cache_len,
+                                     sanitize=False)
+        sched_off = SlotScheduler(engine_off, slots=RAGGED_SLOTS,
+                                  chunk=RAGGED_CHUNK)
 
         runs = {
             "bucket_serial": lambda: serve_bucketed(engine, reqs, max(RAGGED_BUDGETS)),
             "continuous_slots": lambda: sched.serve(reqs, max(RAGGED_BUDGETS)),
+            "continuous_sanitize_off": lambda: sched_off.serve(
+                reqs, max(RAGGED_BUDGETS)),
         }
         results = {}
         for name, fn in runs.items():
@@ -132,6 +144,12 @@ def ragged_throughput():
     emit("ragged/measured_host/speedup", 0.0,
          f"{results['continuous_slots']/results['bucket_serial']:.2f}x "
          "continuous vs bucket-serial")
+    ratio = results["continuous_sanitize_off"] / results["continuous_slots"]
+    ok = ratio >= 0.98
+    emit("ragged/measured_host/sanitize_off_overhead", 0.0,
+         f"{ratio:.3f}x of baseline tok/s "
+         f"({'within' if ok else 'EXCEEDS'} the 2% repro-san off gate)")
+    return ok
 
 
 def paged_throughput() -> bool:
@@ -370,7 +388,7 @@ def run():
 
 
 def run_ragged():
-    ragged_throughput()
+    return ragged_throughput()
 
 
 def run_paged():

@@ -15,6 +15,7 @@ from repro.analysis.engine import (
     Finding,
     run_analysis,
 )
+from repro.analysis.adapter_lifecycle import AdapterLifecycleChecker
 from repro.analysis.host_sync import HostSyncChecker
 from repro.analysis.pallas_contract import PallasContractChecker
 from repro.analysis.quant_invariants import QuantInvariantsChecker
@@ -24,6 +25,7 @@ from repro.analysis.recompile import (
     count_jit_traces,
 )
 from repro.analysis.registry_coverage import RegistryCoverageChecker
+from repro.analysis.shadow_coverage import ShadowCoverageChecker
 
 __all__ = [
     "Allowlist",
@@ -36,6 +38,8 @@ __all__ = [
     "PallasContractChecker",
     "QuantInvariantsChecker",
     "RegistryCoverageChecker",
+    "AdapterLifecycleChecker",
+    "ShadowCoverageChecker",
     "JitTraceCounter",
     "count_jit_traces",
     "default_checkers",
@@ -43,11 +47,13 @@ __all__ = [
 
 
 def default_checkers() -> list:
-    """Fresh instances of the five repo checkers, in stable order."""
+    """Fresh instances of the seven repo checkers, in stable order."""
     return [
         HostSyncChecker(),
         RecompileChecker(),
         PallasContractChecker(),
         QuantInvariantsChecker(),
         RegistryCoverageChecker(),
+        AdapterLifecycleChecker(),
+        ShadowCoverageChecker(),
     ]

@@ -78,7 +78,11 @@ def main(argv=None) -> int:
 
     if args.as_json:
         for f in findings:
-            print(json.dumps(f.__dict__))
+            print(json.dumps({
+                "checker": f.checker, "path": f.path, "line": f.line,
+                "col": f.col, "severity": f.severity,
+                "message": f.message, "anchor": f.anchor,
+            }))
     else:
         for f in findings:
             print(f.render())

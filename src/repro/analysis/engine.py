@@ -6,7 +6,7 @@ exactly, pack groups that never straddle a shard — and until now they were
 enforced only by runtime asserts and whichever test happened to trip them.
 This package promotes them to a static-analysis pass, the way
 ``launch/hlo_analysis.py`` does for post-SPMD cost accounting: a small
-AST-walking engine, a :class:`Checker` protocol, and five repo-specific
+AST-walking engine, a :class:`Checker` protocol, and seven repo-specific
 checkers (see ``repro.analysis.__init__``).
 
 Two checker shapes exist:

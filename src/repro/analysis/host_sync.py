@@ -19,10 +19,15 @@ per scheduler chunk. Two rules lock it in:
    vs vanilla chunk branches).
 
 Sync sites counted: ``jax.device_get``, ``jax.block_until_ready``,
-``.item()``, ``.block_until_ready()``, and ``np.asarray``/``np.array`` on a
-name tainted as a device value (assigned from a jitted/self-underscore
-callable, a call-of-a-call like ``self._prefill_fn(n)(...)``, or carrying
-the ``*_d`` device-naming convention).
+``.item()``, ``.block_until_ready()``, and — on a name tainted as a device
+value (assigned from a jitted/self-underscore callable, a call-of-a-call
+like ``self._prefill_fn(n)(...)``, or carrying the ``*_d`` device-naming
+convention) — the converters ``np.asarray``/``np.array`` and the IMPLICIT
+casts ``float(x)`` / ``int(x)``. The casts are the sneaky ones: a
+``float()`` on a device scalar compiles, runs, and blocks the pipeline
+exactly like ``.item()``, with nothing in the name to give it away.
+Names already fetched (e.g. assigned from ``jax.device_get``) are host
+values and stay clean.
 """
 
 from __future__ import annotations
@@ -41,6 +46,7 @@ from repro.analysis.engine import (
 
 SYNC_FUNCS = {"jax.device_get", "jax.block_until_ready"}
 NP_CONVERTERS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+IMPLICIT_CASTS = {"float", "int"}
 SYNC_METHODS = {"item", "block_until_ready"}
 
 DEFAULT_LOOP_FILES = (
@@ -79,7 +85,7 @@ def _sync_call_kind(node: ast.Call, tainted: set[str]) -> str | None:
     name = dotted_name(node.func)
     if name in SYNC_FUNCS:
         return name
-    if name in NP_CONVERTERS:
+    if name in NP_CONVERTERS or name in IMPLICIT_CASTS:
         if node.args and isinstance(node.args[0], ast.Name):
             arg = node.args[0].id
             if arg in tainted or arg.endswith("_d"):

@@ -165,6 +165,23 @@ def _arity(index_map: ast.expr, info: _FnInfo) -> int | None:
     return None
 
 
+def _imap_signature(index_map: ast.expr, info: _FnInfo):
+    """(param names, body AST) of an index_map — a Lambda, or a Name bound
+    to a lambda/def. None when unresolvable (e.g. built by a factory)."""
+    if isinstance(index_map, ast.Lambda):
+        a = index_map.args
+        return [p.arg for p in (*a.posonlyargs, *a.args)], index_map.body
+    if isinstance(index_map, ast.Name):
+        fd = info.defs.get(index_map.id)
+        if fd is not None:
+            a = fd.args
+            return [p.arg for p in (*a.posonlyargs, *a.args)], fd
+        target = info.assigns.get(index_map.id)
+        if target is not None and target is not index_map:
+            return _imap_signature(target, info)
+    return None
+
+
 def _spec_list(expr: ast.expr, info: _FnInfo) -> list[ast.Call] | None:
     """Resolve in_specs/out_specs to the list of BlockSpec calls (or a
     single spec as a one-element list). None when unresolvable."""
@@ -254,6 +271,39 @@ class PallasContractChecker(BaseChecker):
                         f"rank is {len(grid_elts)}"
                         + (f" + {n_prefetch} scalar-prefetch refs" if n_prefetch else "")
                         + f" = {want} (in `{fn.name}`)", col=spec.col_offset)
+
+        # 1b. declared scalar prefetch must be USED by some index_map --------
+        # The prefetch args ride LAST in every index_map signature
+        # (index_map(*grid, *prefetch_refs)). Declaring num_scalar_prefetch
+        # without any index_map reading the refs means the scalar DMA is
+        # dead weight — or, worse, a block-table kernel whose index maps
+        # ignore the table and read the same physical blocks at every grid
+        # step. Fires only when at least one index_map resolved (factories
+        # that build maps dynamically stay out of reach of this rule).
+        if n_prefetch > 0 and specs:
+            any_resolved = any_used = False
+            for spec in specs:
+                _, imap = _blockspec_parts(spec)
+                if imap is None:
+                    continue
+                sig = _imap_signature(imap, info)
+                if sig is None or len(sig[0]) < n_prefetch:
+                    continue
+                names, body = sig
+                any_resolved = True
+                pref = set(names[-n_prefetch:])
+                if any(isinstance(n, ast.Name) and n.id in pref
+                       for n in ast.walk(body)):
+                    any_used = True
+                    break
+            if any_resolved and not any_used:
+                anchor = gs_expr if isinstance(gs_expr, ast.Call) else call
+                yield Finding(
+                    self.id, path, anchor.lineno,
+                    f"num_scalar_prefetch={n_prefetch} declared but no "
+                    "index_map reads the prefetched ref(s): the scalar DMA "
+                    "is dead weight, or a block-table kernel is ignoring "
+                    f"its table (in `{fn.name}`)", col=anchor.col_offset)
 
         # 2. divisible blocks ------------------------------------------------
         for elt in grid_elts or []:

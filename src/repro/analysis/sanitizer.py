@@ -1,0 +1,280 @@
+"""repro-san: the opt-in cache-memory and numerics sanitizer (DESIGN.md §13).
+
+``BlockPool`` recycles KV blocks without zeroing and three adapters
+allocate/scatter/free slot state behind one loop — a use-after-free or a
+leaked block returns stale-but-plausible KV and corrupts generations
+WITHOUT crashing. repro-san is the debug mode that turns those silent
+corruptions into immediate, attributed errors:
+
+- **Shadow state** (analysis/shadow.py): every ``BlockPool`` alloc/free and
+  every adapter admit/finish/snapshot is mirrored on the host. Double
+  reserve, double free, leaks at request-finish / serve-finalize, writes to
+  frozen slots, pad rows entering a recurrence, and snapshots of dead slots
+  all raise :class:`~repro.analysis.shadow.SanitizerError` at the violating
+  call, with block/slot/request attribution.
+- **Poison-on-free**: freed blocks are filled with
+  :data:`~repro.analysis.shadow.POISON` (finite — see shadow.py for why
+  parity survives) and the paged gather oracle mirror
+  (``kernels/ref.paged_poison_counts``) detects any committed position of a
+  live slot that can still REACH a freed block — the use-after-free the
+  block-table indirection makes possible.
+- **Numerics tripwires**: ``core/quant.py`` boundary checks are switched on
+  (bad scales raise with param + layer-class via core/policy.py), the
+  per-round device check counts NaN/Inf/overflow per cache leaf per layer,
+  and the engine checks final logits.
+
+Cost discipline: all per-round device tripwires run in ONE jitted program
+whose result is fetched with ONE extra ``jax.device_get`` per round — the
+lexical host-sync budget (analysis/host_sync.py) holds under sanitize.
+Enable with ``sanitize=True`` on ``InferenceEngine``/``SchedulerCore``,
+``REPRO_SAN=1`` in the environment, or ``--sanitize`` on the serve CLI.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.shadow import (
+    OVERFLOW_LIMIT,
+    POISON,
+    SanitizerError,
+    ShadowBlockTracker,
+    SlotShadow,
+)
+from repro.core.quant import set_numerics_checks
+
+__all__ = [
+    "ENV_VAR",
+    "Sanitizer",
+    "check_array",
+    "sanitize_enabled",
+]
+
+ENV_VAR = "REPRO_SAN"
+
+
+def sanitize_enabled(default: bool = False) -> bool:
+    """True when the environment opts into repro-san (``REPRO_SAN=1``)."""
+    v = os.environ.get(ENV_VAR)
+    if v is None:
+        return default
+    return v not in ("", "0")
+
+
+def check_array(tag: str, x) -> None:
+    """Host-side NaN/Inf/overflow check on a concrete array (engine logits).
+
+    One deliberate device fetch per *generate call* — not per round; the
+    per-round cache tripwires live in :meth:`Sanitizer.check_round`.
+    """
+    if isinstance(x, jax.core.Tracer):
+        return
+    a = np.asarray(jax.device_get(x))
+    if not np.issubdtype(a.dtype, np.inexact):
+        return
+    bad = ~np.isfinite(a) | (np.abs(a) > OVERFLOW_LIMIT)
+    n = int(bad.sum())
+    if n:
+        idx = tuple(int(i) for i in np.argwhere(bad)[0])
+        raise SanitizerError(
+            f"repro-san[numerics]: {tag}: {n} non-finite/overflow value(s) "
+            f"of {a.size}, first at index {idx} = {a[idx]!r}")
+
+
+class Sanitizer:
+    """Per-core sanitizer: one instance per ``SchedulerCore``, re-armed by
+    ``begin_serve`` for every serve. The core calls the hooks below at the
+    lexical points DESIGN.md §13 pins down; adapters never talk to the
+    sanitizer directly except through ``san_state()`` (their pool/table
+    registration) and the snapshot hook.
+    """
+
+    def __init__(self, core):
+        self.core = core
+        self.adapter = None
+        self.slots_shadow: SlotShadow | None = None
+        self.tracker: ShadowBlockTracker | None = None
+        self.table = None               # adapter's block table (shared ref)
+        self._check = None              # jitted per-round tripwire program
+        self._leaf_names: list[str] = []
+        self._poison_fill = None
+        set_numerics_checks(True)       # quantize/dequantize boundary guards
+
+    # -- serve lifecycle -----------------------------------------------------
+
+    def begin_serve(self, adapter, cache):
+        self.adapter = adapter
+        self.slots_shadow = SlotShadow(self.core.slots, adapter.kind)
+        st = adapter.san_state()
+        pool, self.table = st.get("pool"), st.get("table")
+        self.tracker = None
+        if pool is not None:
+            self.tracker = ShadowBlockTracker(pool.num_blocks)
+            pool.shadow = self.tracker
+        self._check = None              # cache pytree may differ per serve
+        return cache
+
+    def on_admit(self, s: int, r) -> None:
+        self.slots_shadow.on_admit(s, r.id)
+        if self.tracker is not None:
+            self.tracker.set_context(s)   # the admission prompt-block alloc
+
+    def on_prefill_group(self, group, length: int) -> None:
+        self.slots_shadow.check_prefill_group(
+            [s for s, _ in group], [len(r.tokens) for _, r in group], length)
+
+    def on_request_finish(self, cache, s: int, req_id, pos_s):
+        """After ``adapter.on_finish(s)``: freeze the slot, audit that every
+        block it owned came back, and poison the frees SYNCHRONOUSLY — a
+        deferred fill would race a re-allocation of the same block and
+        clobber its fresh prefill writes."""
+        self.slots_shadow.on_finish(s, pos_s)
+        if self.tracker is not None:
+            self.tracker.audit_request(s, req_id)
+            cache = self._apply_poison(cache)
+        return cache
+
+    def pre_round(self, cache):
+        """Drain poison pending from out-of-band frees (anything that called
+        ``pool.free`` outside the finish path, e.g. a buggy adapter's
+        ``before_round``) before this round's decode reads the pool."""
+        if self.tracker is not None and self.tracker.pending_poison:
+            cache = self._apply_poison(cache)
+        return cache
+
+    def check_round(self, cache, pos, live) -> None:
+        """The per-round tripwires: frozen-slot drift on the host, then ONE
+        jitted device program + ONE ``device_get`` for every numeric check
+        (per-leaf per-layer non-finite counts, paged poison reach)."""
+        del live
+        self.slots_shadow.check_frozen(pos)
+        paged = self.tracker is not None
+        if self._check is None:
+            self._check = self._build_check(cache, paged)
+        if paged:
+            flags = self._check(cache, jnp.asarray(self.table),
+                                jnp.asarray(pos, jnp.int32))
+        else:
+            flags = self._check(cache)
+        self._interpret(jax.device_get(flags))
+
+    def on_snapshot(self, slots) -> None:
+        """Adapter snapshot hook: snapshotting a dead slot is a UAF on the
+        snapshot path; a table row disagreeing with shadow ownership means
+        the snapshot would carry phantom or aliased blocks."""
+        if self.slots_shadow is None:
+            return
+        slot_ids = [int(s) for s in np.asarray(slots).reshape(-1)]
+        self.slots_shadow.check_snapshot(slot_ids)
+        if self.tracker is not None:
+            for s in slot_ids:
+                shadow = self.tracker.slot_blocks(s)
+                mapped = sorted(int(b) for b in self.table[s] if b != 0)
+                if mapped != shadow:
+                    raise SanitizerError(
+                        f"repro-san[paged]: snapshot of slot {s} carries "
+                        f"phantom/aliased blocks: table maps {mapped} but "
+                        f"shadow ownership is {shadow}")
+
+    def finalize(self) -> None:
+        """End-of-serve audit: nothing owned, nothing live, shadow and pool
+        agree the pool drained back to empty."""
+        if self.tracker is not None:
+            self.tracker.audit_final()
+            pool = self.adapter.san_state().get("pool")
+            if pool is not None and pool.live_blocks != 0:
+                raise SanitizerError(
+                    f"repro-san[paged]: pool reports {pool.live_blocks} live "
+                    "block(s) at end of serve but the shadow saw every block "
+                    "freed — an allocation bypassed the shadowed pool")
+        leftover = self.slots_shadow.live_slots()
+        if leftover:
+            raise SanitizerError(
+                f"repro-san[{self.slots_shadow.kind}]: slot(s) {leftover} "
+                "still live at end of serve — requests finished without "
+                "on_finish")
+
+    # -- device programs -----------------------------------------------------
+
+    def _apply_poison(self, cache):
+        blocks = self.tracker.drain_poison()
+        if not blocks:
+            return cache
+        idx = jnp.asarray(sorted(set(blocks)), jnp.int32)
+        if self._poison_fill is None:
+            @partial(jax.jit, donate_argnums=(0,))
+            def fill(pages, blocks_d):
+                return pages.at[:, blocks_d].set(
+                    jnp.asarray(POISON, pages.dtype))
+
+            self._poison_fill = fill
+        return {k: (self._poison_fill(v, idx)
+                    if k in ("k_pages", "v_pages") else v)
+                for k, v in cache.items()}
+
+    def _build_check(self, cache, paged: bool):
+        self._leaf_names = [
+            jax.tree_util.keystr(kp)
+            for kp, _ in jax.tree_util.tree_flatten_with_path(cache)[0]]
+
+        def leaf_counts(leaf):
+            # per-axis-0 (layer) count of NaN/Inf/overflow values; integer
+            # leaves can't hold them and report a zero so the output pytree
+            # stays congruent with the cache
+            if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+                return jnp.zeros((1,), jnp.int32)
+            x = leaf.astype(jnp.float32)
+            bad = ~jnp.isfinite(x) | (jnp.abs(x) > OVERFLOW_LIMIT)
+            if bad.ndim < 2:
+                return jnp.atleast_1d(bad.sum().astype(jnp.int32))
+            return bad.reshape(bad.shape[0], -1).sum(-1).astype(jnp.int32)
+
+        if paged:
+            # lazy: kernels.ref pulls in the quant/kernels stack, which the
+            # analysis package must not require for pure static linting
+            from repro.kernels.ref import paged_poison_counts
+
+            @jax.jit
+            def check(cache, table, pos):
+                counts = [leaf_counts(x) for x in jax.tree.leaves(cache)]
+                pc = paged_poison_counts(cache["k_pages"], cache["v_pages"],
+                                         table, pos, POISON)
+                return counts, pc
+
+            return check
+
+        @jax.jit
+        def check(cache):
+            return [leaf_counts(x) for x in jax.tree.leaves(cache)], None
+
+        return check
+
+    def _interpret(self, flags) -> None:
+        counts_all, pc = flags
+        for name, counts in zip(self._leaf_names, counts_all):
+            counts = np.atleast_1d(np.asarray(counts))
+            total = int(counts.sum())
+            if total:
+                layers = np.flatnonzero(counts).tolist()
+                raise SanitizerError(
+                    "repro-san[numerics]: non-finite/overflow values in "
+                    f"cache leaf {name}: {total} value(s) at axis-0 (layer) "
+                    f"indices {layers} (per-layer counts "
+                    f"{counts[layers].tolist()})")
+        if pc is not None:
+            pc = np.asarray(pc)
+            if pc.sum():
+                ell, s, j = (int(i) for i in np.argwhere(pc)[0])
+                phys = int(self.table[s, j])
+                gen = self.tracker.generation[phys]
+                raise SanitizerError(
+                    "repro-san[paged]: poison read — use-after-free: layer "
+                    f"{ell}, slot {s} (request {self.slots_shadow.req[s]}) "
+                    f"still maps freed physical block {phys} (generation "
+                    f"{gen}) at virtual block {j}; "
+                    f"{int(pc[ell, s, j])} committed position(s) reach it")

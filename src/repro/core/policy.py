@@ -24,7 +24,12 @@ from typing import Any, Mapping
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantizedTensor, get_format, largest_pow2_group
+from repro.core.quant import (
+    QuantNumericsError,
+    QuantizedTensor,
+    get_format,
+    largest_pow2_group,
+)
 from repro.core.treepath import path_str as _tree_path_str
 
 # Leaf-name patterns that are never quantized (generalizes the paper's
@@ -195,7 +200,13 @@ def quantize_params(params, group_size: int, tp: int = 1, formats="int8"):
         fmt = get_format(fmt_name)
         if gs % fmt.pack:
             fmt = get_format("int8")  # packing impossible on this geometry
-        return fmt.quantize(leaf, gs)
+        try:
+            return fmt.quantize(leaf, gs)
+        except QuantNumericsError as e:
+            # repro-san attribution: which weight, which layer class — the
+            # report the debugger needs to find the corrupted checkpoint leaf
+            raise QuantNumericsError(
+                f"{e} [param {p!r}, layer-class {leaf_class(p)}]") from e
 
     return jax.tree_util.tree_map_with_path(convert, params)
 

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from contextlib import contextmanager
 from functools import partial, reduce
 from typing import Any, Callable
 
@@ -50,7 +51,11 @@ DEFAULT_GROUP_SIZE = 256  # paper §III-A: GS=256 divides every TinyLlama dim
 __all__ = [
     "DEFAULT_GROUP_SIZE",
     "QuantFormat",
+    "QuantNumericsError",
     "QuantizedTensor",
+    "numerics_checks",
+    "numerics_checks_enabled",
+    "set_numerics_checks",
     "register_format",
     "get_format",
     "available_formats",
@@ -65,6 +70,60 @@ __all__ = [
     "largest_pow2_group",
     "quantization_error_stats",
 ]
+
+
+# ---------------------------------------------------------------------------
+# repro-san numerics tripwires (opt-in; analysis/sanitizer.py enables them)
+# ---------------------------------------------------------------------------
+# A corrupted scale (NaN/Inf, or absmax overflow from an already-broken
+# weight) quantizes to garbage that then dequantizes to *finite-looking*
+# noise — the second silent-corruption class next to stale KV blocks. With
+# checks on, the format-dispatched quantize/dequantize entry points guard
+# inputs, scales, and outputs on the HOST side only (tracers and non-float
+# dtypes pass through untouched), so jitted compute paths pay nothing and
+# the flag is free when off. quant stays import-free of repro.analysis —
+# the sanitizer imports us, not the reverse.
+
+_OVERFLOW_LIMIT = 1e30          # |x| beyond this at a boundary is an error
+_NUMERICS = {"on": False}       # process-global, like the format registry
+
+
+class QuantNumericsError(ArithmeticError):
+    """NaN/Inf/overflow crossing a quantize/dequantize boundary."""
+
+
+def set_numerics_checks(on: bool) -> None:
+    _NUMERICS["on"] = bool(on)
+
+
+def numerics_checks_enabled() -> bool:
+    return _NUMERICS["on"]
+
+
+@contextmanager
+def numerics_checks(on: bool = True):
+    """Scoped enable/disable for tests and one-off audits."""
+    prev = _NUMERICS["on"]
+    _NUMERICS["on"] = bool(on)
+    try:
+        yield
+    finally:
+        _NUMERICS["on"] = prev
+
+
+def _numerics_guard(tag: str, x) -> None:
+    if isinstance(x, jax.core.Tracer):
+        return                  # jitted call sites: checks are host-only
+    a = np.asarray(x)
+    if not np.issubdtype(a.dtype, np.inexact):
+        return
+    bad = ~np.isfinite(a) | (np.abs(a) > _OVERFLOW_LIMIT)
+    n = int(bad.sum())
+    if n:
+        idx = tuple(int(i) for i in np.argwhere(bad)[0])
+        raise QuantNumericsError(
+            f"repro-san[numerics]: {tag}: {n} non-finite/overflow value(s) "
+            f"of {a.size}, first at index {idx} = {a[idx]!r}")
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -174,10 +233,20 @@ class QuantFormat:
     unpack_fn: Callable = dataclasses.field(repr=False, default=None)
 
     def quantize(self, r: jax.Array, group_size: int) -> "QuantizedTensor":
-        return self.quantize_fn(r, group_size=group_size)
+        if _NUMERICS["on"]:
+            _numerics_guard(f"quantize[{self.name}].input", r)
+        qt = self.quantize_fn(r, group_size=group_size)
+        if _NUMERICS["on"]:
+            _numerics_guard(f"quantize[{self.name}].scales", qt.scales)
+        return qt
 
     def dequantize(self, qt: "QuantizedTensor", dtype=jnp.float32) -> jax.Array:
-        return self.dequantize_fn(qt, dtype=dtype)
+        if _NUMERICS["on"]:
+            _numerics_guard(f"dequantize[{self.name}].scales", qt.scales)
+        out = self.dequantize_fn(qt, dtype=dtype)
+        if _NUMERICS["on"]:
+            _numerics_guard(f"dequantize[{self.name}].output", out)
+        return out
 
     def unpack_values(self, qvalues: jax.Array) -> jax.Array:
         """Storage array -> logical int8 values (identity when pack == 1)."""

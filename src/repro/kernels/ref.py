@@ -165,6 +165,41 @@ def paged_attention_ref(
     return ctx.reshape(b, kv * g * hd)
 
 
+def paged_poison_counts(
+    k_pages: jax.Array,      # (L, NB, BS, KV, hd) full block pool, all layers
+    v_pages: jax.Array,      # (L, NB, BS, KV, hd)
+    block_table: jax.Array,  # (b, MB) int32 physical block per virtual block
+    pos: jax.Array,          # (b,) int32 current decode position per row
+    poison: float,
+) -> jax.Array:
+    """repro-san's use-after-free detector: per (layer, slot, virtual block)
+    counts of COMMITTED positions whose gathered K or V contains the poison
+    fill value (analysis/shadow.py POISON, written over freed blocks).
+
+    Mirrors :func:`paged_attention_ref`'s gather exactly — the same
+    ``pages[block_table]`` indirection attention reads through — so a hit
+    means poisoned (freed) data is REACHABLE by a live slot at a position
+    the mask does not exclude: a freed block its table still maps. Only
+    positions ``t < pos[slot]`` count; lookahead blocks (allocated ahead of
+    the write frontier, possibly recycled-and-poisoned) and finished slots'
+    sink-mapped rows sit at ``t >= pos`` or block 0 and stay clean.
+
+    Returns int32 (L, b, MB). Runs under jit inside the sanitizer's single
+    per-round check program (one host sync for all tripwires).
+    """
+    ell, nb, bs = k_pages.shape[:3]
+    b, mb = block_table.shape
+    t = jnp.arange(mb * bs, dtype=jnp.int32)
+    committed = (t[None, :] < pos[:, None]).reshape(b, mb, bs)
+    out = jnp.zeros((ell, b, mb), jnp.int32)
+    for pages in (k_pages, v_pages):
+        g = pages[:, block_table]                # (L, b, MB, BS, KV, hd)
+        bad = (g == jnp.asarray(poison, g.dtype)).reshape(
+            ell, b, mb, bs, -1).any(-1)
+        out = out + jnp.sum(bad & committed[None], axis=-1).astype(jnp.int32)
+    return out
+
+
 def verify_attend(
     scores: jax.Array,       # (b, KV, G, S, T) chunk queries vs the sequence
     cur: jax.Array,          # (b, KV, G, S, M) intra-chunk q.k products

@@ -57,6 +57,10 @@ def main(argv=None):
                     help="speculative drafter: 'ngram' (zero-weight "
                          "prompt-lookup) or 'model:<arch-id>' (small "
                          "registry model, greedy drafts)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="repro-san debug mode (DESIGN.md §13): shadow "
+                         "block/slot tracking, poison-on-free UAF detection, "
+                         "NaN/Inf tripwires (equivalent to REPRO_SAN=1)")
     args = ap.parse_args(argv)
     sampler_kw = ({"p": args.top_p, "temperature": args.temperature}
                   if args.sampler == "top_p" else None)
@@ -84,7 +88,8 @@ def main(argv=None):
     if quantize and args.quantize_format is not None:
         quantize = args.quantize_format
     engine = InferenceEngine(model, params, cache_len=cache_len,
-                             quantize=quantize)
+                             quantize=quantize,
+                             sanitize=True if args.sanitize else None)
     breakdown = format_breakdown(engine.params)
     print(f"arch: {cfg.arch_id}  quantized bytes fraction: "
           f"{engine.quantized_fraction:.3f}  "

@@ -8,6 +8,11 @@ serving engine, and dry-run are family-agnostic:
   init_cache(batch, cache_len, dt)  -> cache pytree
   prefill(params, batch, cache_len) -> (last logits, cache)
   decode(params, token, cache, pos) -> (logits, cache)
+
+``cache_kind`` ("kv" / "state" / "none") drives two lint ledgers: the
+registry-coverage slot-hook contract and the shadow-coverage sanitizer
+sweep (every kv/state family must appear in ``SANITIZED_ARCHS``,
+tests/arch_matrix.py).
 """
 
 from __future__ import annotations

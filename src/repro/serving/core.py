@@ -195,6 +195,15 @@ class CacheAdapter:
         """Host copy of the per-slot cache state for ``slots``."""
         raise NotImplementedError
 
+    def san_state(self) -> dict:
+        """repro-san registration (analysis/sanitizer.py): the adapter's
+        host allocator state as ``{"pool": BlockPool | None, "table":
+        block-table ndarray | None}``. Every concrete adapter must define
+        this (the ``adapter-lifecycle`` checker enforces it) so the shadow
+        tracker can mirror whatever the adapter allocates."""
+        raise NotImplementedError(f"{self.kind}: adapter registers no "
+                                  "sanitizer state (san_state)")
+
 
 class ContiguousAdapter(CacheAdapter):
     """The original ``SlotScheduler`` cache: one ``cache_len``-wide cache row
@@ -317,9 +326,16 @@ class ContiguousAdapter(CacheAdapter):
         return out, n_out, cache, pos
 
     def snapshot(self, cache, slots):
+        san = getattr(self.core, "sanitizer", None)
+        if san is not None:
+            san.on_snapshot(slots)
         rows = self.engine.model.gather_slots(
             cache, jnp.asarray(slots, jnp.int32))
         return jax.device_get(rows)
+
+    def san_state(self):
+        # slot rows are the allocation: no pool, no table to shadow
+        return {"pool": None, "table": None}
 
 
 class RecurrentAdapter(ContiguousAdapter):
@@ -388,6 +404,12 @@ class RecurrentAdapter(ContiguousAdapter):
             return
         ContiguousAdapter.check_positions(self, pos, live)
 
+    def san_state(self):
+        # explicit (not just inherited): the shadow-coverage contract is
+        # that every concrete adapter declares its sanitizer state in its
+        # own body, so the adapter-lifecycle checker can verify it
+        return {"pool": None, "table": None}
+
 
 # ---------------------------------------------------------------------------
 # the scheduling core
@@ -409,7 +431,8 @@ class SchedulerCore:
 
     def __init__(self, engine, adapter: CacheAdapter, *, slots: int = 4,
                  chunk: int = 4, sampler: str = "greedy", sampler_kw=None,
-                 spec_k: int | None = None, drafter=None):
+                 spec_k: int | None = None, drafter=None,
+                 sanitize: bool | None = None):
         if spec_k is not None:
             if spec_k < 2:
                 raise ValueError(f"spec_k must be >= 2, got {spec_k}")
@@ -430,6 +453,15 @@ class SchedulerCore:
             from repro.serving.spec import NgramDrafter
 
             self._drafter = drafter if drafter is not None else NgramDrafter()
+        # repro-san (DESIGN.md §13): None inherits the engine's setting, so
+        # every scheduler built over a sanitized engine is sanitized too
+        san_on = (getattr(engine, "sanitize", False) if sanitize is None
+                  else bool(sanitize))
+        self.sanitizer = None
+        if san_on:
+            from repro.analysis.sanitizer import Sanitizer
+
+            self.sanitizer = Sanitizer(self)
         adapter.bind(self, sampler=sampler, sampler_kw=sampler_kw)
 
     def serve(self, requests: Sequence[Request], max_new_tokens: int,
@@ -447,6 +479,9 @@ class SchedulerCore:
         adapter.validate(requests, budget, slack)
 
         cache = adapter.begin_serve()
+        san = self.sanitizer
+        if san is not None:
+            cache = san.begin_serve(adapter, cache)
         pending = deque(requests)
         slot_req: list[Request | None] = [None] * B
         slot_toks: list[list[int]] = [[] for _ in range(B)]
@@ -461,12 +496,17 @@ class SchedulerCore:
             if self.spec_k is not None else None)
 
         def finish(s: int):
+            nonlocal cache
             r = slot_req[s]
             out[r.id] = make_response(r, slot_toks[s], budget(r), eos)
             slot_req[s], slot_toks[s] = None, []
             remaining[s] = 0
             live[s] = False                # token and position stay frozen
             adapter.on_finish(s)
+            if san is not None:
+                # freeze the slot shadow, audit the request's blocks, and
+                # poison its frees NOW — before any re-allocation can write
+                cache = san.on_request_finish(cache, s, r.id, pos[s])
 
         while pending or live.any():
             # admission: pop pending in arrival order while a slot (and, for
@@ -482,10 +522,14 @@ class SchedulerCore:
                 s = free_slots.pop(0)
                 slot_req[s], slot_toks[s] = r, []
                 live[s] = True
+                if san is not None:
+                    san.on_admit(s, r)
                 adapter.on_admit(s, r, budget(r))
                 admitted[adapter.group_len(len(r.tokens))].append((s, r))
             staged: list[tuple[list[tuple[int, Request]], jax.Array]] = []
             for length, group in admitted.items():
+                if san is not None:
+                    san.on_prefill_group(group, length)
                 toks_np, lens_np = pad_bucket([r for _, r in group], length)
                 key, kp = jax.random.split(key)
                 t0_d, rows = adapter.prefill(length)(
@@ -517,6 +561,8 @@ class SchedulerCore:
 
             adapter.before_round(pos, live)
             adapter.check_positions(pos, live)
+            if san is not None:
+                cache = san.pre_round(cache)
             key, kc = jax.random.split(key)
             if self.spec_k is not None:
                 # speculative round: draft on the host (per-slot token
@@ -545,6 +591,8 @@ class SchedulerCore:
                     if len(slot_toks[s]) >= n or (
                             eos is not None and eos in slot_toks[s][:n]):
                         finish(s)
+                if san is not None:
+                    san.check_round(cache, pos, live)
                 continue
             toks_d, steps_d, cache, pos_d = adapter.decode_round(
                 engine.params, jnp.asarray(tok), cache, jnp.asarray(pos),
@@ -568,7 +616,11 @@ class SchedulerCore:
                     done = True
                 if done:
                     finish(s)
+            if san is not None:
+                san.check_round(cache, pos, live)
 
         self.last_positions = pos.copy()
+        if san is not None:
+            san.finalize()
         adapter.end_serve()
         return [out[r.id] for r in requests]

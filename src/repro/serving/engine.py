@@ -64,11 +64,26 @@ class InferenceEngine:
 
     def __init__(self, model: Model, params, *, cache_len: int,
                  quantize: bool | str | Mapping[str, str | None] = False,
-                 tp: int = 1, eos_id: int | None = None):
+                 tp: int = 1, eos_id: int | None = None,
+                 sanitize: bool | None = None):
         self.model = model
         self.cfg = model.cfg
         self.cache_len = cache_len
         self.eos_id = eos_id
+        # repro-san (analysis/sanitizer.py, DESIGN.md §13): None defers to
+        # the REPRO_SAN environment opt-in; schedulers built on this engine
+        # inherit the resolved setting. Numerics checks arm BEFORE
+        # quantization so a corrupted checkpoint is caught at init, with
+        # param-path + layer-class attribution (core/policy.py).
+        if sanitize is None:
+            from repro.analysis.sanitizer import sanitize_enabled
+
+            sanitize = sanitize_enabled()
+        self.sanitize = bool(sanitize)
+        if self.sanitize:
+            from repro.core.quant import set_numerics_checks
+
+            set_numerics_checks(True)
         if quantize is not False and quantize is not None:
             formats = self.cfg.quant_format if quantize is True else quantize
             params = quantize_params(params, self.cfg.group_size, tp=tp,
@@ -238,6 +253,10 @@ class InferenceEngine:
             self._generate_jit[sig] = self._build_generate(*sig)
         key = key if key is not None else jax.random.PRNGKey(0)
         toks, logits = self._generate_jit[sig](self.params, batch, key)
+        if self.sanitize:
+            from repro.analysis.sanitizer import check_array
+
+            check_array("generate.logits_last", logits)
         return GenerationResult(tokens=toks, logits_last=logits, steps=max_new_tokens)
 
     # -- speculative decode (serving/spec.py, DESIGN.md §10) -----------------
@@ -359,6 +378,10 @@ class InferenceEngine:
         tokens = np.full((b, max_new), pad, np.int32)
         for i in range(b):
             tokens[i, : len(outs[i])] = outs[i][:max_new]
+        if self.sanitize:
+            from repro.analysis.sanitizer import check_array
+
+            check_array("generate_spec.logits_last", logits_last)
         return GenerationResult(
             tokens=jnp.asarray(tokens), logits_last=jnp.asarray(logits_last),
             steps=stats["verify_steps"], spec_stats=stats,

@@ -68,6 +68,9 @@ class BlockPool:
         self._free = list(range(num_blocks - 1, 0, -1))   # LIFO reuse
         self._free_set = set(self._free)
         self.peak_live = 0
+        # repro-san hook (analysis/shadow.py ShadowBlockTracker): when set,
+        # every alloc/free is mirrored — ownership, generations, poison queue
+        self.shadow = None
 
     @property
     def free_blocks(self) -> int:
@@ -86,9 +89,15 @@ class BlockPool:
         out = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(out)
         self.peak_live = max(self.peak_live, self.live_blocks)
+        if self.shadow is not None:
+            self.shadow.on_alloc(out)
         return out
 
     def free(self, blocks: Sequence[int]) -> None:
+        if self.shadow is not None:
+            # first: the shadow's unowned-free diagnosis (double-free with
+            # generation attribution) beats the bare ValueError below
+            self.shadow.on_free(blocks)
         for b in blocks:
             # a double-free would hand one physical block to two requests —
             # silent KV corruption — so this must not be a strippable assert
@@ -220,6 +229,8 @@ class PagedAdapter(CacheAdapter):
         target = min(math.ceil((p + self._ahead) / bs), self._slot_need[s])
         delta = target - len(self._slot_blocks[s])
         if delta > 0:
+            if self.pool.shadow is not None:
+                self.pool.shadow.set_context(s)   # attribute growth allocs
             new = self.pool.alloc(delta)
             start = len(self._slot_blocks[s])
             self._slot_blocks[s].extend(new)
@@ -331,8 +342,14 @@ class PagedAdapter(CacheAdapter):
         """Pool-level snapshot: the pages plus each slot's block-table row —
         pool rows are unaddressable without the table (engine.snapshot
         carries the same pair for the uniform paged path)."""
+        san = getattr(self.core, "sanitizer", None)
+        if san is not None:
+            san.on_snapshot(slots)
         return {"cache": jax.device_get(cache),
                 "table": self.table[np.asarray(slots)].copy()}
+
+    def san_state(self):
+        return {"pool": self.pool, "table": self.table}
 
 
 class PagedScheduler:

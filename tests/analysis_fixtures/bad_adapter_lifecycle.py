@@ -1,0 +1,24 @@
+"""adapter-lifecycle fixture: leaked allocs, missing san_state, early return.
+
+Never imported (fixtures are AST-only); attribute targets are free names.
+"""
+
+
+class LeakyAdapter:  # LINT: adapter-lifecycle (kind without san_state)
+    kind = "leaky"
+
+    def on_admit(self, s, r, budget):
+        self.blocks[s] = self.pool.alloc(4)  # LINT: adapter-lifecycle
+
+    def on_finish(self, s):
+        self.blocks.pop(s)   # drops the bookkeeping, never pool.free
+
+
+def serve_forever(adapter, requests):
+    cache = adapter.begin_serve()  # LINT: adapter-lifecycle (no end_serve)
+    pending = list(requests)
+    while pending:
+        if not pending[0]:
+            return cache  # LINT: adapter-lifecycle (return inside serve loop)
+        pending = pending[1:]
+    return cache

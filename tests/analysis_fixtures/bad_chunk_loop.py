@@ -4,6 +4,7 @@ Analyzed with HostSyncChecker(loop_files=("*bad_chunk_loop.py",)).
 """
 
 import jax
+import numpy as np
 
 
 class Sched:
@@ -18,4 +19,22 @@ class Sched:
             c = jax.device_get(pending)  # LINT: host-sync
             pending = pending[1:]
             out.extend((a, b, c))
+        return out
+
+
+class CastSched:
+    """Implicit casts on device values inside a per-item for: each one is a
+    hidden ``.item()``."""
+
+    def serve(self, requests):
+        pending = list(requests)
+        out = []
+        while pending:
+            logits_d = self._step(pending)       # *_d naming convention
+            total = self._count(pending)         # tainted: self._* call
+            for r in pending:
+                out.append(float(logits_d))      # LINT: host-sync
+                out.append(int(total))           # LINT: host-sync
+                out.append(np.asarray(logits_d))  # LINT: host-sync
+            pending = pending[1:]
         return out

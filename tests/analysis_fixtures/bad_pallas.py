@@ -6,6 +6,7 @@ Never imported (fixtures are AST-only); ``kernel`` is a free name.
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def bad_index_map_arity(x, m):
@@ -30,6 +31,20 @@ def bad_out_cardinality(x, m):
                    pl.BlockSpec((8,), lambda i: (i,))],
         out_shape=[jax.ShapeDtypeStruct((m,), jnp.float32)],
     )(x)
+
+
+def bad_unused_prefetch(x, tables, b, kv, mb):
+    grid_spec = pltpu.PrefetchScalarGridSpec(  # LINT: pallas-contract
+        num_scalar_prefetch=2,
+        grid=(b, kv, mb),
+        in_specs=[pl.BlockSpec((1, 8, 16), lambda i, j, k, t, p: (i, j, 0))],
+        out_specs=pl.BlockSpec((1, 8, 16), lambda i, j, k, t, p: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((8, 16), jnp.float32),
+    )(tables, x)
 
 
 def bad_vmem_budget(x):

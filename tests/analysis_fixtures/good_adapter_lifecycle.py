@@ -1,0 +1,25 @@
+"""adapter-lifecycle fixture: paired alloc/free, san_state, clean serve."""
+
+
+class PooledAdapter:
+    kind = "pooled"
+
+    def on_admit(self, s, r, budget):
+        self.blocks[s] = self.pool.alloc(4)
+
+    def on_finish(self, s):
+        self.pool.free(self.blocks.pop(s))
+
+    def san_state(self):
+        return {"pool": self.pool, "table": None}
+
+
+def serve(adapter, requests):
+    cache = adapter.begin_serve()
+    pending = list(requests)
+    while pending:
+        if not pending[0]:
+            break
+        pending = pending[1:]
+    adapter.end_serve()
+    return cache

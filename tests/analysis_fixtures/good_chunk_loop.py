@@ -16,6 +16,7 @@ class Sched:
                 out.append(jax.device_get(admission))  # sync 2, spec arm
                 continue
             chunk = jax.device_get(pending)            # sync 2, vanilla arm
+            steps = int(chunk)   # already fetched: cast is host-side, clean
             pending = pending[1:]
-            out.extend((admission, chunk))
+            out.extend((admission, chunk, steps))
         return out

@@ -32,7 +32,7 @@ def prefetch_grid(x, tables, b, kv, mb):
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kv, mb),
-        in_specs=[pl.BlockSpec((1, 8, 16), lambda i, j, k, t, p: (i, j, 0))],
+        in_specs=[pl.BlockSpec((1, 8, 16), lambda i, j, k, t, p: (t[i, j], j, 0))],
         out_specs=pl.BlockSpec((1, 8, 16), lambda i, j, k, t, p: (i, 0, 0)),
     )
     return pl.pallas_call(

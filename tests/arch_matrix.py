@@ -51,3 +51,19 @@ SLOT_STATE_ARCHS = [
     "rwkv6-7b",
     "zamba2-7b",
 ]
+
+# repro-san sweep: every cache-bearing family (cache_kind kv or state) runs
+# the serve-parity sweep under the sanitizer (tests/test_sanitizer.py).
+# Audited by the shadow-coverage checker against the live registry.
+SANITIZED_ARCHS = [
+    "tinyllama-1.1b",
+    "pixtral-12b",
+    "minicpm3-4b",
+    "deepseek-coder-33b",
+    "gemma2-2b",
+    "internlm2-1.8b",
+    "dbrx-132b",
+    "deepseek-v2-lite-16b",
+    "rwkv6-7b",
+    "zamba2-7b",
+]

@@ -1,4 +1,4 @@
-"""repro-lint: engine, allowlist, all five checkers, CLI, and the
+"""repro-lint: engine, allowlist, all seven checkers, CLI, and the
 recompile-guard runtime fixture (scheduler decode loops compile once).
 
 Checker tests assert EXACT finding counts and file:line anchors. Fixture
@@ -8,6 +8,7 @@ that triggers them and can't drift silently.
 """
 
 import ast
+import json
 import os
 import types
 
@@ -16,12 +17,14 @@ import jax.numpy as jnp
 import pytest
 
 from repro.analysis import (
+    AdapterLifecycleChecker,
     HostSyncChecker,
     JitTraceCounter,
     PallasContractChecker,
     QuantInvariantsChecker,
     RecompileChecker,
     RegistryCoverageChecker,
+    ShadowCoverageChecker,
     default_checkers,
 )
 from repro.analysis.__main__ import main as cli_main
@@ -69,10 +72,12 @@ def test_host_sync_flags_syncs_in_jitted_scopes():
 def test_host_sync_chunk_loop_budget_and_nested_for():
     checker = HostSyncChecker(loop_files=("*bad_chunk_loop.py",))
     findings = run_one(checker, "bad_chunk_loop.py")
-    assert len(findings) == 2
+    assert len(findings) == 5
     assert_anchored(findings, "bad_chunk_loop.py", "host-sync")
     msgs = " ".join(f.message for f in findings)
     assert "for-loop" in msgs and "budget" in msgs
+    # implicit casts on device values are flagged like .item()
+    assert "float(logits_d)" in msgs and "int(total)" in msgs
 
 
 @pytest.mark.parametrize("name", ["good_host_sync.py", "good_chunk_loop.py"])
@@ -103,13 +108,14 @@ def test_recompile_clean_fixture():
 
 def test_pallas_contract_flags_all_defect_classes():
     findings = run_one(PallasContractChecker(), "bad_pallas.py")
-    assert len(findings) == 4
+    assert len(findings) == 5
     assert_anchored(findings, "bad_pallas.py", "pallas-contract")
     msgs = [f.message for f in findings]
     assert sum("index_map takes" in m for m in msgs) == 1
     assert sum("no divisibility guard" in m for m in msgs) == 1
     assert sum("out_shape has" in m for m in msgs) == 1
     assert sum("VMEM" in m for m in msgs) == 1
+    assert sum("num_scalar_prefetch" in m for m in msgs) == 1
     assert [f.severity for f in findings if "VMEM" in f.message] == ["warning"]
 
 
@@ -213,6 +219,89 @@ def test_registry_coverage_clean_on_real_registry():
 
 
 # ---------------------------------------------------------------------------
+# adapter-lifecycle
+# ---------------------------------------------------------------------------
+
+def test_adapter_lifecycle_flags_leaks_and_early_returns():
+    findings = run_one(AdapterLifecycleChecker(), "bad_adapter_lifecycle.py")
+    assert len(findings) == 4
+    assert_anchored(findings, "bad_adapter_lifecycle.py", "adapter-lifecycle")
+    msgs = " ".join(f.message for f in findings)
+    assert "no on_finish that frees" in msgs
+    assert "san_state" in msgs
+    assert "never calls end_serve" in msgs
+    assert "return inside" in msgs
+
+
+def test_adapter_lifecycle_clean_fixture():
+    assert run_one(AdapterLifecycleChecker(),
+                   "good_adapter_lifecycle.py") == []
+
+
+def test_adapter_lifecycle_clean_on_real_serving():
+    findings, _ = run_analysis([AdapterLifecycleChecker()],
+                               ["src/repro/serving", "tests"], ROOT)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# shadow-coverage
+# ---------------------------------------------------------------------------
+
+def test_shadow_coverage_missing_and_overstating_entries(tmp_path):
+    (tmp_path / "matrix.py").write_text(
+        "SANITIZED_ARCHS = [\n"
+        "    'arch-kv',\n"
+        "    'arch-none',\n"
+        "    'arch-ghost',\n"
+        "]\n")
+    (tmp_path / "test_san.py").write_text(
+        "from arch_matrix import SANITIZED_ARCHS\n")
+    fakes = {
+        "arch-kv": _fake_model(cache_kind="kv"),
+        "arch-state": _fake_model(cache_kind="state"),
+        "arch-none": _fake_model(cache_kind="none"),
+    }
+    checker = ShadowCoverageChecker(
+        archs=list(fakes), build=fakes.__getitem__,
+        matrix_path="matrix.py", test_path="test_san.py")
+    msgs = [f.message for f in checker.check_project(str(tmp_path))]
+    assert len(msgs) == 3
+    assert sum("arch-state" in m and "no SANITIZED_ARCHS entry" in m
+               for m in msgs) == 1
+    assert sum("unknown arch 'arch-ghost'" in m for m in msgs) == 1
+    assert sum("arch-none" in m and "overstates" in m for m in msgs) == 1
+
+
+def test_shadow_coverage_missing_list(tmp_path):
+    (tmp_path / "matrix.py").write_text("OTHER = []\n")
+    fakes = {"arch-kv": _fake_model(cache_kind="kv")}
+    checker = ShadowCoverageChecker(
+        archs=list(fakes), build=fakes.__getitem__,
+        matrix_path="matrix.py", test_path="test_san.py")
+    msgs = [f.message for f in checker.check_project(str(tmp_path))]
+    assert len(msgs) == 1 and "SANITIZED_ARCHS missing" in msgs[0]
+
+
+def test_shadow_coverage_requires_consuming_test(tmp_path):
+    (tmp_path / "matrix.py").write_text("SANITIZED_ARCHS = ['arch-kv']\n")
+    fakes = {"arch-kv": _fake_model(cache_kind="kv")}
+    checker = ShadowCoverageChecker(
+        archs=list(fakes), build=fakes.__getitem__,
+        matrix_path="matrix.py", test_path="test_san.py")
+    msgs = [f.message for f in checker.check_project(str(tmp_path))]
+    assert len(msgs) == 1 and "test module missing" in msgs[0]
+    # a test module that never reads the ledger is as bad as no module
+    (tmp_path / "test_san.py").write_text("def test_nothing(): pass\n")
+    msgs = [f.message for f in checker.check_project(str(tmp_path))]
+    assert len(msgs) == 1 and "never references" in msgs[0]
+
+
+def test_shadow_coverage_clean_on_real_registry():
+    assert list(ShadowCoverageChecker().check_project(ROOT)) == []
+
+
+# ---------------------------------------------------------------------------
 # engine: findings, allowlist, parse errors
 # ---------------------------------------------------------------------------
 
@@ -268,7 +357,7 @@ def test_parse_failure_is_a_finding(tmp_path):
 # CLI
 # ---------------------------------------------------------------------------
 
-def test_cli_lists_all_five_checkers(capsys):
+def test_cli_lists_all_checkers(capsys):
     assert cli_main(["--list"]) == 0
     out = capsys.readouterr().out
     for c in default_checkers():
@@ -291,8 +380,23 @@ def test_cli_rejects_unknown_checker_id():
     assert cli_main(["--select", "no-such-checker"]) == 2
 
 
+def test_cli_json_emits_severity_and_col(capsys):
+    rc = cli_main([fixture_path("bad_recompile.py"), "--root", ROOT,
+                   "--select", "recompile-guard", "--json"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    recs = [json.loads(line) for line in out.splitlines() if line.strip()]
+    assert recs
+    for r in recs:
+        assert set(r) == {"checker", "path", "line", "col", "severity",
+                          "message", "anchor"}
+        assert r["severity"] in ("error", "warning")
+        assert isinstance(r["col"], int)
+        assert r["anchor"] == f"{r['path']}:{r['line']}"
+
+
 def test_cli_clean_on_repo_tree():
-    """The acceptance gate: the full five-checker pass over the repo tree
+    """The acceptance gate: the full seven-checker pass over the repo tree
     (same invocation as CI) reports nothing."""
     assert cli_main(["--root", ROOT]) == 0
 

@@ -1,0 +1,487 @@
+"""repro-san: the cache-memory and numerics sanitizer (DESIGN.md §13).
+
+Three layers of coverage:
+
+- **Planted bugs**: adapter subclasses that deliberately use-after-free a
+  KV block, leak blocks at finish, or write NaN into the cache — each must
+  raise ``SanitizerError``/``QuantNumericsError`` WITH attribution (block +
+  generation, request id, leaf + layer).
+- **Shadow unit tests**: the host-side mirrors in isolation (double-reserve,
+  unowned free, frozen-slot drift, pad rows, dead-slot snapshots) plus the
+  paged poison oracle's committed-position semantics.
+- **The parity sweep**: every arch in ``SANITIZED_ARCHS`` (the ledger the
+  shadow-coverage checker audits) serves bit-identically with the sanitizer
+  on vs off, and finalizes with a clean audit. This is the load-bearing
+  property: repro-san must observe, never perturb.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from arch_matrix import SANITIZED_ARCHS
+from repro.analysis.sanitizer import (
+    ENV_VAR,
+    Sanitizer,
+    check_array,
+    sanitize_enabled,
+)
+from repro.analysis.shadow import (
+    OVERFLOW_LIMIT,
+    POISON,
+    SanitizerError,
+    ShadowBlockTracker,
+    SlotShadow,
+)
+from repro.core.policy import quantize_params
+from repro.core.quant import (
+    QuantNumericsError,
+    QuantizedTensor,
+    get_format,
+    numerics_checks,
+    numerics_checks_enabled,
+    set_numerics_checks,
+)
+from repro.kernels.ref import paged_poison_counts
+from repro.models.registry import build, load_config
+from repro.serving.batching import serve_ragged
+from repro.serving.core import Request, RecurrentAdapter, SchedulerCore
+from repro.serving.engine import InferenceEngine
+from repro.serving.paged import BlockPool, PagedAdapter, PagedScheduler
+
+STEPS = 3
+PROMPTS = [[5, 3], [7, 1, 4, 2, 6], [9, 2, 8]]
+
+
+@pytest.fixture(autouse=True)
+def _numerics_isolation():
+    """Sanitized engines flip the process-global numerics switch; keep each
+    test hermetic."""
+    prev = numerics_checks_enabled()
+    yield
+    set_numerics_checks(prev)
+
+
+def _setup(arch):
+    cfg = load_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return _setup("tinyllama-1.1b")
+
+
+@pytest.fixture(scope="module")
+def rwkv():
+    return _setup("rwkv6-7b")
+
+
+def _requests(prompts=PROMPTS, max_new=None):
+    return [Request(i, list(p), max_new=max_new) for i, p in enumerate(prompts)]
+
+
+# ---------------------------------------------------------------------------
+# shadow state: host-side mirrors in isolation
+# ---------------------------------------------------------------------------
+
+def test_poison_is_finite_and_below_overflow_limit():
+    # NaN poison would infect masked softmax columns (0 * NaN) and break the
+    # parity sweep below; the whole scheme rests on these two properties
+    assert np.isfinite(POISON)
+    assert abs(POISON) < OVERFLOW_LIMIT
+
+
+def test_tracker_double_reserve_and_unowned_free():
+    t = ShadowBlockTracker(8)
+    t.set_context(0)
+    t.on_alloc([3, 4])
+    with pytest.raises(SanitizerError, match="double-reserve of block 3"):
+        t.on_alloc([3])
+    with pytest.raises(SanitizerError, match="unowned block 5"):
+        t.on_free([5])
+
+
+def test_tracker_generations_and_poison_queue():
+    t = ShadowBlockTracker(8)
+    t.set_context(1)
+    t.on_alloc([2])
+    t.on_free([2])
+    assert t.generation[2] == 1
+    assert t.drain_poison() == [2]
+    assert t.drain_poison() == []       # drained exactly once
+    t.on_alloc([2])                      # recycled: new generation, same id
+    t.on_free([2])
+    assert t.generation[2] == 2
+
+
+def test_tracker_audits_catch_leaks():
+    t = ShadowBlockTracker(8)
+    t.set_context(1)
+    t.on_alloc([6])
+    with pytest.raises(SanitizerError, match="leak — request r9"):
+        t.audit_request(1, "r9")
+    with pytest.raises(SanitizerError, match="leak at finalize"):
+        t.audit_final()
+
+
+def test_slot_shadow_lifecycle_violations():
+    sh = SlotShadow(2, "paged")
+    sh.on_admit(0, 11)
+    with pytest.raises(SanitizerError, match="double-admit"):
+        sh.on_admit(0, 12)
+    with pytest.raises(SanitizerError, match="non-live slot 1"):
+        sh.on_finish(1, 0)
+    sh.on_finish(0, 7)
+    sh.check_frozen([7, 0])              # frozen at 7: no drift, clean
+    with pytest.raises(SanitizerError, match="frozen slot 0.*7 -> 9"):
+        sh.check_frozen([9, 0])
+    assert sh.live_slots() == []
+    with pytest.raises(SanitizerError, match="snapshot of non-live slot 0"):
+        sh.check_snapshot([0])
+
+
+def test_slot_shadow_pad_rows_recurrent_only():
+    # a padded admission group corrupts a recurrence but is the NORM for the
+    # masked kv prefill — the check must be kind-gated
+    SlotShadow(2, "paged").check_prefill_group([0], [3], 4)
+    with pytest.raises(SanitizerError, match="pad rows entering"):
+        SlotShadow(2, "recurrent").check_prefill_group([0], [3], 4)
+
+
+def test_paged_poison_oracle_counts_committed_positions_only():
+    L, NB, BS, KV, hd = 1, 4, 2, 1, 2
+    k = np.zeros((L, NB, BS, KV, hd), np.float32)
+    v = np.zeros_like(k)
+    k[0, 2, 0] = POISON                  # physical block 2, in-block pos 0
+    table = jnp.asarray([[2, 0]], jnp.int32)   # slot 0: virtual block 0 -> 2
+
+    def counts(pos):
+        return np.asarray(paged_poison_counts(
+            jnp.asarray(k), jnp.asarray(v), table,
+            jnp.asarray([pos], jnp.int32), POISON))
+
+    assert counts(1).tolist() == [[[1, 0]]]    # t=0 committed: reachable
+    assert counts(0).sum() == 0          # lookahead block: masked, clean
+    v[0, 2, 0] = POISON                  # K and V hits count independently
+    assert counts(1).tolist() == [[[2, 0]]]
+
+
+def test_sanitizer_snapshot_hooks_dead_slot_and_phantom_blocks():
+    class _Core:
+        slots = 2
+
+    class _Adapter:
+        kind = "paged"
+
+        def __init__(self, pool, table):
+            self.pool, self.table = pool, table
+
+        def san_state(self):
+            return {"pool": self.pool, "table": self.table}
+
+    pool = BlockPool(5, 4)
+    table = np.zeros((2, 2), np.int32)
+    san = Sanitizer(_Core())
+    san.begin_serve(_Adapter(pool, table), cache=None)
+    san.on_admit(0, Request(0, [1, 2]))
+    table[0, 0] = pool.alloc(1)[0]
+    san.on_snapshot([0])                 # live slot, table == shadow: clean
+    table[0, 1] = 3                      # mapping the shadow never saw
+    with pytest.raises(SanitizerError, match="phantom"):
+        san.on_snapshot([0])
+    table[0, 1] = 0
+    with pytest.raises(SanitizerError, match="non-live slot 1"):
+        san.on_snapshot([1])
+
+
+# ---------------------------------------------------------------------------
+# numerics tripwires: quantize/dequantize boundaries, logits, cache leaves
+# ---------------------------------------------------------------------------
+
+def test_check_array_attributes_first_bad_index():
+    check_array("ok", jnp.ones((2, 3)))
+    check_array("ints", jnp.ones((4,), jnp.int32))   # integer: no-op
+    x = jnp.ones((2, 3)).at[1, 2].set(jnp.nan)
+    with pytest.raises(SanitizerError, match=r"logits.*index \(1, 2\)"):
+        check_array("logits", x)
+
+
+def test_quantize_guard_flags_nan_input_only_when_armed():
+    fmt = get_format("int8")
+    x = jnp.ones((2, 32)).at[0, 0].set(jnp.nan)
+    with numerics_checks(True):
+        with pytest.raises(QuantNumericsError, match=r"quantize\[int8\].input"):
+            fmt.quantize(x, 32)
+    fmt.quantize(x, 32)                  # unarmed: legacy silent behavior
+
+
+def test_dequantize_guard_flags_corrupt_scales():
+    fmt = get_format("int8")
+    qt = fmt.quantize(jnp.ones((2, 32)), 32)
+    bad = dataclasses.replace(
+        qt, scales=jnp.asarray(qt.scales).at[0, 0].set(jnp.inf))
+    with numerics_checks(True):
+        with pytest.raises(QuantNumericsError, match=r"dequantize\[int8\].scales"):
+            fmt.dequantize(bad)
+    fmt.dequantize(bad)
+
+
+def _corrupt_first_quantized_leaf(cfg, params):
+    """NaN-poison the first param leaf the quant policy actually quantizes."""
+    qp = quantize_params(params, cfg.group_size)
+    qleaves = jax.tree_util.tree_flatten_with_path(
+        qp, is_leaf=lambda x: isinstance(x, QuantizedTensor))[0]
+    target = next(jax.tree_util.keystr(kp) for kp, leaf in qleaves
+                  if isinstance(leaf, QuantizedTensor))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    bad = [leaf.at[(0,) * leaf.ndim].set(jnp.nan)
+           if jax.tree_util.keystr(kp) == target else leaf
+           for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, bad)
+
+
+def test_corrupt_checkpoint_attributed_param_and_layer_class(tiny):
+    cfg, model, params = tiny
+    bad = _corrupt_first_quantized_leaf(cfg, params)
+    with numerics_checks(True):
+        with pytest.raises(QuantNumericsError) as ei:
+            quantize_params(bad, cfg.group_size)
+    msg = str(ei.value)
+    assert "param" in msg and "layer-class" in msg
+
+
+def test_sanitized_engine_rejects_corrupt_checkpoint_at_init(tiny):
+    # the end-to-end path: sanitize=True arms the guards BEFORE PTQ runs,
+    # so a corrupted checkpoint fails at load, not as garbage generations
+    cfg, model, params = tiny
+    bad = _corrupt_first_quantized_leaf(cfg, params)
+    with pytest.raises(QuantNumericsError, match="layer-class"):
+        InferenceEngine(model, bad, cache_len=16, quantize=True, sanitize=True)
+
+
+# ---------------------------------------------------------------------------
+# planted bugs: each classic corruption raises with attribution
+# ---------------------------------------------------------------------------
+
+class UafAdapter(PagedAdapter):
+    """Frees a live slot's first block but leaves the table mapping it —
+    the silent stale-KV read the poison oracle exists to catch."""
+
+    tripped = False
+
+    def before_round(self, pos, live):
+        super().before_round(pos, live)
+        if not self.tripped:
+            s = int(np.flatnonzero(live)[0])
+            blk = self._slot_blocks[s][0]
+            self.pool.free([blk])        # out-of-band free: pre_round poisons
+            self.tripped = True
+
+
+def test_planted_use_after_free_caught_with_block_attribution(tiny):
+    cfg, model, params = tiny
+    eng = InferenceEngine(model, params, cache_len=16, sanitize=True)
+    core = SchedulerCore(eng, UafAdapter(eng), slots=1, chunk=2)
+    with pytest.raises(SanitizerError) as ei:
+        core.serve([Request(0, [5, 3, 1, 7], max_new=6)], 6)
+    msg = str(ei.value)
+    assert "use-after-free" in msg
+    assert "freed physical block" in msg and "generation" in msg
+
+
+class LeakOnFinishAdapter(PagedAdapter):
+    """Drops the bookkeeping at finish but never returns the blocks."""
+
+    def on_finish(self, s):
+        self._slot_blocks[s], self._slot_need[s] = [], 0
+        self.table[s, :] = 0
+        self._slot_live[s] = False       # everything but pool.free
+
+
+def test_planted_leak_caught_at_request_finish(tiny):
+    cfg, model, params = tiny
+    eng = InferenceEngine(model, params, cache_len=16, sanitize=True)
+    core = SchedulerCore(eng, LeakOnFinishAdapter(eng), slots=1, chunk=2)
+    with pytest.raises(SanitizerError, match="leak — request 0.*still owns"):
+        core.serve([Request(0, [5, 3, 1], max_new=2)], 2)
+
+
+class NanCacheAdapter(PagedAdapter):
+    """Writes one NaN into the KV pool after a decode round."""
+
+    tripped = False
+
+    def decode_round(self, params, tok, cache, pos, live, remaining, keys):
+        toks, steps, cache, pos = super().decode_round(
+            params, tok, cache, pos, live, remaining, keys)
+        if not self.tripped:
+            cache = dict(cache)
+            cache["k_pages"] = cache["k_pages"].at[0, 2].set(jnp.nan)
+            self.tripped = True
+        return toks, steps, cache, pos
+
+
+def test_planted_nan_cache_caught_with_leaf_and_layer(tiny):
+    cfg, model, params = tiny
+    eng = InferenceEngine(model, params, cache_len=16, sanitize=True)
+    core = SchedulerCore(eng, NanCacheAdapter(eng), slots=1, chunk=2)
+    with pytest.raises(SanitizerError) as ei:
+        core.serve([Request(0, [5, 3, 1, 7], max_new=6)], 6)
+    msg = str(ei.value)
+    assert "k_pages" in msg and "layer" in msg and "[0]" in msg
+
+
+# ---------------------------------------------------------------------------
+# enablement: engine flag, REPRO_SAN env, core inheritance
+# ---------------------------------------------------------------------------
+
+def test_env_var_arms_engines(tiny, monkeypatch):
+    cfg, model, params = tiny
+    monkeypatch.setenv(ENV_VAR, "1")
+    assert sanitize_enabled()
+    assert InferenceEngine(model, params, cache_len=16).sanitize
+    monkeypatch.setenv(ENV_VAR, "0")
+    assert not sanitize_enabled()
+    assert not InferenceEngine(model, params, cache_len=16).sanitize
+    monkeypatch.setenv(ENV_VAR, "1")
+    # explicit construction beats the environment
+    assert not InferenceEngine(
+        model, params, cache_len=16, sanitize=False).sanitize
+
+
+def test_core_inherits_engine_sanitize(tiny):
+    cfg, model, params = tiny
+    eng = InferenceEngine(model, params, cache_len=16, sanitize=True)
+    assert SchedulerCore(eng, PagedAdapter(eng), slots=2).sanitizer is not None
+    assert SchedulerCore(eng, PagedAdapter(eng), slots=2,
+                         sanitize=False).sanitizer is None
+    plain = InferenceEngine(model, params, cache_len=16, sanitize=False)
+    assert SchedulerCore(plain, PagedAdapter(plain), slots=2).sanitizer is None
+
+
+# ---------------------------------------------------------------------------
+# the parity sweep: sanitize must observe, never perturb
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", SANITIZED_ARCHS)
+def test_sanitized_serve_bit_identical_and_audit_clean(arch):
+    """Every cache-bearing family (the SANITIZED_ARCHS ledger audited by the
+    shadow-coverage checker) serves its preferred mode under REPRO_SAN with
+    bit-identical tokens and a clean end-of-serve audit — poison fills and
+    per-round tripwires included."""
+    cfg, model, params = _setup(arch)
+    plain = InferenceEngine(model, params, cache_len=16, sanitize=False)
+    san = InferenceEngine(model, params, cache_len=16, sanitize=True)
+    want = serve_ragged(plain, _requests(), STEPS, slots=2, chunk=2)
+    got = serve_ragged(san, _requests(), STEPS, slots=2, chunk=2)
+    for g, w in zip(got, want):
+        assert g.id == w.id
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+
+
+def test_mixed_budgets_exercise_poison_path_cleanly(tiny):
+    # early finishes free + poison blocks mid-serve while others decode on:
+    # the strongest "poison never reaches live data" case on the paged path
+    cfg, model, params = tiny
+    plain = InferenceEngine(model, params, cache_len=16, sanitize=False)
+    san = InferenceEngine(model, params, cache_len=16, sanitize=True)
+    def reqs():
+        return [Request(0, [5, 3], max_new=1),
+                Request(1, [7, 1, 4, 2, 6], max_new=6),
+                Request(2, [9, 2, 8], max_new=3)]
+    want = serve_ragged(plain, reqs(), 6, mode="paged", slots=2, chunk=2)
+    got = serve_ragged(san, reqs(), 6, mode="paged", slots=2, chunk=2)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+
+
+# ---------------------------------------------------------------------------
+# snapshots under the sanitizer: mid-flight, restore, run to completion
+# ---------------------------------------------------------------------------
+
+class MidServeSnapPaged(PagedAdapter):
+    """Snapshots every live slot once, at the first decode round."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.snaps = []
+
+    def decode_round(self, params, tok, cache, pos, live, remaining, keys):
+        if not self.snaps:
+            slots = np.flatnonzero(np.asarray(live)).tolist()
+            self.snaps.append((self.snapshot(cache, slots),
+                               np.asarray(pos)[slots].copy(),
+                               np.asarray(tok)[slots].copy()))
+        return super().decode_round(
+            params, tok, cache, pos, live, remaining, keys)
+
+
+def test_paged_snapshot_midflight_restore_and_resume(tiny):
+    cfg, model, params = tiny
+    eng = InferenceEngine(model, params, cache_len=16, sanitize=True)
+    adapter = MidServeSnapPaged(eng)
+    core = SchedulerCore(eng, adapter, slots=2, chunk=2)
+    got = core.serve(_requests(), 4)     # clean finalize despite the snapshot
+    (snap, pos_s, tok_s), = adapter.snaps
+    for leaf in jax.tree.leaves(snap["cache"]):
+        if np.issubdtype(np.asarray(leaf).dtype, np.floating):
+            assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    # restore the pool + tables and take a decode step on the snapped slots
+    logits, _ = model.decode_paged(
+        eng.params, jnp.asarray(tok_s), jax.device_put(snap["cache"]),
+        jnp.asarray(snap["table"]), jnp.asarray(pos_s))
+    check_array("restored.decode.logits", logits)
+    # ...and the snapshotting, sanitized serve matched the vanilla scheduler
+    plain = InferenceEngine(model, params, cache_len=16, sanitize=False)
+    want = PagedScheduler(plain, slots=2, chunk=2).serve(_requests(), 4)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+
+
+class MidServeSnapRecurrent(RecurrentAdapter):
+    def __init__(self, engine):
+        super().__init__(engine)
+        self.snaps = []
+
+    def decode_round(self, params, tok, cache, pos, live, remaining, keys):
+        if not self.snaps:
+            slots = np.flatnonzero(np.asarray(live)).tolist()
+            self.snaps.append(self.snapshot(cache, slots))
+        return super().decode_round(
+            params, tok, cache, pos, live, remaining, keys)
+
+
+def test_recurrent_snapshot_midflight_clean_and_parity(rwkv):
+    cfg, model, params = rwkv
+    eng = InferenceEngine(model, params, cache_len=16, sanitize=True)
+    adapter = MidServeSnapRecurrent(eng)
+    core = SchedulerCore(eng, adapter, slots=2, chunk=2)
+    got = core.serve(_requests(), 4)
+    rows, = adapter.snaps
+    for leaf in jax.tree.leaves(rows):
+        if np.issubdtype(np.asarray(leaf).dtype, np.floating):
+            assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    plain = InferenceEngine(model, params, cache_len=16, sanitize=False)
+    want = serve_ragged(plain, _requests(), 4, mode="continuous",
+                        slots=2, chunk=2)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+
+
+def test_engine_snapshot_restore_roundtrip_with_block_table():
+    cache = {"k": jnp.ones((2, 3)), "v": jnp.zeros((2, 3))}
+    snap = InferenceEngine.snapshot(
+        cache, jnp.asarray([4, 1]), jnp.asarray([7, 2]),
+        block_table=np.asarray([[1, 0], [2, 0]]))
+    c2, pos, toks, table = InferenceEngine.restore(None, snap)
+    np.testing.assert_array_equal(np.asarray(c2["k"]), np.asarray(cache["k"]))
+    np.testing.assert_array_equal(np.asarray(pos), [4, 1])
+    np.testing.assert_array_equal(np.asarray(toks), [7, 2])
+    assert table.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(table), [[1, 0], [2, 0]])
