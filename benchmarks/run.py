@@ -21,6 +21,10 @@
   recurrent -> throughput    (rwkv6 slot-state continuous batching vs
                               exact-length bucket-serial; exits non-zero
                               below the 1.3x tok/s gate)
+  xray -> xray_bench         (bytes-per-decode-step contract: compiled-HLO
+                              HBM traffic vs the registry nbytes model for
+                              tinyllama int8/int4/mixed; exits non-zero on
+                              >15% discrepancy — DESIGN.md §14)
 
 A suite returning False marks the run failed (exit 1).
 """
@@ -43,6 +47,7 @@ def main() -> int:
         quant_error,
         quality,
         throughput,
+        xray_bench,
     )
 
     only = sys.argv[1] if len(sys.argv) > 1 else None
@@ -57,6 +62,7 @@ def main() -> int:
         "paged": throughput.run_paged,
         "spec": throughput.run_spec,
         "recurrent": throughput.run_recurrent,
+        "xray": xray_bench.run,
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; valid: {', '.join(suites)}", file=sys.stderr)

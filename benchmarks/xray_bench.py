@@ -1,0 +1,40 @@
+"""xray bytes-contract sweep: model-vs-HLO HBM bytes per decode step.
+
+For each tinyllama quant preset (int8 / packed int4 / mixed) this compiles
+the full-size single-request decode step on CPU from eval_shape-sized
+inputs (no weights materialized — the same rows the ``xray-bytes`` checker
+audits, shared via the ``repro.analysis.xray`` catalog), walks the
+optimized HLO with ``repro.analysis.hlo``, and prints both sides:
+
+  name                          us_per_call   derived
+  xray_bytes_int8               -             hlo_mb=...;model_mb=...;delta=+6.1%
+
+The suite FAILS (returns False -> ``run.py`` exit 1) when any preset's
+compiled traffic disagrees with the registry nbytes/bits_per_weight model
+by more than ``BYTES_RTOL`` (15%) — the CI gate that "int4" actually
+streams packed nibbles, not dequantized f32 (DESIGN.md §14).
+"""
+
+from __future__ import annotations
+
+
+def run() -> bool:
+    from repro.analysis.hlo import analyze
+    from repro.analysis.xray import BYTES_RTOL, catalog
+
+    ok = True
+    rows = [p for p in catalog() if p.expected_bytes is not None]
+    if not rows:
+        print("xray_bytes,-,error=no bytes rows in catalog")
+        return False
+    for prog in rows:
+        rep = analyze(prog.hlo_text)
+        delta = rep.hbm_bytes / prog.expected_bytes - 1.0
+        bad = abs(delta) > BYTES_RTOL
+        ok = ok and not bad
+        print(f"xray_bytes_{prog.fmt},-,"
+              f"hlo_mb={rep.hbm_bytes / 1e6:.1f};"
+              f"model_mb={prog.expected_bytes / 1e6:.1f};"
+              f"delta={delta:+.1%};tol={BYTES_RTOL:.0%}"
+              + (";FAIL" if bad else ""))
+    return ok

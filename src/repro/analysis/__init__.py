@@ -26,6 +26,12 @@ from repro.analysis.recompile import (
 )
 from repro.analysis.registry_coverage import RegistryCoverageChecker
 from repro.analysis.shadow_coverage import ShadowCoverageChecker
+from repro.analysis.xray import (
+    XrayBytesChecker,
+    XrayCollectiveChecker,
+    XrayDequantChecker,
+    XrayDonationChecker,
+)
 
 __all__ = [
     "Allowlist",
@@ -40,6 +46,10 @@ __all__ = [
     "RegistryCoverageChecker",
     "AdapterLifecycleChecker",
     "ShadowCoverageChecker",
+    "XrayDonationChecker",
+    "XrayDequantChecker",
+    "XrayBytesChecker",
+    "XrayCollectiveChecker",
     "JitTraceCounter",
     "count_jit_traces",
     "default_checkers",
@@ -47,7 +57,10 @@ __all__ = [
 
 
 def default_checkers() -> list:
-    """Fresh instances of the seven repo checkers, in stable order."""
+    """Fresh instances of the eleven repo checkers, in stable order: the
+    seven source/runtime checkers, then the four compiled-program xray
+    contracts (DESIGN.md §14 — these compile the serving catalog once per
+    process and share it)."""
     return [
         HostSyncChecker(),
         RecompileChecker(),
@@ -56,4 +69,8 @@ def default_checkers() -> list:
         RegistryCoverageChecker(),
         AdapterLifecycleChecker(),
         ShadowCoverageChecker(),
+        XrayDonationChecker(),
+        XrayDequantChecker(),
+        XrayBytesChecker(),
+        XrayCollectiveChecker(),
     ]

@@ -7,6 +7,7 @@ Exit codes: 0 clean, 1 findings (or stale allowlist entries with
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import json
 import os
 import sys
@@ -40,7 +41,8 @@ def main(argv=None) -> int:
     ap.add_argument("--allowlist", default=".repro-lint-allow",
                     help="allowlist file, repo-relative (default: %(default)s)")
     ap.add_argument("--select", action="append", default=None, metavar="ID",
-                    help="run only these checker ids (repeatable)")
+                    help="run only these checker ids; fnmatch globs allowed, "
+                         "e.g. 'xray-*' (repeatable)")
     ap.add_argument("--list", action="store_true",
                     help="list checker ids and exit")
     ap.add_argument("--json", action="store_true", dest="as_json",
@@ -56,12 +58,14 @@ def main(argv=None) -> int:
         return 0
     if args.select:
         known = {c.id for c in checkers}
-        bad = set(args.select) - known
+        bad = [pat for pat in args.select
+               if not any(fnmatch.fnmatch(k, pat) for k in known)]
         if bad:
-            print(f"unknown checker ids {sorted(bad)}; known: {sorted(known)}",
-                  file=sys.stderr)
+            print(f"no checker matches {sorted(set(bad))}; "
+                  f"known: {sorted(known)}", file=sys.stderr)
             return 2
-        checkers = [c for c in checkers if c.id in set(args.select)]
+        checkers = [c for c in checkers
+                    if any(fnmatch.fnmatch(c.id, pat) for pat in args.select)]
 
     root = os.path.abspath(args.root) if args.root else find_root(os.getcwd())
     allow_path = os.path.join(root, args.allowlist)

@@ -1,0 +1,717 @@
+"""Shared post-SPMD HLO analysis: FLOPs, HBM traffic, collective bytes,
+aliasing — with while-loop (lax.scan) trip-count expansion.
+
+This is the library half of what used to live in ``launch/hlo_analysis.py``
+(that module is now a thin re-export shim).  It is consumed by two very
+different callers:
+
+  * ``launch/dryrun.py`` — the roofline report (``roofline_from_compiled``);
+  * ``analysis/xray.py`` — compiled-program contract checkers (donation,
+    dequant streaming, bytes-per-step, collectives; DESIGN.md §14).
+
+Why not just ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts a
+while body ONCE, so any scan-over-layers model (all of ours) is undercounted
+by ~num_layers x.  We therefore walk the per-device optimized HLO text
+ourselves:
+
+  * instruction table: every ``%name = shape op(operands)`` line, so operand
+    shapes resolve through references;
+  * call graph: while(condition/body) edges carry the loop trip count
+    (largest integer constant in the condition computation — exact for
+    lax.scan), fusion/call edges carry 1;
+  * FLOPs: dot/convolution instructions (2 * numel(out) * contraction),
+    walked through fusion bodies too;
+  * HBM bytes: operand + output bytes of materialized instructions (fusion
+    boundaries), skipping bookkeeping ops — the read+write traffic model;
+  * collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute.
+
+Byte accounting is bits-based: sub-byte dtypes (s4/u4 = 4 bits, u1/s1 =
+1 bit) are charged at their packed size, ``ceil(numel * bits / 8)`` — a
+packed-int4 buffer costs half an int8 one, not the same (the old table
+said 1 byte/elem for s4 and overstated int4 traffic ~2x).
+
+TPU normalization (documented in DESIGN.md §5): the CPU backend promotes
+bf16 math to f32 and materializes int4 nibble-unpacking as full-width
+integer buffers; a TPU module contains neither.  Rules:
+
+  * pure dtype-convert instructions/fusions cost 0 bytes;
+  * operand reads resolve through convert/bitcast/copy chains and are
+    charged at the NARROWEST width along the chain;
+  * slice+convert fusions cost 0 bytes; consumers charge the slice read;
+  * integer unpack fusions (slices + shifts/bitwise ops, no arithmetic —
+    the pack_int4 nibble-decode) cost 0 bytes; consumers charge the
+    PACKED slice read resolved through the fusion body.
+
+Everything is per device.  ``compiled.cost_analysis()`` numbers are kept
+in the roofline report as a cross-check column.
+
+Roofline (TPU v5e targets; container is CPU-only so terms are derived):
+  compute term    = FLOPs / 197e12            per chip
+  memory term     = HBM bytes / 819e9         per chip
+  collective term = collective bytes / 50e9   per ICI link
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link
+
+COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+    # *-done ops alias the corresponding -start buffers
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+}
+
+# Bits per element. Sub-byte dtypes are the whole point: s4/u4 pack two
+# elements per byte, pred/u1/s1 one per bit in packed layouts.
+DTYPE_BITS = {
+    "pred": 8, "s8": 8, "u8": 8, "s16": 16, "u16": 16, "s32": 32,
+    "u32": 32, "s64": 64, "u64": 64, "f16": 16, "bf16": 16, "f32": 32,
+    "f64": 64, "c64": 64, "c128": 128, "s4": 4, "u4": 4,
+    "f8e4m3fn": 8, "f8e5m2": 8, "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(DTYPE_BITS) + r")\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?.*?\)?\s*?)\s*([a-z][a-z0-9\-]*)\("
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+_ALIAS_RE = re.compile(
+    r"\{([0-9,\s]*)\}:\s*\((\d+),\s*\{([0-9,\s]*)\}(?:,\s*(may-alias|must-alias))?\)"
+)
+
+
+def shape_bytes(s: str) -> float:
+    """Total bytes of every shape token in ``s`` (tuples sum), bits-exact
+    for sub-byte dtypes (``ceil(numel * bits / 8)`` per token)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(s):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += (n * DTYPE_BITS[dt] + 7) // 8
+    return total
+
+
+def shape_numel(s: str) -> int:
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def dims_key(shape: str) -> str:
+    """Dims signature ignoring dtype/layout: CPU-backend f32<->bf16
+    promotion around dots must not defeat in-place alias detection
+    (on TPU those converts don't exist)."""
+    m = _SHAPE_RE.search(shape)
+    return m.group(2) if m else shape.strip()
+
+
+def shape_dtype(shape: str) -> str:
+    m = _SHAPE_RE.search(shape)
+    return m.group(1) if m else ""
+
+
+# Back-compat: fractional bytes/elem (s4 = 0.5). Old callers indexed a
+# whole-byte table; new code should use DTYPE_BITS.
+_DTYPE_BYTES = {dt: bits / 8 for dt, bits in DTYPE_BITS.items()}
+
+_shape_bytes_from_str = shape_bytes
+_shape_numel = shape_numel
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: list[str]
+    line: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class HLOReport:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    bytes_by_kind: dict[str, float]
+    flops_by_op: dict[str, float]
+    num_collectives: dict[str, int]
+
+
+def parse_module(hlo_text: str):
+    """-> (comps: name->list[Instr], entry_name, instr_table name->Instr)."""
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    current = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if "->" in line and line.endswith("{"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+                continue
+        if line.strip() == "}":
+            continue
+        if current is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, shape, op = im.group(1), im.group(2), im.group(3)
+        # operands: %refs inside the first paren group
+        paren = line.find(op + "(") + len(op)
+        depth, j = 0, paren
+        end = len(line)
+        for j in range(paren, len(line)):
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = j
+                    break
+        operands = _OPERAND_RE.findall(line[paren:end])
+        comps[current].append(
+            Instr(name, shape, op, operands, line, is_root="ROOT" in line.split("=")[0])
+        )
+    table = {i.name: i for instrs in comps.values() for i in instrs}
+    return comps, entry, table
+
+
+def parse_input_output_aliases(hlo_text: str) -> list[tuple[tuple, int, tuple, str]]:
+    """Parse the module-header ``input_output_alias={ {out}: (param, {idx},
+    kind) }`` donation/aliasing map from optimized HLO text.
+
+    -> [(output_index_tuple, param_number, param_index_tuple, kind)].
+    Empty list when the module declares no aliasing (nothing donated)."""
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" not in line:
+            continue
+        seg = line.split("input_output_alias=", 1)[1]
+        depth, end = 0, len(seg)
+        for j, ch in enumerate(seg):
+            if ch == "{":
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+                if depth == 0:
+                    end = j + 1
+                    break
+        out = []
+        for m in _ALIAS_RE.finditer(seg[:end]):
+            oidx = tuple(int(x) for x in m.group(1).replace(" ", "").split(",") if x)
+            pidx = tuple(int(x) for x in m.group(3).replace(" ", "").split(",") if x)
+            out.append((oidx, int(m.group(2)), pidx, m.group(4) or "may-alias"))
+        return out
+    return []
+
+
+def entry_param_shapes(comps: dict, entry: str | None) -> dict[int, str]:
+    """Param number -> shape string, from the entry computation's
+    ``parameter(N)`` instructions."""
+    out: dict[int, str] = {}
+    for i in comps.get(entry, []):
+        if i.op != "parameter":
+            continue
+        m = _PARAM_IDX_RE.search(i.line)
+        if m:
+            out[int(m.group(1))] = i.shape
+    return out
+
+
+def _dot_flops(instr: Instr, table) -> float:
+    """2 * numel(output) * prod(contraction dims of lhs)."""
+    out_n = shape_numel(instr.shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    if not m or not instr.operands:
+        return 2.0 * out_n  # degenerate
+    lhs = table.get(instr.operands[0])
+    if lhs is None:
+        return 2.0 * out_n
+    lm = _SHAPE_RE.search(lhs.shape)
+    if not lm:
+        return 2.0 * out_n
+    dims = [int(d) for d in lm.group(2).split(",")] if lm.group(2) else []
+    k = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(dims):
+            k *= dims[idx]
+    return 2.0 * out_n * k
+
+
+_XPARENT_OPS = {"convert", "bitcast", "copy"}
+
+_SLICE_CONVERT_BODY = {"parameter", "constant", "dynamic-slice", "slice",
+                       "convert", "bitcast", "copy", "transpose"}
+
+# pack_int4 nibble-decode as XLA CPU lowers it: slice the packed s8 buffer,
+# shift-left + shift-right-arithmetic (or logical + mask) each nibble out,
+# interleave with concatenate/broadcast. Critically NO multiply/add/subtract:
+# a fusion doing float dequant arithmetic must never be normalized away.
+_UNPACK_BODY = _SLICE_CONVERT_BODY | {
+    "broadcast", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "and", "or", "xor", "concatenate",
+    "reshape", "pad",
+}
+
+_INT_DTYPES = {"s4", "u4", "s8", "u8", "s16", "u16", "s32", "u32",
+               "s64", "u64", "u1", "s1", "pred"}
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+class Module:
+    """Parsed HLO module with the traffic-model predicates as methods, so
+    ``analyze`` (roofline) and ``analysis.xray`` (contract checkers) share
+    one implementation."""
+
+    def __init__(self, hlo_text: str):
+        self.text = hlo_text
+        self.comps, self.entry, self.table = parse_module(hlo_text)
+        if self.entry is None:
+            for cand in ("main", "main.0"):
+                if cand in self.comps:
+                    self.entry = cand
+            if self.entry is None and self.comps:
+                self.entry = next(iter(self.comps))
+
+    # -- structure ---------------------------------------------------------
+
+    def aliases(self):
+        return parse_input_output_aliases(self.text)
+
+    def param_shapes(self) -> dict[int, str]:
+        return entry_param_shapes(self.comps, self.entry)
+
+    def trip_count(self, cond: str) -> int:
+        best = 1
+        for i in self.comps.get(cond, ()):  # largest int constant in the cond
+            for c in _CONST_INT_RE.findall(i.line):
+                best = max(best, int(c))
+        return best
+
+    def while_trip_counts(self) -> list[int]:
+        """Trip count of every while loop reachable from entry."""
+        out = []
+        for instrs in self.comps.values():
+            for i in instrs:
+                if i.op != "while":
+                    continue
+                c = _COND_RE.search(i.line)
+                out.append(self.trip_count(c.group(1)) if c else 1)
+        return out
+
+    def multiplicity(self) -> tuple[dict[str, float], dict[str, bool]]:
+        """Computation name -> execution count (while trip counts expanded),
+        plus a fusion_only map (True -> count flops but not bytes)."""
+        mult: dict[str, float] = defaultdict(float)
+        fusion_only: dict[str, bool] = {}
+
+        def visit(name: str, m: float, in_fusion: bool, depth=0):
+            if depth > 64 or name not in self.comps:
+                return
+            mult[name] += m
+            if name in fusion_only:
+                fusion_only[name] = fusion_only[name] and in_fusion
+            else:
+                fusion_only[name] = in_fusion
+            for i in self.comps[name]:
+                if i.op == "while":
+                    c = _COND_RE.search(i.line)
+                    b = _BODY_RE.search(i.line)
+                    if b:
+                        t = self.trip_count(c.group(1)) if c else 1
+                        visit(b.group(1), m * t, in_fusion, depth + 1)
+                        if c:
+                            visit(c.group(1), m * t, True, depth + 1)  # cond: flops-only
+                elif i.op in ("fusion", "call", "conditional", "custom-call",
+                              "map", "reduce", "sort", "scatter"):
+                    for cm in _CALLS_RE.finditer(i.line):
+                        visit(cm.group(1), m, True, depth + 1)
+
+        visit(self.entry, 1.0, False)
+        return mult, fusion_only
+
+    def fusion_body(self, i: Instr) -> list[Instr]:
+        cm = _CALLS_RE.search(i.line)
+        return self.comps.get(cm.group(1), []) if cm else []
+
+    def fusion_root_op(self, i: Instr) -> str:
+        """Root op, chasing through trailing converts/bitcasts (the CPU
+        backend wraps DUS roots in dtype converts)."""
+        body = self.fusion_body(i)
+        root = next((s for s in body if s.is_root), None)
+        by_name = {s.name: s for s in body}
+        hops = 0
+        while root is not None and root.op in ("convert", "bitcast") and hops < 4:
+            nxt = by_name.get(root.operands[0]) if root.operands else None
+            root = nxt
+            hops += 1
+        return root.op if root else ""
+
+    # -- TPU-normalization predicates (DESIGN.md §5) -----------------------
+
+    def is_pure_convert_fusion(self, i: Instr) -> bool:
+        # copy inside a convert fusion is layout assignment of the same
+        # logical convert; on TPU none of this chain exists (native bf16/int8
+        # operands feed the MXU directly)
+        body = self.fusion_body(i)
+        if not body:
+            return False
+        return all(s.op in ("parameter", "convert", "bitcast", "constant", "copy")
+                   for s in body)
+
+    def is_slice_convert_fusion(self, i: Instr) -> bool:
+        """Fusion that only selects a slice of a buffer and changes its
+        dtype/layout (cache-layer pick + f32 promotion, int8 weight widening,
+        weight transposes for CPU gemms). On TPU the consumer reads the
+        source slice directly: charge nothing here; consumers charge the
+        read at the narrowest width via effective_operand_bytes."""
+        body = self.fusion_body(i)
+        if not body:
+            return False
+        return all(s.op in _SLICE_CONVERT_BODY for s in body)
+
+    def is_unpack_fusion(self, i: Instr) -> bool:
+        """Integer-typed fusion whose body is only slicing, shifting,
+        masking and interleaving — the packed-int4 nibble decode.  The CPU
+        backend materializes it as a full-width (s8/s32) weight-shaped
+        buffer; on TPU the decode fuses into the consuming dot, which reads
+        the PACKED buffer.  No multiply/add allowed in the body: float
+        dequant arithmetic is real work and must never be normalized."""
+        if shape_dtype(i.shape) not in _INT_DTYPES:
+            return False
+        body = self.fusion_body(i)
+        if not body:
+            return False
+        return all(s.op in _UNPACK_BODY for s in body)
+
+    def min_chain_width_bits(self, i: Instr) -> int:
+        """Smallest dtype width (bits) appearing in a slice/convert fusion
+        body."""
+        widths = [
+            DTYPE_BITS[m.group(1)]
+            for s in self.fusion_body(i)
+            for m in [_SHAPE_RE.search(s.shape)]
+            if m
+        ]
+        m = _SHAPE_RE.search(i.shape)
+        if m:
+            widths.append(DTYPE_BITS[m.group(1)])
+        return min(widths) if widths else 32
+
+    # -- traffic model -----------------------------------------------------
+
+    def effective_operand_bytes(self, name: str, depth: int = 0) -> float:
+        src = self.table.get(name)
+        if src is None:
+            return 0.0
+        b = shape_bytes(src.shape)
+        if src.op == "fusion" and self.is_slice_convert_fusion(src) and not \
+                self.is_pure_convert_fusion(src):
+            n = shape_numel(src.shape)
+            return (n * self.min_chain_width_bits(src) + 7) // 8
+        if src.op == "fusion" and self.is_unpack_fusion(src):
+            # read resolves to the packed slice the body actually loads
+            return min(b, self.fusion_read_bytes(src))
+        if depth < 4 and src.operands:
+            if src.op in _XPARENT_OPS or (
+                src.op == "fusion" and self.is_pure_convert_fusion(src)
+            ):
+                inner = self.effective_operand_bytes(src.operands[0], depth + 1)
+                if inner:
+                    b = min(b, inner)
+        return b
+
+    def operand_bytes(self, i: Instr, skip_dims: set[str] | None = None) -> float:
+        tot = 0.0
+        for o in i.operands:
+            src = self.table.get(o)
+            if src is None:
+                continue
+            if skip_dims is not None and dims_key(src.shape) in skip_dims:
+                continue
+            tot += self.effective_operand_bytes(o)
+        return tot
+
+    def fusion_read_bytes(self, i: Instr, skip_dims: set[str] | None = None) -> float:
+        """Resolve reads through the fusion body: a fused operand consumed
+        only by (dynamic-)slice/gather is read at the slice size (cache
+        layer selection / embedding rows), not the full buffer."""
+        body = self.fusion_body(i)
+        if not body:
+            return self.operand_bytes(i, skip_dims)
+        params: dict[int, str] = {}
+        for sub in body:
+            if sub.op == "parameter":
+                pm = _PARAM_IDX_RE.search(sub.line)
+                if pm:
+                    params[int(pm.group(1))] = sub.name
+        total = 0.0
+        for idx, oname in enumerate(i.operands):
+            src = self.table.get(oname)
+            if src is None:
+                continue
+            if skip_dims is not None and dims_key(src.shape) in skip_dims:
+                continue
+            full = self.effective_operand_bytes(oname)
+            pname = params.get(idx)
+            if pname is None:
+                total += full
+                continue
+            consumers = [s for s in body if pname in s.operands]
+            if consumers and all(c.op in _SLICE_OPS for c in consumers):
+                total += min(full, sum(shape_bytes(c.shape) for c in consumers))
+            else:
+                total += full
+        return total
+
+    def instr_hbm_bytes(self, i: Instr) -> float:
+        """Read+write traffic model with in-place / sparse-access semantics:
+        dynamic-update-slice writes only the updated slice (the cache-append
+        pattern of every decode step); slicing/gather reads only what it
+        produces; fusion reads resolve through the body."""
+        out_b = shape_bytes(i.shape)
+        is_fusion = i.op == "fusion"
+        if i.op == "convert" or (is_fusion and self.is_pure_convert_fusion(i)):
+            return 0.0          # TPU normalization: no CPU f32-promotion
+        if is_fusion and self.is_slice_convert_fusion(i):
+            return 0.0          # consumers charge the slice read (see above)
+        if is_fusion and self.is_unpack_fusion(i):
+            return 0.0          # consumers charge the packed slice read
+        root = self.fusion_root_op(i) if is_fusion else ""
+        if i.op == "dynamic-update-slice" or (is_fusion and root == "dynamic-update-slice"):
+            # in-place: read+write the update-sized data only; the aliased
+            # (same-dims) destination operand is skipped
+            small = self.fusion_read_bytes(i, skip_dims={dims_key(i.shape)}) if is_fusion \
+                else self.operand_bytes(i, skip_dims={dims_key(i.shape)})
+            return 2.0 * small
+        if is_fusion and root == "select":
+            # the CPU backend lowers strided dynamic-update-slice to a
+            # full-buffer select(iota==pos); TPU performs an in-place DUS.
+            # Pattern: exactly one operand matches the output dims+dtype and
+            # every other operand is small -> charge the update only.
+            shapes = [self.table[o].shape for o in i.operands if o in self.table]
+            matching = [s for s in shapes if dims_key(s) == dims_key(i.shape)]
+            others = [
+                shape_bytes(s) for s in shapes
+                if dims_key(s) != dims_key(i.shape)
+            ]
+            if len(matching) == 1 and all(b <= out_b / 8 for b in others):
+                return 2.0 * sum(others)
+        if i.op in _SLICE_OPS:
+            return 2.0 * out_b
+        if i.op == "scatter":
+            upd = (
+                shape_bytes(self.table[i.operands[2]].shape)
+                if len(i.operands) >= 3 and i.operands[2] in self.table
+                else out_b
+            )
+            return 2.0 * upd
+        if is_fusion:
+            return self.fusion_read_bytes(i) + out_b
+        return self.operand_bytes(i) + out_b
+
+    # -- contract-checker views (analysis.xray) ----------------------------
+
+    def materialized_instrs(self):
+        """Yield (Instr, multiplicity) for instructions whose output is an
+        actual buffer under the traffic model: executed computations that
+        are not fusion-only bodies, skipping bookkeeping ops."""
+        mult, fusion_only = self.multiplicity()
+        for name, instrs in self.comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0 or fusion_only.get(name, False):
+                continue
+            for i in instrs:
+                if i.op in _SKIP_BYTES_OPS or i.op == "while":
+                    continue
+                yield i, m
+
+    def collective_instrs(self):
+        """(Instr, multiplicity, base-op) for every executed collective."""
+        for i, m in self.materialized_instrs():
+            base = i.op.replace("-start", "")
+            if base in ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                yield i, m, base
+
+    def dus_dims_keys(self) -> Counter:
+        """Dims signatures written in-place (dynamic-update-slice roots and
+        scatter), with multiplicity — the donation audit's evidence that a
+        cache buffer is updated in place rather than rebuilt."""
+        out: Counter = Counter()
+        for i, m in self.materialized_instrs():
+            root = self.fusion_root_op(i) if i.op == "fusion" else i.op
+            if root in ("dynamic-update-slice", "scatter") or \
+                    i.op in ("dynamic-update-slice", "scatter"):
+                out[dims_key(i.shape)] += int(m) or 1
+        return out
+
+
+def analyze(hlo_text: str, *, top_k: int = 0) -> HLOReport | tuple:
+    mod = Module(hlo_text)
+    mult, fusion_only = mod.multiplicity()
+    table = mod.table
+
+    flops_by_op: dict[str, float] = defaultdict(float)
+    bytes_by_kind: dict[str, float] = defaultdict(float)
+    num_collectives: dict[str, int] = defaultdict(int)
+    hbm = 0.0
+
+    contributions: list[tuple[float, float, str, str, str]] = []
+    for name, instrs in mod.comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        only_flops = fusion_only.get(name, False)
+        for i in instrs:
+            if i.op in ("dot", "convolution"):
+                flops_by_op[i.op] += m * _dot_flops(i, table)
+            if only_flops:
+                continue
+            base = i.op.replace("-start", "")
+            if base in ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                b = mod.operand_bytes(i) or shape_bytes(i.shape)
+                bytes_by_kind[base] += m * b
+                num_collectives[base] += int(m)
+                hbm += m * (b + shape_bytes(i.shape))
+                if top_k:
+                    contributions.append((m * b, m, base, i.name, i.shape[:60]))
+            elif i.op not in _SKIP_BYTES_OPS and i.op != "while":
+                b = mod.instr_hbm_bytes(i)
+                hbm += m * b
+                if top_k:
+                    contributions.append((m * b, m, i.op, i.name, i.shape[:60]))
+
+    report = HLOReport(
+        flops=sum(flops_by_op.values()),
+        hbm_bytes=hbm,
+        collective_bytes=sum(bytes_by_kind.values()),
+        bytes_by_kind=dict(bytes_by_kind),
+        flops_by_op=dict(flops_by_op),
+        num_collectives=dict(num_collectives),
+    )
+    if top_k:
+        contributions.sort(reverse=True)
+        return report, contributions[:top_k]
+    return report
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per device
+    hbm_bytes: float           # per device
+    collective_bytes: float    # per device
+    chips: int
+    model_flops: float = 0.0   # 6*N*D analytic (global)
+    xla_flops: float = 0.0     # cost_analysis cross-check (per device, no loop mult)
+    xla_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs (global): remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """model FLOPs / (chips * peak * step_s): roofline-fraction score."""
+        denom = self.chips * PEAK_FLOPS * self.step_s
+        return self.model_flops / denom if denom else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s": self.step_s,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu,
+            "xla_flops_per_device": self.xla_flops,
+            "xla_bytes_per_device": self.xla_bytes,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int, model_flops: float = 0.0) -> tuple[Roofline, HLOReport]:
+    rep = analyze(compiled.as_text())
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ca = ca or {}
+    rl = Roofline(
+        flops=rep.flops,
+        hbm_bytes=rep.hbm_bytes,
+        collective_bytes=rep.collective_bytes,
+        chips=chips,
+        model_flops=model_flops,
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)),
+    )
+    return rl, rep

@@ -1,0 +1,505 @@
+"""repro-xray: compiled-program contracts (DESIGN.md §14).
+
+repro-lint (§11) checks Python source and repro-san (§13) checks runtime
+values; neither sees what XLA *actually compiles*.  A missing
+``donate_argnums`` that silently copies the whole KV pool every round, or
+an "int4" format that lowers to a full f32 weight materialization, passes
+both.  xray closes that gap: it compiles every serving-critical jitted
+program on CPU from ``eval_shape``-sized inputs (no weights are ever
+materialized), then checks contracts against the optimized HLO via the
+shared ``analysis/hlo.py`` parser:
+
+  xray-donation    cache/pool inputs appear in the module's
+                   ``input_output_alias`` map and the program updates a
+                   cache-shaped buffer in place (dynamic-update-slice or
+                   scatter root) instead of rebuilding it.
+  xray-dequant     decode never materializes a weight-logical-shaped
+                   float buffer above a threshold: quantized weights must
+                   dequantize inside fusions, never as standalone buffers.
+  xray-bytes       HLO HBM traffic per decode step agrees with the
+                   registry ``nbytes``/``bits_per_weight`` model within
+                   ``BYTES_RTOL`` for every quant preset — "int4" that
+                   streams f32 fails here.
+  xray-collective  decode contains only the collectives the sharding
+                   policy predicts (none on a single device) and the
+                   layer scan's trip count equals ``num_layers``.
+
+The program catalog covers the contiguous / paged / recurrent adapters'
+decode, verify, insert, and prefill programs on reduced archs (tinyllama
+GQA, deepseek MLA, rwkv6 state), plus full-size tinyllama single-request
+decode per quant preset for the traffic contract.  It is compiled once
+per process and shared by all four checkers and ``benchmarks/xray_bench``.
+
+Contract point for the bytes audit: batch 1, short context (the paper's
+real-time decode setting), where weight streaming dominates and the
+nbytes model is exact; cache and activation traffic are modeled
+explicitly (see ``expected_decode_bytes``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from collections import Counter
+from typing import Callable, Iterable
+
+from repro.analysis.engine import BaseChecker, Finding
+from repro.analysis.hlo import Module, dims_key, shape_bytes
+
+XRAY_ANCHOR = "src/repro/analysis/xray.py"
+
+# f32 weight-shaped buffers smaller than this are tolerated (reduced-arch
+# test weights, per-row dequants of gathered embedding rows)
+DEQUANT_THRESHOLD = 1 << 16
+
+# bytes-per-step model-vs-HLO relative tolerance. Measured headroom on the
+# current tree (B=1, T=64): int8 +6%, int4/mixed +12% — the residual is
+# CPU-materialized activation/cache-slab traffic the TPU normalization
+# cannot fully remove. A preset streaming weights at the wrong width blows
+# through this by 2x or more.
+BYTES_RTOL = 0.15
+
+BYTES_PRESETS = ("int8", "int4", "mixed")
+BYTES_ARCH = "tinyllama-1.1b"
+BYTES_BATCH = 1
+BYTES_CACHE_LEN = 64
+
+_FLOAT_DTYPES = {"f16", "bf16", "f32", "f64"}
+
+
+@dataclasses.dataclass
+class XrayProgram:
+    """One compiled serving program plus its contract expectations."""
+
+    name: str                      # e.g. "tinyllama-1.1b/contiguous/decode_chunk"
+    kind: str                      # decode | prefill | verify | insert
+    hlo_text: str
+    path: str                      # repo-relative source anchor of the jit
+    line: int
+    cache_sigs: Counter            # dims sigs of cache/pool INPUT leaves
+    require_alias: bool = False    # cache inputs must be donated/aliased
+    require_dus: bool = False      # in-place write of a cache-shaped buffer
+    weight_sigs: frozenset = frozenset()   # quantized-weight logical dims sigs
+    num_layers: int | None = None  # expected layer-scan trip count
+    expected_collectives: frozenset = frozenset()
+    expected_bytes: float | None = None    # nbytes-model bytes per decode step
+    fmt: str | None = None         # quant preset (bytes rows)
+
+    def module(self) -> Module:
+        return Module(self.hlo_text)
+
+
+def _sig(shape) -> str:
+    return ",".join(str(d) for d in shape)
+
+
+def _cache_sigs(struct) -> Counter:
+    import jax
+
+    return Counter(_sig(leaf.shape) for leaf in jax.tree.leaves(struct))
+
+
+def _anchor(fn) -> tuple[str, int]:
+    """Repo-relative (path, line) of a (possibly jit-wrapped) function."""
+    code = getattr(getattr(fn, "__wrapped__", fn), "__code__", None)
+    if code is None:
+        return XRAY_ANCHOR, 1
+    path = code.co_filename
+    marker = os.sep + "src" + os.sep + "repro" + os.sep
+    if marker in path:
+        path = "src/repro/" + path.split(marker, 1)[1].replace(os.sep, "/")
+    return path, code.co_firstlineno
+
+
+def weight_dims_sigs(qparams) -> frozenset:
+    """Dims signatures a dequantized weight buffer could take in HLO:
+    each QuantizedTensor's logical shape, its per-layer slice, and the
+    transposed variants (CPU gemms transpose weights freely)."""
+    import jax
+
+    from repro.core.quant import QuantizedTensor
+
+    sigs: set[str] = set()
+    for leaf in jax.tree.leaves(
+            qparams, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        if not isinstance(leaf, QuantizedTensor):
+            continue
+        shp = tuple(leaf.logical_shape)
+        variants = [shp, shp[:-2] + (shp[-1], shp[-2])]
+        if len(shp) >= 3:
+            variants += [shp[1:], (shp[2], shp[1]),
+                         (1,) + shp[1:], (1, shp[2], shp[1])]
+        sigs.update(_sig(v) for v in variants)
+    return frozenset(sigs)
+
+
+def expected_decode_bytes(qparams, cache_struct, batch: int, vocab: int) -> float:
+    """Registry-model HBM bytes for one decode step: every quantized leaf
+    at its ``nbytes()`` storage size (the embedding table at ``batch``
+    gathered rows), float leaves in full, the cache once for attention
+    reads plus a read+write layer-slab commit per layer (the baseline
+    ``deferred_decode_cache=False`` dataflow), and the f32 logits write."""
+    import jax
+    import jax.numpy as jnp
+    import jax.tree_util as jtu
+
+    from repro.core.policy import leaf_class
+    from repro.core.quant import QuantizedTensor
+
+    total = 0.0
+    for path, leaf in jtu.tree_leaves_with_path(
+            qparams, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if isinstance(leaf, QuantizedTensor):
+            nb = leaf.nbytes()
+            if leaf_class(p) == "embed":
+                nb = nb * batch / leaf.logical_shape[0]   # row gather
+            total += nb
+        else:
+            total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    for leaf in jax.tree.leaves(cache_struct):
+        total += 3.0 * leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return total + batch * vocab * 4
+
+
+# ---------------------------------------------------------------------------
+# program catalog
+# ---------------------------------------------------------------------------
+
+_CATALOG: list[XrayProgram] | None = None
+
+
+def catalog() -> list[XrayProgram]:
+    """All serving-critical compiled programs, built once per process."""
+    global _CATALOG
+    if _CATALOG is None:
+        _CATALOG = _build_bytes_programs() + _build_serving_programs()
+    return _CATALOG
+
+
+def _build_bytes_programs() -> list[XrayProgram]:
+    """Full-size single-request decode per quant preset: the traffic,
+    dequant-streaming, and trip-count contract rows."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.policy import quantize_params
+    from repro.models.registry import build, load_config
+
+    cfg = load_config(BYTES_ARCH)
+    model = build(cfg)
+    pstruct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    tok = jax.ShapeDtypeStruct((BYTES_BATCH,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((BYTES_BATCH,), jnp.int32)
+    path, line = _anchor(model.decode)
+    decode = jax.jit(model.decode, donate_argnums=(2,))
+
+    progs = []
+    for fmt in BYTES_PRESETS:
+        qstruct = jax.eval_shape(
+            lambda p, f=fmt: quantize_params(p, cfg.group_size, formats=f),
+            pstruct)
+        cstruct = jax.eval_shape(
+            lambda: model.init_cache(BYTES_BATCH, BYTES_CACHE_LEN, cfg.cdtype()))
+        hlo = decode.lower(qstruct, tok, cstruct, pos).compile().as_text()
+        progs.append(XrayProgram(
+            name=f"{BYTES_ARCH}/decode[{fmt}]", kind="decode",
+            hlo_text=hlo, path=path, line=line,
+            cache_sigs=_cache_sigs(cstruct),
+            require_alias=True, require_dus=True,
+            weight_sigs=weight_dims_sigs(qstruct),
+            num_layers=cfg.num_layers,
+            expected_bytes=expected_decode_bytes(
+                qstruct, cstruct, BYTES_BATCH, cfg.vocab_size),
+            fmt=fmt,
+        ))
+    return progs
+
+
+def _build_serving_programs() -> list[XrayProgram]:
+    """Reduced-arch adapter sweep: every CacheAdapter's decode / verify /
+    insert / prefill programs, lowered from eval_shape-sized inputs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.registry import build, load_config
+    from repro.serving.core import ContiguousAdapter, RecurrentAdapter, SchedulerCore
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.paged import PagedAdapter
+
+    SLOTS, CHUNK, K, CACHE_LEN, PLEN, GROUP = 2, 3, 2, 64, 8, 2
+
+    def lower(fn, *args):
+        return fn.lower(*args).compile().as_text()
+
+    def structs(**kw):
+        return {k: jax.ShapeDtypeStruct(shape, dt) for k, (shape, dt) in kw.items()}
+
+    progs: list[XrayProgram] = []
+    i32, b8, u32 = jnp.int32, jnp.bool_, jnp.uint32
+
+    for arch, adapter_cls, spec in (
+        ("tinyllama-1.1b", ContiguousAdapter, True),
+        ("tinyllama-1.1b", PagedAdapter, True),
+        ("deepseek-v2-lite-16b", ContiguousAdapter, False),
+        ("rwkv6-7b", RecurrentAdapter, False),
+    ):
+        cfg = load_config(arch).reduced()
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = InferenceEngine(model, params, cache_len=CACHE_LEN,
+                                 sanitize=False)
+        adapter = adapter_cls(engine)
+        SchedulerCore(engine, adapter, slots=SLOTS, chunk=CHUNK,
+                      spec_k=K if spec else None, sanitize=False)
+
+        kind = adapter.kind
+        tag = f"{arch}/{kind}"
+        s = structs(
+            tok=((SLOTS,), i32), pos=((SLOTS,), i32), live=((SLOTS,), b8),
+            keys=((CHUNK, 2), u32), key=((2,), u32),
+            lens=((GROUP,), i32), toks=((GROUP, PLEN), i32),
+            chunk=((SLOTS, K), i32), remaining=((SLOTS,), i32),
+            slots=((GROUP,), i32),
+        )
+        state = model.cache_kind == "state"
+
+        if kind == "paged":
+            pool = jax.eval_shape(lambda: model.init_paged_cache(
+                adapter.num_blocks, adapter.block_size, cfg.cdtype()))
+            table = jax.ShapeDtypeStruct((SLOTS, adapter.blocks_per_req), i32)
+            psig = _cache_sigs(pool)
+            p, ln = _anchor(adapter._decode_until)
+            progs.append(XrayProgram(
+                name=f"{tag}/decode_until", kind="decode",
+                hlo_text=lower(adapter._decode_until, engine.params, s["tok"],
+                               pool, table, s["pos"], s["live"],
+                               s["remaining"], s["keys"]),
+                path=p, line=ln, cache_sigs=psig,
+                require_alias=True, require_dus=True))
+            rows = jax.eval_shape(lambda: model.init_cache(GROUP, PLEN, cfg.cdtype()))
+            itables = jax.ShapeDtypeStruct(
+                (GROUP, PLEN // adapter.block_size), i32)
+            p, ln = _anchor(adapter._insert)
+            progs.append(XrayProgram(
+                name=f"{tag}/insert", kind="insert",
+                hlo_text=lower(adapter._insert, pool, rows, itables),
+                path=p, line=ln, cache_sigs=psig,
+                require_alias=True, require_dus=True))
+            p, ln = _anchor(adapter._verify_step)
+            progs.append(XrayProgram(
+                name=f"{tag}/verify", kind="verify",
+                hlo_text=lower(adapter._verify_step, engine.params, s["chunk"],
+                               pool, table, s["pos"], s["live"],
+                               s["remaining"], s["key"]),
+                path=p, line=ln, cache_sigs=psig,
+                require_alias=True, require_dus=True))
+            continue
+
+        cache = jax.eval_shape(lambda: model.init_cache(
+            SLOTS, CACHE_LEN, cfg.cdtype()))
+        csig = _cache_sigs(cache)
+        p, ln = _anchor(adapter._decode_chunk)
+        progs.append(XrayProgram(
+            name=f"{tag}/decode_chunk", kind="decode",
+            hlo_text=lower(adapter._decode_chunk, engine.params, s["tok"],
+                           cache, s["pos"], s["live"], s["keys"]),
+            path=p, line=ln, cache_sigs=csig,
+            require_alias=True, require_dus=not state))
+        if not state:
+            rows = jax.eval_shape(lambda: model.init_cache(
+                GROUP, CACHE_LEN, cfg.cdtype()))
+            p, ln = _anchor(adapter._insert)
+            progs.append(XrayProgram(
+                name=f"{tag}/insert_slots", kind="insert",
+                hlo_text=lower(adapter._insert, cache, rows, s["slots"]),
+                path=p, line=ln, cache_sigs=csig,
+                require_alias=True, require_dus=True))
+        if spec:
+            p, ln = _anchor(adapter._verify_step)
+            progs.append(XrayProgram(
+                name=f"{tag}/verify", kind="verify",
+                hlo_text=lower(adapter._verify_step, engine.params, s["chunk"],
+                               cache, s["pos"], s["live"], s["remaining"],
+                               s["key"]),
+                path=p, line=ln, cache_sigs=csig,
+                require_alias=True, require_dus=True))
+        pf = adapter.prefill(PLEN)
+        p, ln = _anchor(pf)
+        progs.append(XrayProgram(
+            name=f"{tag}/prefill", kind="prefill",
+            hlo_text=lower(pf, engine.params, s["toks"], s["lens"], s["key"]),
+            path=p, line=ln, cache_sigs=Counter()))
+    return progs
+
+
+# ---------------------------------------------------------------------------
+# audits
+# ---------------------------------------------------------------------------
+
+def audit_donation(prog: XrayProgram) -> Iterable[Finding]:
+    """Cache/pool inputs must be donated (module input_output_alias) and —
+    for kv caches — updated in place via DUS/scatter, not rebuilt."""
+    if not prog.require_alias:
+        return
+    mod = prog.module()
+    pshapes = mod.param_shapes()
+    aliased = Counter(
+        dims_key(pshapes[p]) for (_, p, _, _) in mod.aliases() if p in pshapes)
+    missing = prog.cache_sigs - aliased
+    for sig, n in sorted(missing.items()):
+        # name the offending parameter instruction(s)
+        params = [f"%p{idx}: {shp}" for idx, shp in sorted(pshapes.items())
+                  if dims_key(shp) == sig]
+        yield Finding(
+            "xray-donation", prog.path, prog.line,
+            f"{prog.name}: {n} cache input(s) of dims [{sig}] are not in the "
+            f"compiled module's input_output_alias map ({params[:n]}) — the "
+            "program copies the cache every call; donate the cache argument "
+            "(donate_argnums) so XLA aliases it in place")
+    if prog.require_dus:
+        dus = mod.dus_dims_keys()
+        if not any(sig in dus for sig in prog.cache_sigs):
+            yield Finding(
+                "xray-donation", prog.path, prog.line,
+                f"{prog.name}: no dynamic-update-slice/scatter writes a "
+                f"cache-shaped buffer (cache dims {sorted(prog.cache_sigs)}, "
+                f"in-place writes {sorted(dus)}) — the cache update lowered "
+                "to a full rebuild instead of an in-place commit")
+
+
+def audit_dequant(prog: XrayProgram,
+                  threshold: int = DEQUANT_THRESHOLD) -> Iterable[Finding]:
+    """No weight-logical-shaped float buffer above ``threshold`` may be
+    materialized: dequantization must stay inside fusions feeding the
+    matmul, never become a standalone weight copy."""
+    if not prog.weight_sigs:
+        return
+    mod = prog.module()
+    seen: set[str] = set()
+    for i, _ in mod.materialized_instrs():
+        dt = i.shape.split("[", 1)[0].strip("() ")
+        if dt not in _FLOAT_DTYPES:
+            continue
+        if dims_key(i.shape) not in prog.weight_sigs:
+            continue
+        if shape_bytes(i.shape) < threshold:
+            continue
+        if mod.instr_hbm_bytes(i) <= 0.0:
+            continue        # normalized convert/slice chains: not a buffer
+        if i.name in seen:
+            continue
+        seen.add(i.name)
+        yield Finding(
+            "xray-dequant", prog.path, prog.line,
+            f"{prog.name}: %{i.name} materializes a weight-shaped float "
+            f"buffer {i.shape.strip()} ({shape_bytes(i.shape) / 1e6:.1f} MB) "
+            "— quantized weights must dequantize inside the consuming "
+            "fusion and stream at storage width, never as a standalone "
+            "dequantized copy")
+
+
+def audit_bytes(prog: XrayProgram, rtol: float = BYTES_RTOL) -> Iterable[Finding]:
+    """HLO-derived HBM bytes per decode step must agree with the registry
+    nbytes model within ``rtol``."""
+    if prog.expected_bytes is None:
+        return
+    from repro.analysis.hlo import analyze
+
+    rep = analyze(prog.hlo_text)
+    delta = rep.hbm_bytes / prog.expected_bytes - 1.0
+    if abs(delta) <= rtol:
+        return
+    _, top = analyze(prog.hlo_text, top_k=1)
+    worst = (f"; top contributor %{top[0][3]} ({top[0][2]} {top[0][4]}, "
+             f"{top[0][0] / 1e6:.1f} MB)") if top else ""
+    yield Finding(
+        "xray-bytes", prog.path, prog.line,
+        f"{prog.name}: compiled decode moves {rep.hbm_bytes / 1e6:.1f} MB/step "
+        f"but the registry nbytes model says {prog.expected_bytes / 1e6:.1f} MB "
+        f"({delta:+.1%}, tolerance ±{rtol:.0%}) — the {prog.fmt} format is "
+        f"not streaming weights at its declared width{worst}")
+
+
+def audit_collectives(prog: XrayProgram) -> Iterable[Finding]:
+    """Decode contains only the collectives the sharding policy predicts,
+    and the layer scan's trip count equals num_layers."""
+    mod = prog.module()
+    for i, _, base in mod.collective_instrs():
+        if base not in prog.expected_collectives:
+            yield Finding(
+                "xray-collective", prog.path, prog.line,
+                f"{prog.name}: unexpected {base} %{i.name} ({i.shape.strip()}) "
+                f"— the sharding policy predicts "
+                f"{sorted(prog.expected_collectives) or 'no collectives'} for "
+                "this program; an unpredicted collective means an input lost "
+                "its sharding annotation and is being re-gathered every step")
+    if prog.num_layers is not None:
+        trips = mod.while_trip_counts()
+        if prog.num_layers not in trips:
+            yield Finding(
+                "xray-collective", prog.path, prog.line,
+                f"{prog.name}: no while loop runs num_layers={prog.num_layers} "
+                f"trips (found {sorted(trips)}) — the layer scan unrolled or "
+                "lost iterations; per-step traffic no longer scales the way "
+                "the roofline model assumes")
+
+
+# ---------------------------------------------------------------------------
+# checkers (repro-lint engine plumbing)
+# ---------------------------------------------------------------------------
+
+class _XrayChecker(BaseChecker):
+    """Shared plumbing: build/reuse the program catalog, wrap failures."""
+
+    audit: Callable = None
+    only_kinds: tuple = ()
+
+    def __init__(self, catalog_fn: Callable[[], list[XrayProgram]] | None = None):
+        self._catalog_fn = catalog_fn or catalog
+
+    def check_project(self, root: str) -> Iterable[Finding]:
+        try:
+            progs = self._catalog_fn()
+        except Exception as e:  # noqa: BLE001 — surface as a finding, not a crash
+            yield Finding(self.id, XRAY_ANCHOR, 1,
+                          f"xray program catalog failed to build: {e!r}")
+            return
+        for prog in progs:
+            if self.only_kinds and prog.kind not in self.only_kinds:
+                continue
+            yield from type(self).audit(prog)
+
+
+class XrayDonationChecker(_XrayChecker):
+    id = "xray-donation"
+    description = ("compiled serving programs donate their cache/pool "
+                   "inputs (HLO input_output_alias) and commit updates "
+                   "in place via dynamic-update-slice")
+    audit = staticmethod(audit_donation)
+
+
+class XrayDequantChecker(_XrayChecker):
+    id = "xray-dequant"
+    description = ("compiled decode never materializes a weight-shaped "
+                   "float buffer: quantized weights stream at storage "
+                   "width and dequantize inside fusions")
+    audit = staticmethod(audit_dequant)
+    only_kinds = ("decode",)
+
+
+class XrayBytesChecker(_XrayChecker):
+    id = "xray-bytes"
+    description = ("HLO HBM bytes per decode step match the registry "
+                   "nbytes/bits_per_weight model within tolerance for "
+                   "every quant preset")
+    audit = staticmethod(audit_bytes)
+    only_kinds = ("decode",)
+
+
+class XrayCollectiveChecker(_XrayChecker):
+    id = "xray-collective"
+    description = ("compiled decode contains only the collectives the "
+                   "sharding policy predicts and the layer scan runs "
+                   "exactly num_layers trips")
+    audit = staticmethod(audit_collectives)

@@ -14,12 +14,12 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.analysis import hlo as hlo_analysis  # noqa: E402
 from repro.configs.base import SHAPES, ModelConfig, ShapeSpec  # noqa: E402
 from repro.core import flags as perf_flags  # noqa: E402
 from repro.core.policy import quantize_params  # noqa: E402
 from repro.dist import logical  # noqa: E402
 from repro.dist import sharding as shd  # noqa: E402
-from repro.launch import hlo_analysis  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models.registry import ARCH_IDS, build, input_specs, load_config  # noqa: E402
 from repro.optim import adamw  # noqa: E402

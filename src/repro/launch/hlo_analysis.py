@@ -1,538 +1,12 @@
-"""Post-SPMD HLO analysis: FLOPs, HBM traffic, collective bytes — with
-while-loop (lax.scan) trip-count expansion.
+"""Compat shim: the HLO analyzer moved to ``repro.analysis.hlo`` so the
+repro-lint xray checkers and the launch roofline report share one
+implementation (DESIGN.md §14).  Existing callers
+(``launch/dryrun.py``, tests) keep importing from here."""
 
-Why not just ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts a
-while body ONCE, so any scan-over-layers model (all of ours) is undercounted
-by ~num_layers x. We therefore walk the per-device optimized HLO text
-ourselves:
-
-  * instruction table: every ``%name = shape op(operands)`` line, so operand
-    shapes resolve through references;
-  * call graph: while(condition/body) edges carry the loop trip count
-    (largest integer constant in the condition computation — exact for
-    lax.scan), fusion/call edges carry 1;
-  * FLOPs: dot/convolution instructions (2 * numel(out) * contraction),
-    walked through fusion bodies too;
-  * HBM bytes: operand + output bytes of materialized instructions (fusion
-    boundaries), skipping bookkeeping ops — the read+write traffic model;
-  * collective bytes: operand bytes of all-gather / all-reduce /
-    reduce-scatter / all-to-all / collective-permute.
-
-Everything is per device. ``compiled.cost_analysis()`` numbers are kept in
-the report as a cross-check column.
-
-Roofline (TPU v5e targets; container is CPU-only so terms are derived):
-  compute term    = FLOPs / 197e12            per chip
-  memory term     = HBM bytes / 819e9         per chip
-  collective term = collective bytes / 50e9   per ICI link
-"""
-
-from __future__ import annotations
-
-import dataclasses
-import re
-from collections import defaultdict
-
-PEAK_FLOPS = 197e12        # bf16 FLOP/s per v5e chip
-HBM_BW = 819e9             # B/s per chip
-ICI_BW = 50e9              # B/s per link
-
-COLLECTIVES = {
-    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-    "collective-permute", "all-gather-start", "all-reduce-start",
-    "collective-permute-start",
-}
-
-_SKIP_BYTES_OPS = {
-    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
-    "after-all", "iota", "partition-id", "replica-id",
-    # *-done ops alias the corresponding -start buffers
-    "all-gather-done", "all-reduce-done", "collective-permute-done",
-}
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
-    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-    "u1": 1, "s1": 1,
-}
-
-_SHAPE_TOK = r"(?:" + "|".join(_DTYPE_BYTES) + r")\[[0-9,]*\](?:\{[^}]*\})?"
-_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
-_INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?.*?\)?\s*?)\s*([a-z][a-z0-9\-]*)\("
+from repro.analysis.hlo import *  # noqa: F401,F403
+from repro.analysis.hlo import (  # noqa: F401
+    _DTYPE_BYTES,
+    _shape_bytes_from_str,
+    _shape_numel,
+    _dot_flops,
 )
-_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
-_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
-_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
-_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
-_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
-_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
-
-
-def _shape_bytes_from_str(s: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(s):
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _shape_numel(s: str) -> int:
-    m = _SHAPE_RE.search(s)
-    if not m:
-        return 0
-    dims = m.group(2)
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
-    return n
-
-
-@dataclasses.dataclass
-class Instr:
-    name: str
-    shape: str
-    op: str
-    operands: list[str]
-    line: str
-    is_root: bool = False
-
-
-@dataclasses.dataclass
-class HLOReport:
-    flops: float
-    hbm_bytes: float
-    collective_bytes: float
-    bytes_by_kind: dict[str, float]
-    flops_by_op: dict[str, float]
-    num_collectives: dict[str, int]
-
-
-def parse_module(hlo_text: str):
-    """-> (comps: name->list[Instr], entry_name, instr_table name->Instr)."""
-    comps: dict[str, list[Instr]] = {}
-    entry = None
-    current = None
-    for raw in hlo_text.splitlines():
-        line = raw.rstrip()
-        if not line:
-            continue
-        if "->" in line and line.endswith("{"):
-            m = _COMP_HDR_RE.match(line.strip())
-            if m:
-                current = m.group(2)
-                comps[current] = []
-                if m.group(1):
-                    entry = current
-                continue
-        if line.strip() == "}":
-            continue
-        if current is None:
-            continue
-        im = _INSTR_RE.match(line)
-        if not im:
-            continue
-        name, shape, op = im.group(1), im.group(2), im.group(3)
-        # operands: %refs inside the first paren group
-        paren = line.find(op + "(") + len(op)
-        depth, j = 0, paren
-        end = len(line)
-        for j in range(paren, len(line)):
-            if line[j] == "(":
-                depth += 1
-            elif line[j] == ")":
-                depth -= 1
-                if depth == 0:
-                    end = j
-                    break
-        operands = _OPERAND_RE.findall(line[paren:end])
-        comps[current].append(
-            Instr(name, shape, op, operands, line, is_root="ROOT" in line.split("=")[0])
-        )
-    table = {i.name: i for instrs in comps.values() for i in instrs}
-    return comps, entry, table
-
-
-def _dot_flops(instr: Instr, table) -> float:
-    """2 * numel(output) * prod(contraction dims of lhs)."""
-    out_n = _shape_numel(instr.shape)
-    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
-    if not m or not instr.operands:
-        return 2.0 * out_n  # degenerate
-    lhs = table.get(instr.operands[0])
-    if lhs is None:
-        return 2.0 * out_n
-    lm = _SHAPE_RE.search(lhs.shape)
-    if not lm:
-        return 2.0 * out_n
-    dims = [int(d) for d in lm.group(2).split(",")] if lm.group(2) else []
-    k = 1
-    for idx in (int(i) for i in m.group(1).split(",") if i):
-        if idx < len(dims):
-            k *= dims[idx]
-    return 2.0 * out_n * k
-
-
-def analyze(hlo_text: str, *, top_k: int = 0) -> HLOReport | tuple:
-    comps, entry, table = parse_module(hlo_text)
-    if entry is None:
-        for cand in ("main", "main.0"):
-            if cand in comps:
-                entry = cand
-        if entry is None and comps:
-            entry = next(iter(comps))
-
-    def trip_count(cond: str) -> int:
-        best = 1
-        for i in comps.get(cond, ()):  # largest int constant in the condition
-            for c in _CONST_INT_RE.findall(i.line):
-                best = max(best, int(c))
-        return best
-
-    # multiplicity of every computation, walking while/fusion/call edges
-    mult: dict[str, float] = defaultdict(float)
-    fusion_only: dict[str, bool] = {}   # True -> count flops but not bytes
-
-    def visit(name: str, m: float, in_fusion: bool, depth=0):
-        if depth > 64 or name not in comps:
-            return
-        mult[name] += m
-        if name in fusion_only:
-            fusion_only[name] = fusion_only[name] and in_fusion
-        else:
-            fusion_only[name] = in_fusion
-        for i in comps[name]:
-            if i.op == "while":
-                c = _COND_RE.search(i.line)
-                b = _BODY_RE.search(i.line)
-                if b:
-                    t = trip_count(c.group(1)) if c else 1
-                    visit(b.group(1), m * t, in_fusion, depth + 1)
-                    if c:
-                        visit(c.group(1), m * t, True, depth + 1)  # cond: flops-only
-            elif i.op in ("fusion", "call", "conditional", "custom-call", "map", "reduce", "sort", "scatter"):
-                for cm in _CALLS_RE.finditer(i.line):
-                    visit(cm.group(1), m, True, depth + 1)
-                # conditional: branch computations appear as operands refs —
-                # also matched via calls= when printed; branches w/o calls=
-                # are rare in our graphs
-
-    visit(entry, 1.0, False)
-
-    flops_by_op: dict[str, float] = defaultdict(float)
-    bytes_by_kind: dict[str, float] = defaultdict(float)
-    num_collectives: dict[str, int] = defaultdict(int)
-    hbm = 0.0
-
-    def _dims_key(shape: str) -> str:
-        """Dims signature ignoring dtype/layout: CPU-backend f32<->bf16
-        promotion around dots must not defeat in-place alias detection
-        (on TPU those converts don't exist)."""
-        m = _SHAPE_RE.search(shape)
-        return m.group(2) if m else shape.strip()
-
-    # --- TPU normalization --------------------------------------------------
-    # The CPU backend promotes bf16 dot/attention math to f32, materializing
-    # convert chains (and duplicated f32 copies of bf16 buffers) that a TPU
-    # module would not contain. Normalization rules (documented in DESIGN.md):
-    #   * pure dtype-convert instructions/fusions cost 0 bytes;
-    #   * operand reads resolve through convert/bitcast/copy chains and are
-    #     charged at the NARROWEST width along the chain.
-
-    _XPARENT_OPS = {"convert", "bitcast", "copy"}
-
-    def _is_pure_convert_fusion(i: Instr) -> bool:
-        # copy inside a convert fusion is layout assignment of the same
-        # logical convert; on TPU none of this chain exists (native bf16/int8
-        # operands feed the MXU directly)
-        body = fusion_body(i)
-        if not body:
-            return False
-        return all(s.op in ("parameter", "convert", "bitcast", "constant", "copy")
-                   for s in body)
-
-    _SLICE_CONVERT_BODY = {"parameter", "constant", "dynamic-slice", "slice",
-                           "convert", "bitcast", "copy", "transpose"}
-
-    def _is_slice_convert_fusion(i: Instr) -> bool:
-        """Fusion that only selects a slice of a buffer and changes its
-        dtype/layout (cache-layer pick + f32 promotion, int8 weight widening,
-        weight transposes for CPU gemms). On TPU the consumer reads the
-        source slice directly: charge nothing here; consumers charge the
-        read at the narrowest width via effective_operand_bytes."""
-        body = fusion_body(i)
-        if not body:
-            return False
-        return all(s.op in _SLICE_CONVERT_BODY for s in body)
-
-    def _min_chain_width(i: Instr) -> int:
-        """Smallest dtype width appearing in a slice/convert fusion body."""
-        widths = [
-            _DTYPE_BYTES[m.group(1)]
-            for s in fusion_body(i)
-            for m in [_SHAPE_RE.search(s.shape)]
-            if m
-        ]
-        m = _SHAPE_RE.search(i.shape)
-        if m:
-            widths.append(_DTYPE_BYTES[m.group(1)])
-        return min(widths) if widths else 4
-
-    def effective_operand_bytes(name: str, depth: int = 0) -> int:
-        src = table.get(name)
-        if src is None:
-            return 0
-        b = _shape_bytes_from_str(src.shape)
-        if src.op == "fusion" and _is_slice_convert_fusion(src) and not \
-                _is_pure_convert_fusion(src):
-            return _shape_numel(src.shape) * _min_chain_width(src)
-        if depth < 4 and src.operands:
-            if src.op in _XPARENT_OPS or (
-                src.op == "fusion" and _is_pure_convert_fusion(src)
-            ):
-                inner = effective_operand_bytes(src.operands[0], depth + 1)
-                if inner:
-                    b = min(b, inner)
-        return b
-
-    def operand_bytes(i: Instr, skip_dims: set[str] | None = None) -> int:
-        tot = 0
-        for o in i.operands:
-            src = table.get(o)
-            if src is None:
-                continue
-            if skip_dims is not None and _dims_key(src.shape) in skip_dims:
-                continue
-            tot += effective_operand_bytes(o)
-        return tot
-
-    def fusion_body(i: Instr):
-        cm = _CALLS_RE.search(i.line)
-        return comps.get(cm.group(1), []) if cm else []
-
-    def fusion_root_op(i: Instr) -> str:
-        """Root op, chasing through trailing converts/bitcasts (the CPU
-        backend wraps DUS roots in dtype converts)."""
-        body = fusion_body(i)
-        root = next((s for s in body if s.is_root), None)
-        by_name = {s.name: s for s in body}
-        hops = 0
-        while root is not None and root.op in ("convert", "bitcast") and hops < 4:
-            nxt = by_name.get(root.operands[0]) if root.operands else None
-            root = nxt
-            hops += 1
-        return root.op if root else ""
-
-    _SLICE_OPS = {"dynamic-slice", "slice", "gather"}
-
-    def fusion_read_bytes(i: Instr, skip_dims: set[str] | None = None) -> float:
-        """Resolve reads through the fusion body: a fused operand consumed
-        only by (dynamic-)slice/gather is read at the slice size (cache
-        layer selection / embedding rows), not the full buffer."""
-        body = fusion_body(i)
-        if not body:
-            return operand_bytes(i, skip_dims)
-        params: dict[int, str] = {}
-        for sub in body:
-            if sub.op == "parameter":
-                pm = re.search(r"parameter\((\d+)\)", sub.line)
-                if pm:
-                    params[int(pm.group(1))] = sub.name
-        total = 0.0
-        for idx, oname in enumerate(i.operands):
-            src = table.get(oname)
-            if src is None:
-                continue
-            if skip_dims is not None and _dims_key(src.shape) in skip_dims:
-                continue
-            full = effective_operand_bytes(oname)
-            pname = params.get(idx)
-            if pname is None:
-                total += full
-                continue
-            consumers = [s for s in body if pname in s.operands]
-            if consumers and all(c.op in _SLICE_OPS for c in consumers):
-                total += min(full, sum(_shape_bytes_from_str(c.shape) for c in consumers))
-            else:
-                total += full
-        return total
-
-    def instr_hbm_bytes(i: Instr) -> float:
-        """Read+write traffic model with in-place / sparse-access semantics:
-        dynamic-update-slice writes only the updated slice (the cache-append
-        pattern of every decode step); slicing/gather reads only what it
-        produces; fusion reads resolve through the body."""
-        out_b = _shape_bytes_from_str(i.shape)
-        is_fusion = i.op == "fusion"
-        if i.op == "convert" or (is_fusion and _is_pure_convert_fusion(i)):
-            return 0.0          # TPU normalization: no CPU f32-promotion
-        if is_fusion and _is_slice_convert_fusion(i):
-            return 0.0          # consumers charge the slice read (see above)
-        root = fusion_root_op(i) if is_fusion else ""
-        if i.op == "dynamic-update-slice" or (is_fusion and root == "dynamic-update-slice"):
-            # in-place: read+write the update-sized data only; the aliased
-            # (same-dims) destination operand is skipped
-            small = fusion_read_bytes(i, skip_dims={_dims_key(i.shape)}) if is_fusion \
-                else operand_bytes(i, skip_dims={_dims_key(i.shape)})
-            return 2.0 * small
-        if is_fusion and root == "select":
-            # the CPU backend lowers strided dynamic-update-slice to a
-            # full-buffer select(iota==pos); TPU performs an in-place DUS.
-            # Pattern: exactly one operand matches the output dims+dtype and
-            # every other operand is small -> charge the update only.
-            shapes = [table[o].shape for o in i.operands if o in table]
-            matching = [s for s in shapes if _dims_key(s) == _dims_key(i.shape)]
-            others = [
-                _shape_bytes_from_str(s) for s in shapes
-                if _dims_key(s) != _dims_key(i.shape)
-            ]
-            if len(matching) == 1 and all(b <= out_b / 8 for b in others):
-                return 2.0 * sum(others)
-        if i.op in _SLICE_OPS:
-            return 2.0 * out_b
-        if i.op == "scatter":
-            upd = (
-                _shape_bytes_from_str(table[i.operands[2]].shape)
-                if len(i.operands) >= 3 and i.operands[2] in table
-                else out_b
-            )
-            return 2.0 * upd
-        if is_fusion:
-            return fusion_read_bytes(i) + out_b
-        return operand_bytes(i) + out_b
-
-    contributions: list[tuple[float, float, str, str, str]] = []
-    for name, instrs in comps.items():
-        m = mult.get(name, 0.0)
-        if m == 0.0:
-            continue
-        only_flops = fusion_only.get(name, False)
-        for i in instrs:
-            if i.op in ("dot", "convolution"):
-                flops_by_op[i.op] += m * _dot_flops(i, table)
-            if only_flops:
-                continue
-            base = i.op.replace("-start", "")
-            if base in ("all-gather", "all-reduce", "reduce-scatter",
-                        "all-to-all", "collective-permute"):
-                b = operand_bytes(i) or _shape_bytes_from_str(i.shape)
-                bytes_by_kind[base] += m * b
-                num_collectives[base] += int(m)
-                hbm += m * (b + _shape_bytes_from_str(i.shape))
-                if top_k:
-                    contributions.append((m * b, m, base, i.name, i.shape[:60]))
-            elif i.op not in _SKIP_BYTES_OPS and i.op != "while":
-                b = instr_hbm_bytes(i)
-                hbm += m * b
-                if top_k:
-                    contributions.append((m * b, m, i.op, i.name, i.shape[:60]))
-
-    if top_k:
-        contributions.sort(reverse=True)
-        return HLOReport(
-            flops=sum(flops_by_op.values()),
-            hbm_bytes=hbm,
-            collective_bytes=sum(bytes_by_kind.values()),
-            bytes_by_kind=dict(bytes_by_kind),
-            flops_by_op=dict(flops_by_op),
-            num_collectives=dict(num_collectives),
-        ), contributions[:top_k]
-
-    return HLOReport(
-        flops=sum(flops_by_op.values()),
-        hbm_bytes=hbm,
-        collective_bytes=sum(bytes_by_kind.values()),
-        bytes_by_kind=dict(bytes_by_kind),
-        flops_by_op=dict(flops_by_op),
-        num_collectives=dict(num_collectives),
-    )
-
-
-# ---------------------------------------------------------------------------
-# roofline
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class Roofline:
-    flops: float               # per device
-    hbm_bytes: float           # per device
-    collective_bytes: float    # per device
-    chips: int
-    model_flops: float = 0.0   # 6*N*D analytic (global)
-    xla_flops: float = 0.0     # cost_analysis cross-check (per device, no loop mult)
-    xla_bytes: float = 0.0
-
-    @property
-    def compute_s(self) -> float:
-        return self.flops / PEAK_FLOPS
-
-    @property
-    def memory_s(self) -> float:
-        return self.hbm_bytes / HBM_BW
-
-    @property
-    def collective_s(self) -> float:
-        return self.collective_bytes / ICI_BW
-
-    @property
-    def dominant(self) -> str:
-        terms = {"compute": self.compute_s, "memory": self.memory_s,
-                 "collective": self.collective_s}
-        return max(terms, key=terms.get)
-
-    @property
-    def step_s(self) -> float:
-        return max(self.compute_s, self.memory_s, self.collective_s)
-
-    @property
-    def useful_flops_ratio(self) -> float:
-        """MODEL_FLOPS / compiled FLOPs (global): remat/redundancy waste."""
-        total = self.flops * self.chips
-        return self.model_flops / total if total else 0.0
-
-    @property
-    def mfu(self) -> float:
-        """model FLOPs / (chips * peak * step_s): roofline-fraction score."""
-        denom = self.chips * PEAK_FLOPS * self.step_s
-        return self.model_flops / denom if denom else 0.0
-
-    def as_dict(self) -> dict:
-        return {
-            "flops_per_device": self.flops,
-            "hbm_bytes_per_device": self.hbm_bytes,
-            "collective_bytes_per_device": self.collective_bytes,
-            "chips": self.chips,
-            "compute_s": self.compute_s,
-            "memory_s": self.memory_s,
-            "collective_s": self.collective_s,
-            "dominant": self.dominant,
-            "step_s": self.step_s,
-            "model_flops": self.model_flops,
-            "useful_flops_ratio": self.useful_flops_ratio,
-            "mfu": self.mfu,
-            "xla_flops_per_device": self.xla_flops,
-            "xla_bytes_per_device": self.xla_bytes,
-        }
-
-
-def roofline_from_compiled(compiled, chips: int, model_flops: float = 0.0) -> tuple[Roofline, HLOReport]:
-    rep = analyze(compiled.as_text())
-    ca = compiled.cost_analysis()
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0]
-    ca = ca or {}
-    rl = Roofline(
-        flops=rep.flops,
-        hbm_bytes=rep.hbm_bytes,
-        collective_bytes=rep.collective_bytes,
-        chips=chips,
-        model_flops=model_flops,
-        xla_flops=float(ca.get("flops", 0.0)),
-        xla_bytes=float(ca.get("bytes accessed", 0.0)),
-    )
-    return rl, rep

@@ -1,5 +1,6 @@
-"""repro-lint: engine, allowlist, all seven checkers, CLI, and the
-recompile-guard runtime fixture (scheduler decode loops compile once).
+"""repro-lint: engine, allowlist, the seven source/runtime checkers, CLI,
+and the recompile-guard runtime fixture (scheduler decode loops compile
+once).  The four compiled-program xray checkers live in tests/test_xray.py.
 
 Checker tests assert EXACT finding counts and file:line anchors. Fixture
 files under tests/analysis_fixtures/ tag every expected finding line with a
@@ -396,7 +397,8 @@ def test_cli_json_emits_severity_and_col(capsys):
 
 
 def test_cli_clean_on_repo_tree():
-    """The acceptance gate: the full seven-checker pass over the repo tree
+    """The acceptance gate: the full default-checker pass (seven source/
+    runtime + four xray compiled-program contracts) over the repo tree
     (same invocation as CI) reports nothing."""
     assert cli_main(["--root", ROOT]) == 0
 

@@ -1,0 +1,309 @@
+"""repro-xray: compiled-program contract checkers (DESIGN.md §14).
+
+Two halves, in the fixture style of test_analysis.py:
+
+* parser/traffic-model units — sub-byte (s4) operand accounting, the
+  unpack-fusion normalization (and its no-multiply guard), the
+  input_output_alias header parser;
+* contract audits — the real serving catalog is CLEAN (the CI acceptance
+  gate), and four PLANTED violations (undonated cache, materialized f32
+  dequant, bogus nbytes model, unexpected all-gather) are each caught by
+  the matching checker with exact checker-id and anchor assertions,
+  including through the CLI's ``--select 'xray-*'`` glob path.
+
+The catalog compiles once per process (module-global memoization in
+``repro.analysis.xray``); planted programs are built from reduced archs
+or synthetic HLO so nothing here re-compiles the full-size rows.
+"""
+
+import dataclasses
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.analysis.xray as xray
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.hlo import (
+    Module,
+    analyze,
+    parse_input_output_aliases,
+    shape_bytes,
+)
+from repro.analysis.xray import (
+    XrayProgram,
+    _cache_sigs,
+    audit_bytes,
+    audit_collectives,
+    audit_dequant,
+    audit_donation,
+    catalog,
+)
+
+ROOT = __file__.rsplit("/tests/", 1)[0]
+
+
+# ---------------------------------------------------------------------------
+# parser / traffic-model units
+# ---------------------------------------------------------------------------
+
+def test_s4_operand_bytes_are_packed():
+    """Sub-byte dtypes charge packed bits, not one byte per element: the
+    old table said s4 = 1 B/elem and overstated packed-int4 traffic 2x."""
+    assert shape_bytes("s4[22,11264,1024]{2,1,0}") == 22 * 11264 * 1024 // 2
+    assert shape_bytes("u4[8]") == 4
+    assert shape_bytes("s8[4,4]") == 16
+    assert shape_bytes("u1[10]") == 2          # ceil(10 / 8)
+    assert shape_bytes("bf16[2,3]") == 12
+
+
+S4_DOT_HLO = """\
+HloModule m, entry_computation_layout={(s4[256,256]{1,0}, f32[256]{0})->f32[256]{0}}
+
+ENTRY %main (p0: s4[256,256], p1: f32[256]) -> f32[256] {
+  %p0 = s4[256,256]{1,0} parameter(0)
+  %p1 = f32[256]{0} parameter(1)
+  ROOT %dot.1 = f32[256]{0} dot(s4[256,256]{1,0} %p0, f32[256]{0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_s4_dot_hbm_bytes_pinned():
+    """End-to-end pin: a dot reading an s4[256,256] operand is charged
+    256*256/2 = 32768 bytes for it (plus f32 vector in + f32 out)."""
+    rep = analyze(S4_DOT_HLO)
+    assert rep.hbm_bytes == 256 * 256 // 2 + 256 * 4 + 256 * 4
+
+
+UNPACK_HLO = """\
+HloModule m
+
+%unpack (p: s8[128]) -> s32[256] {
+  %p = s8[128]{0} parameter(0)
+  %sl = s8[128]{0} shift-left(s8[128]{0} %p, s8[128]{0} %p)
+  %sra = s8[128]{0} shift-right-arithmetic(s8[128]{0} %sl, s8[128]{0} %sl)
+  %cat = s8[256]{0} concatenate(s8[128]{0} %sra, s8[128]{0} %sra), dimensions={0}
+  ROOT %cv = s32[256]{0} convert(s8[256]{0} %cat)
+}
+
+%dequant (p.0: s8[256]) -> f32[256] {
+  %p.1 = s8[256]{0} parameter(0)
+  %cv.1 = f32[256]{0} convert(s8[256]{0} %p.1)
+  %c.1 = f32[] constant(0.5)
+  %b.1 = f32[256]{0} broadcast(f32[] %c.1), dimensions={}
+  ROOT %m.1 = f32[256]{0} multiply(f32[256]{0} %cv.1, f32[256]{0} %b.1)
+}
+
+ENTRY %main (a: s8[128], b: s8[256]) -> (s32[256], f32[256]) {
+  %a = s8[128]{0} parameter(0)
+  %b = s8[256]{0} parameter(1)
+  %f1 = s32[256]{0} fusion(s8[128]{0} %a), kind=kLoop, calls=%unpack
+  %f2 = f32[256]{0} fusion(s8[256]{0} %b), kind=kLoop, calls=%dequant
+  ROOT %t = (s32[256]{0}, f32[256]{0}) tuple(s32[256]{0} %f1, f32[256]{0} %f2)
+}
+"""
+
+
+def test_unpack_fusion_normalized_but_dequant_is_not():
+    """The nibble-decode (slices + shifts + concat, integer out) costs 0
+    bytes — consumers charge the packed read.  A fusion with a multiply
+    (real dequant arithmetic) must NOT be normalized away."""
+    mod = Module(UNPACK_HLO)
+    f1, f2 = mod.table["f1"], mod.table["f2"]
+    assert mod.is_unpack_fusion(f1)
+    assert mod.instr_hbm_bytes(f1) == 0.0
+    assert not mod.is_unpack_fusion(f2)
+    assert mod.instr_hbm_bytes(f2) > 0.0
+    # a consumer reading the unpack fusion resolves to the packed source
+    assert mod.effective_operand_bytes("f1") == 128
+
+
+def test_input_output_alias_header_parser():
+    text = ("HloModule jit_f, input_output_alias={ {1}: (2, {}, may-alias), "
+            "{0}: (0, {1}, must-alias) }, entry_computation_layout={()->()}\n")
+    assert parse_input_output_aliases(text) == [
+        ((1,), 2, (), "may-alias"),
+        ((0,), 0, (1,), "must-alias"),
+    ]
+    assert parse_input_output_aliases("HloModule m\n") == []
+
+
+# ---------------------------------------------------------------------------
+# the real catalog is clean (acceptance gate)
+# ---------------------------------------------------------------------------
+
+def test_catalog_covers_every_adapter_program():
+    names = {p.name for p in catalog()}
+    for expect in (
+        "tinyllama-1.1b/decode[int8]",
+        "tinyllama-1.1b/decode[int4]",
+        "tinyllama-1.1b/decode[mixed]",
+        "tinyllama-1.1b/contiguous/decode_chunk",
+        "tinyllama-1.1b/contiguous/insert_slots",
+        "tinyllama-1.1b/contiguous/verify",
+        "tinyllama-1.1b/contiguous/prefill",
+        "tinyllama-1.1b/paged/decode_until",
+        "tinyllama-1.1b/paged/insert",
+        "tinyllama-1.1b/paged/verify",
+        "deepseek-v2-lite-16b/contiguous/decode_chunk",
+        "rwkv6-7b/recurrent/decode_chunk",
+    ):
+        assert expect in names, f"catalog lost {expect}"
+
+
+def test_repo_tree_passes_all_xray_audits():
+    """The current serving stack holds every compiled-program contract:
+    donation, dequant streaming, bytes-per-step, collectives/trip-count."""
+    for audit in (audit_donation, audit_dequant, audit_bytes,
+                  audit_collectives):
+        found = [f for p in catalog() for f in audit(p)]
+        assert found == [], "\n".join(f.render() for f in found)
+
+
+def test_bytes_rows_within_tolerance_with_headroom():
+    """Pin the contract margin: every preset's model-vs-HLO delta stays
+    within tolerance (regression here means the traffic model drifted)."""
+    rows = [p for p in catalog() if p.expected_bytes is not None]
+    assert {p.fmt for p in rows} == {"int8", "int4", "mixed"}
+    for p in rows:
+        rep = analyze(p.hlo_text)
+        delta = abs(rep.hbm_bytes / p.expected_bytes - 1.0)
+        assert delta <= xray.BYTES_RTOL, (p.name, delta)
+
+
+# ---------------------------------------------------------------------------
+# planted violations — each caught by the matching checker
+# ---------------------------------------------------------------------------
+
+ANCHOR = "tests/test_xray.py"
+
+
+@pytest.fixture(scope="module")
+def reduced():
+    from repro.models.registry import build, load_config
+
+    cfg = load_config("tinyllama-1.1b").reduced()
+    model = build(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache = jax.eval_shape(lambda: model.init_cache(2, 64, cfg.cdtype()))
+    return cfg, model, params, cache
+
+
+@pytest.fixture(scope="module")
+def undonated_prog(reduced):
+    cfg, model, params, cache = reduced
+    tok = jax.ShapeDtypeStruct((2,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((2,), jnp.int32)
+    hlo = jax.jit(model.decode).lower(params, tok, cache, pos).compile().as_text()
+    return XrayProgram(
+        name="planted/undonated-decode", kind="decode", hlo_text=hlo,
+        path=ANCHOR, line=1, cache_sigs=_cache_sigs(cache),
+        require_alias=True, require_dus=True)
+
+
+def test_planted_undonated_cache_is_flagged(undonated_prog):
+    fs = list(audit_donation(undonated_prog))
+    assert len(fs) == 1
+    f = fs[0]
+    assert f.checker == "xray-donation"
+    assert f.anchor == f"{ANCHOR}:1"
+    assert "planted/undonated-decode" in f.message
+    assert "input_output_alias" in f.message
+    assert "%p" in f.message          # names the offending parameter
+
+
+def test_planted_f32_dequant_materialization_is_flagged():
+    def f(q, s, x):
+        w = (q.astype(jnp.float32).reshape(256, 8, 128)
+             * s[..., None]).reshape(256, 1024)
+        return x @ w
+
+    hlo = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((256, 1024), jnp.int8),
+        jax.ShapeDtypeStruct((256, 8), jnp.float32),
+        jax.ShapeDtypeStruct((4, 256), jnp.float32)).compile().as_text()
+    prog = XrayProgram(
+        name="planted/f32-dequant", kind="decode", hlo_text=hlo,
+        path=ANCHOR, line=2, cache_sigs=Counter(),
+        weight_sigs=frozenset({"256,1024", "1024,256"}))
+    fs = list(audit_dequant(prog))
+    assert [f.checker for f in fs] == ["xray-dequant"]
+    assert fs[0].anchor == f"{ANCHOR}:2"
+    assert "planted/f32-dequant" in fs[0].message
+    assert "%" in fs[0].message       # names the materializing instruction
+    assert "f32[256,1024]" in fs[0].message
+
+
+def test_planted_bogus_nbytes_model_is_flagged():
+    """An nbytes override claiming half the real storage pushes the
+    model-vs-HLO delta far beyond tolerance."""
+    row = next(p for p in catalog() if p.fmt == "int8")
+    bogus = dataclasses.replace(row, name="planted/bogus-nbytes",
+                                path=ANCHOR, line=3,
+                                expected_bytes=row.expected_bytes / 2)
+    fs = list(audit_bytes(bogus))
+    assert [f.checker for f in fs] == ["xray-bytes"]
+    assert fs[0].anchor == f"{ANCHOR}:3"
+    assert "planted/bogus-nbytes" in fs[0].message
+    assert "top contributor %" in fs[0].message
+    assert list(audit_bytes(row)) == []     # the honest model passes
+
+
+def test_planted_all_gather_in_decode_is_flagged():
+    """Inject an all-gather into a real compiled decode: the sharding
+    policy predicts no collectives on this mesh."""
+    row = next(p for p in catalog() if p.name.endswith("/decode_chunk"))
+    assert "ROOT %tuple" in row.hlo_text
+    injected = row.hlo_text.replace(
+        "ROOT %tuple",
+        "%planted-ag = f32[2,32]{1,0} all-gather(f32[1,32]{1,0} %nothing), "
+        "replica_groups={}, dimensions={0}\n  ROOT %tuple", 1)
+    prog = dataclasses.replace(row, name="planted/all-gather",
+                               path=ANCHOR, line=4, hlo_text=injected)
+    fs = list(audit_collectives(prog))
+    assert [f.checker for f in fs] == ["xray-collective"]
+    assert fs[0].anchor == f"{ANCHOR}:4"
+    assert "planted/all-gather" in fs[0].message
+    assert "%planted-ag" in fs[0].message
+    assert list(audit_collectives(row)) == []   # the real program is clean
+
+
+def test_trip_count_contract_catches_lost_layer_scan():
+    row = next(p for p in catalog() if p.fmt == "int8")
+    assert row.num_layers == 22
+    wrong = dataclasses.replace(row, name="planted/trip-count",
+                                num_layers=23)
+    fs = list(audit_collectives(wrong))
+    assert [f.checker for f in fs] == ["xray-collective"]
+    assert "num_layers=23" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# CLI: glob --select, planted catalog -> non-zero exit naming the program
+# ---------------------------------------------------------------------------
+
+def test_cli_xray_glob_clean_on_repo_tree():
+    """`python -m repro.analysis --select xray-*` exits 0 on the tree."""
+    assert cli_main(["--root", ROOT, "--select", "xray-*",
+                     "src/repro/analysis/xray.py"]) == 0
+
+
+def test_cli_xray_glob_fails_on_planted_catalog(monkeypatch, capsys,
+                                                undonated_prog):
+    monkeypatch.setattr(xray, "_CATALOG", [undonated_prog])
+    rc = cli_main(["--root", ROOT, "--select", "xray-*",
+                   "src/repro/analysis/xray.py"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "xray-donation" in out
+    assert "planted/undonated-decode" in out
+
+
+def test_cli_select_rejects_matchless_glob():
+    assert cli_main(["--select", "no-such-*"]) == 2
+
+
+def test_cli_select_exact_id_still_works():
+    assert cli_main(["--root", ROOT, "--select", "xray-bytes",
+                     "src/repro/analysis/xray.py"]) == 0
