@@ -1,0 +1,150 @@
+"""`kvquant` suite: quantized KV-cache pool — bytes per decode step + parity.
+
+The decode-side twin of the weight-format suite (quant_bench.py): once
+weights stream at 3-4 bits, the KV cache is the next HBM term (§II-B
+applied to the cache axis). ``kv_quant`` stores the paged block pool and
+the contiguous kvt cache at int8/fp8 width with per-row f32 scales; the
+paged attention kernel dequantizes in VMEM, so per-step cache traffic
+drops to storage width + the scale rows.
+
+Measured here, on the full-size head geometry (head_dim 64 — the scale
+overhead is 4/head_dim per element, so narrow reduced heads would flatter
+nothing and distort the fp16 gate):
+
+  pool bytes/token     device bytes per cached token position, per format
+  paged/contiguous/direct greedy parity of every kv_quant engine
+  agreement vs float   token agreement of quantized vs float decode
+
+CI gates (either failing exits non-zero):
+  - quantized pool bytes/token >= 1.8x lower than the float paged
+    baseline (the PR 4 pool at the config compute dtype);
+  - quantized pool bytes/token <= 0.55x a HYPOTHETICAL fp16 pool —
+    the stricter bound that prices the scale overhead honestly.
+
+Headline numbers land in BENCH_kvquant.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.models.registry import build, load_config
+from repro.serving.core import Request
+from repro.serving.engine import InferenceEngine
+from repro.serving.paged import serve_paged
+
+KV_FORMATS = ("int8", "fp8")
+GATE_VS_FLOAT = 1.8
+GATE_VS_FP16 = 0.55
+
+PROMPTS = [[5, 3], [7, 1, 4], list(range(1, 11)), list(range(2, 16))]
+BUDGETS = [8, 6, 8, 6]
+STEPS = max(BUDGETS)
+
+
+def _pool_bytes(model, num_blocks: int, block_size: int, dtype) -> int:
+    tree = jax.eval_shape(
+        lambda: model.init_paged_cache(num_blocks, block_size, dtype))
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def run() -> bool:
+    # reduced depth/width but FULL head_dim: the per-row scale overhead is
+    # 4 bytes per head_dim elements, and the gates price exactly that
+    cfg = dataclasses.replace(load_config("tinyllama-1.1b").reduced(),
+                              head_dim=64)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache_len = 48
+    block_size, slots = 8, 4
+    num_blocks = slots * (cache_len // block_size) + 1
+
+    reqs = [Request(id=i, tokens=p, max_new=b)
+            for i, (p, b) in enumerate(zip(PROMPTS, BUDGETS))]
+
+    float_engine = InferenceEngine(model, params, cache_len=cache_len)
+    float_out = serve_paged(float_engine, reqs, STEPS, slots=slots,
+                            block_size=block_size)
+    float_bytes = _pool_bytes(model, num_blocks, block_size, cfg.cdtype())
+    fp16_bytes = _pool_bytes(model, num_blocks, block_size, jnp.float16)
+    tokens_pooled = num_blocks * block_size
+    emit("kvquant/float/pool_bytes_per_token", 0.0,
+         f"{float_bytes / tokens_pooled:.1f} B ({cfg.cdtype().name} pool)")
+
+    ok = True
+    headline: dict = {
+        "cache_len": cache_len, "block_size": block_size,
+        "float_pool_bytes": int(float_bytes),
+        "fp16_pool_bytes": int(fp16_bytes),
+        "gate_vs_float_min": GATE_VS_FLOAT, "gate_vs_fp16_max": GATE_VS_FP16,
+        "formats": {},
+    }
+    for kvq in KV_FORMATS:
+        eng = InferenceEngine(model, params, cache_len=cache_len,
+                              kv_quant=kvq)
+        q_out = serve_paged(eng, reqs, STEPS, slots=slots,
+                            block_size=block_size)
+        # parity: the paged quantized path must equal the contiguous
+        # quantized decode token-for-token (same association, same rows)
+        direct_ok = True
+        for r, q in zip(reqs, q_out):
+            d = eng.generate({"tokens": jnp.asarray([r.tokens], jnp.int32)},
+                             r.max_new)
+            if not np.array_equal(np.asarray(d.tokens[0]),
+                                  np.asarray(q.tokens)):
+                direct_ok = False
+        if not direct_ok:
+            print(f"FAIL: kvquant/{kvq}: paged serve diverged from the "
+                  "contiguous quantized decode", flush=True)
+            ok = False
+        agree = np.mean([
+            np.mean(np.asarray(a.tokens) == np.asarray(b.tokens))
+            for a, b in zip(float_out, q_out)])
+
+        q_bytes = _pool_bytes(eng.model, num_blocks, block_size,
+                              eng.cfg.cdtype())
+        vs_float = float_bytes / q_bytes
+        vs_fp16 = q_bytes / fp16_bytes
+        emit(f"kvquant/{kvq}/pool_bytes_per_token", 0.0,
+             f"{q_bytes / tokens_pooled:.1f} B (storage + f32 scale rows)")
+        emit(f"kvquant/{kvq}/bytes_vs_float", 0.0,
+             f"{vs_float:.2f}x fewer (gate: >= {GATE_VS_FLOAT}x)")
+        emit(f"kvquant/{kvq}/bytes_vs_fp16", 0.0,
+             f"{vs_fp16:.3f}x fp16 (gate: <= {GATE_VS_FP16}x)")
+        emit(f"kvquant/{kvq}/paged_eq_contiguous", 0.0, str(direct_ok))
+        emit(f"kvquant/{kvq}/token_agreement_vs_float", 0.0, f"{agree:.3f}")
+        if vs_float < GATE_VS_FLOAT:
+            print(f"FAIL: kvquant/{kvq}: pool bytes only {vs_float:.2f}x "
+                  f"under the float baseline, gate is >= {GATE_VS_FLOAT}x",
+                  flush=True)
+            ok = False
+        if vs_fp16 > GATE_VS_FP16:
+            print(f"FAIL: kvquant/{kvq}: pool bytes {vs_fp16:.3f}x fp16, "
+                  f"gate is <= {GATE_VS_FP16}x", flush=True)
+            ok = False
+        headline["formats"][kvq] = {
+            "pool_bytes": int(q_bytes),
+            "bytes_vs_float": round(vs_float, 4),
+            "bytes_vs_fp16": round(vs_fp16, 4),
+            "paged_eq_contiguous": bool(direct_ok),
+            "token_agreement_vs_float": round(float(agree), 4),
+        }
+
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_kvquant.json")
+    with open(out_path, "w") as f:
+        json.dump(headline, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -1,10 +1,17 @@
-"""Paper Table V: perplexity of W32A32 vs W8A8 (GS=256).
+"""Paper Table V: perplexity of W32A32 vs quantized presets (GS from cfg).
 
-Paper: TinyLlama on WikiText-2, 7.05 -> 7.09 (+0.57%). WikiText-2 is not
-available offline, so we preserve the comparison STRUCTURE: train a small
-TinyLlama-family model on a deterministic synthetic corpus, then evaluate
-the SAME held-out data under fp32 weights and W8A8-quantized weights, and
-report both PPLs, the relative degradation, and the mean logit KL.
+Paper: TinyLlama on WikiText-2, 7.05 -> 7.09 (+0.57%) at W8A8. WikiText-2
+is not available offline, so we preserve the comparison STRUCTURE: train a
+small TinyLlama-family model on a deterministic synthetic corpus, then
+evaluate the SAME held-out data under fp32 weights and each quantized
+preset — int8 (the paper row), fp8 (e4m3 value grid), and mixed3 (attn/ffn
+int3, embed/classifier int8) — reporting PPL, relative degradation, and
+mean logit KL per preset.
+
+CI gate: the sub-4-bit mixed3 preset must stay within ``MIXED3_PPL_GATE``
+relative PPL degradation of the fp32 baseline (int8 runs well under 1%;
+mixed3's coarser grid costs more, and the gate pins how much more this
+repo accepts before a format regression fails the run).
 """
 
 from __future__ import annotations
@@ -23,7 +30,18 @@ from repro.optim import adamw
 from repro.train.loop import lm_loss, make_train_step
 
 
-def run():
+# max relative PPL degradation the sub-4-bit preset may cost on the
+# held-out synthetic eval before the run fails. Measured on the current
+# tree: int8 0.18%, fp8 0.44%, mixed3 10.1% (the reduced synthetic model
+# at GS=32 punishes a 7-level grid much harder than the paper's 1.1B at
+# GS=256 would). The gate separates "coarse but working" from "broken
+# pack/unpack or scale association", which lands at hundreds of percent.
+MIXED3_PPL_GATE = 15.0
+
+PRESETS = ("int8", "fp8", "mixed3")
+
+
+def run() -> bool:
     cfg = load_config("tinyllama-1.1b").reduced()
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -37,7 +55,6 @@ def run():
 
     # held-out evaluation (steps the model never trained on)
     eval_batches = [jax.tree.map(jnp.asarray, data.batch_at(1000 + i)) for i in range(4)]
-    qparams = quantize_params(params, cfg.group_size)
 
     @jax.jit
     def eval_nll(p, batch):
@@ -45,23 +62,40 @@ def run():
         return lm_loss(logits, batch["labels"]), logits
 
     t0 = time.perf_counter()
-    nll_f, nll_q, kls = [], [], []
+    nll_f, logfs = [], []
     for b in eval_batches:
         lf, logf = eval_nll(params, b)
-        lq, logq = eval_nll(qparams, b)
         nll_f.append(float(lf))
-        nll_q.append(float(lq))
-        pf = jax.nn.log_softmax(logf.astype(jnp.float32), -1)
-        pq = jax.nn.log_softmax(logq.astype(jnp.float32), -1)
-        kls.append(float(jnp.mean(jnp.sum(jnp.exp(pf) * (pf - pq), axis=-1))))
-    us = (time.perf_counter() - t0) * 1e6 / (2 * len(eval_batches))
-
+        logfs.append(jax.nn.log_softmax(logf.astype(jnp.float32), -1))
     ppl_f = float(np.exp(np.mean(nll_f)))
-    ppl_q = float(np.exp(np.mean(nll_q)))
+
+    degradation = {}
+    for preset in PRESETS:
+        qparams = quantize_params(params, cfg.group_size, formats=preset)
+        nll_q, kls = [], []
+        for b, pf in zip(eval_batches, logfs):
+            lq, logq = eval_nll(qparams, b)
+            nll_q.append(float(lq))
+            pq = jax.nn.log_softmax(logq.astype(jnp.float32), -1)
+            kls.append(float(jnp.mean(jnp.sum(jnp.exp(pf) * (pf - pq), axis=-1))))
+        ppl_q = float(np.exp(np.mean(nll_q)))
+        degradation[preset] = 100 * (ppl_q - ppl_f) / ppl_f
+        tag = "w8a8" if preset == "int8" else preset   # the paper's row name
+        emit(f"table5/ppl_{tag}_gs{cfg.group_size}", 0.0, f"{ppl_q:.4f}")
+        emit(f"table5/{tag}_degradation_pct", 0.0,
+             f"{degradation[preset]:.3f}%")
+        emit(f"table5/{tag}_mean_logit_kl", 0.0, f"{np.mean(kls):.3e}")
+    us = (time.perf_counter() - t0) * 1e6 / ((1 + len(PRESETS)) * len(eval_batches))
     emit("table5/ppl_w32a32", us, f"{ppl_f:.4f}")
-    emit("table5/ppl_w8a8_gs%d" % cfg.group_size, us, f"{ppl_q:.4f}")
-    emit("table5/ppl_degradation_pct", us, f"{100*(ppl_q-ppl_f)/ppl_f:.3f}%")
-    emit("table5/mean_logit_kl", us, f"{np.mean(kls):.3e}")
+
+    emit("table5/mixed3_ppl_gate", 0.0,
+         f"{degradation['mixed3']:.3f}% (gate: <= {MIXED3_PPL_GATE}%)")
+    if degradation["mixed3"] > MIXED3_PPL_GATE:
+        print(f"FAIL: quality: mixed3 PPL degradation "
+              f"{degradation['mixed3']:.3f}% exceeds the "
+              f"{MIXED3_PPL_GATE}% gate", flush=True)
+        return False
+    return True
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 """`quant` suite: per-format PTQ comparison on TinyLlama decode shapes.
 
 For every registered weight format (int8 = paper W8A8, int4 = packed
-sub-byte) reports:
+sub-byte, int3 = packed sub-4-bit, fp8 = e4m3 value grid) reports:
 
   bits-per-weight       stored bits per logical weight incl. fp32 scales
   weight MB per step    bytes DMA'd from HBM for one decode step's matmuls
@@ -13,15 +13,24 @@ sub-byte) reports:
   Table-IV error stats  round-trip |r_hat - r| statistics (Eq. 3), plus a
                         NAIVE per-tensor int4 row showing what group-wise
                         scales buy at 4 bits
+
+plus the "mixed3" policy preset (attn/ffn int3, embed/classifier/other
+int8) priced per shape class. CI gate: mixed3 weight bytes/step must be
+<= 0.8x int4's on these shapes, or the run fails. Headline numbers land
+in BENCH_quant.json.
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.core.policy import resolve_format_map
 from repro.core.quant import available_formats, quantization_error_stats, quantize
 from repro.kernels import ops
 
@@ -29,7 +38,11 @@ from repro.kernels import ops
 # kernel1 (d, d), kernel2-style (4d-ish, d) and its transpose cover the
 # attention + FFN traffic without re-timing duplicate shapes.
 SHAPES = [(2048, 2048), (5632, 2048), (2048, 5632)]
+# policy leaf class each shape stands in for when pricing format MAPS:
+# (d, d) is an attention projection, the (4d-ish, d) pair is the FFN
+SHAPE_CLASSES = ("attn", "ffn", "ffn")
 GS = 256
+MIXED3_VS_INT4_GATE = 0.8
 
 
 def _naive_int4_per_tensor(r: np.ndarray) -> np.ndarray:
@@ -74,12 +87,42 @@ def run():
         ratio = step_bytes["int8"] / step_bytes["int4"]
         emit("quant/int4_vs_int8_weight_bytes", 0.0, f"{ratio:.2f}x fewer")
 
+    # the "mixed3" policy preset, priced per shape class (attn/ffn -> int3
+    # on these shapes; embed/classifier keep int8 but have no shape here)
+    fmap = resolve_format_map("mixed3")
+    qws3 = [quantize(w, GS, fmap[c]) for w, c in zip(weights_f, SHAPE_CLASSES)]
+    step_bytes["mixed3"] = sum(q.nbytes() for q in qws3)
+    emit("quant/mixed3/weight_mb_per_step", 0.0,
+         f"{step_bytes['mixed3'] / 1e6:.2f}MB")
+    ok = True
+    if {"int4", "mixed3"} <= set(step_bytes):
+        r34 = step_bytes["mixed3"] / step_bytes["int4"]
+        emit("quant/mixed3_vs_int4_weight_bytes", 0.0,
+             f"{r34:.3f}x int4 (gate: <= {MIXED3_VS_INT4_GATE}x)")
+        if r34 > MIXED3_VS_INT4_GATE:
+            print(f"FAIL: quant: mixed3 weight bytes/step is {r34:.3f}x int4, "
+                  f"gate is <= {MIXED3_VS_INT4_GATE}x", flush=True)
+            ok = False
+
     # group-wise int4 vs naive per-tensor int4 (what Table IV looks like
     # without per-group scales at 4 bits)
     w0 = np.asarray(weights_f[0])
     naive_err = np.abs(_naive_int4_per_tensor(w0) - w0)
     emit("quant/int4_naive_per_tensor/err_mean", 0.0, f"{naive_err.mean():.4g}")
     emit("quant/int4_naive_per_tensor/err_max", 0.0, f"{naive_err.max():.4g}")
+
+    headline = {
+        "group_size": GS,
+        "weight_bytes_per_step": {k: int(v) for k, v in step_bytes.items()},
+        "mixed3_vs_int4": round(step_bytes["mixed3"] / step_bytes["int4"], 4),
+        "gate_mixed3_vs_int4_max": MIXED3_VS_INT4_GATE,
+    }
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_quant.json")
+    with open(out_path, "w") as f:
+        json.dump(headline, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return ok
 
 
 if __name__ == "__main__":

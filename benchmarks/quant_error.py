@@ -3,7 +3,15 @@
 Paper reports, over all TinyLlama weight groups: max 0.0115, min 0.0,
 mean 2.65e-4, std 1.73e-4, plus mean relative error 3.30% (std 11.57%).
 We quantize TinyLlama-shaped weight tensors (same init family) and report
-the same statistics.
+the same statistics — for int8 (the paper row) and for the narrower
+formats (int4, int3, fp8) on the non-embedding matrices they actually
+cover under the mixed presets.
+
+CI gates (run fails on either): int3's mean error must stay within
+``INT3_VS_INT4_GATE``x int4's (halving the grid from 7 to 3 levels costs
+~2.1x; a broken pack path costs far more), and fp8's within
+``FP8_VS_INT8_GATE``x int8's (e4m3's 3-bit mantissa vs the 255-level int8
+grid measures ~3x; a wrong scale association blows past it).
 """
 
 from __future__ import annotations
@@ -14,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.quant import quantize_groupwise
+from repro.core.quant import quantize, quantize_groupwise
 
 SHAPES = [  # TinyLlama weight matrices (paper Table I)
     (32000, 2048),   # embeddings
@@ -25,27 +33,66 @@ SHAPES = [  # TinyLlama weight matrices (paper Table I)
     (2048, 5632),                      # W2
 ]
 
+# attn/ffn projections only — the leaves the mixed/mixed3 presets map the
+# narrow formats onto (embed/classifier stay int8 there)
+NARROW_SHAPES = SHAPES[2:]
+NARROW_FORMATS = ("int4", "int3", "fp8")
 
-def run():
+INT3_VS_INT4_GATE = 3.0   # int3 mean err / int4 mean err (measured ~2.1x)
+FP8_VS_INT8_GATE = 4.0    # fp8 mean err / int8 mean err (measured ~3.0x)
+
+
+def _stats(fmt: str, shapes) -> tuple[np.ndarray, np.ndarray]:
     rng = np.random.default_rng(0)
     errs, rels = [], []
-    t0 = time.perf_counter()
-    for i, shape in enumerate(SHAPES):
+    for shape in shapes:
         w = jnp.asarray((rng.normal(size=shape) * 0.02).astype(np.float32))
-        qt = quantize_groupwise(w, 256)
+        qt = quantize(w, 256, fmt) if fmt != "int8" else quantize_groupwise(w, 256)
         err = np.abs(np.asarray(qt.dequantize()) - np.asarray(w))
         errs.append(err.ravel())
         denom = np.abs(np.asarray(w))
         rels.append((err / np.where(denom > 0, denom, 1.0)).ravel())
+    return np.concatenate(errs), np.concatenate(rels)
+
+
+def run() -> bool:
+    t0 = time.perf_counter()
+    e, r = _stats("int8", SHAPES)
     us = (time.perf_counter() - t0) * 1e6 / len(SHAPES)
-    e = np.concatenate(errs)
-    r = np.concatenate(rels)
     emit("table4/int8_gs256_max", us, f"{e.max():.4g}")
     emit("table4/int8_gs256_min", us, f"{e.min():.4g}")
     emit("table4/int8_gs256_mean", us, f"{e.mean():.4g}")
     emit("table4/int8_gs256_std", us, f"{e.std():.4g}")
     emit("table4/rel_err_mean_pct", us, f"{100*r.mean():.2f}%")
     emit("table4/rel_err_std_pct", us, f"{100*r.std():.2f}%")
+
+    means = {"int8": float(e.mean())}
+    for fmt in NARROW_FORMATS:
+        ef, rf = _stats(fmt, NARROW_SHAPES)
+        means[fmt] = float(ef.mean())
+        emit(f"table4/{fmt}_gs256_mean", 0.0, f"{ef.mean():.4g}")
+        emit(f"table4/{fmt}_gs256_max", 0.0, f"{ef.max():.4g}")
+        emit(f"table4/{fmt}_rel_err_mean_pct", 0.0, f"{100*rf.mean():.2f}%")
+
+    # int8's mean over ALL shapes vs narrow formats over attn/ffn shapes is
+    # comparable: the per-group error depends on the group's absmax, which
+    # this init family draws identically for every matrix
+    ok = True
+    r34 = means["int3"] / means["int4"]
+    emit("table4/int3_vs_int4_mean_err", 0.0,
+         f"{r34:.2f}x (gate: <= {INT3_VS_INT4_GATE}x)")
+    if r34 > INT3_VS_INT4_GATE:
+        print(f"FAIL: quant_error: int3 mean error is {r34:.2f}x int4's, "
+              f"gate is <= {INT3_VS_INT4_GATE}x", flush=True)
+        ok = False
+    rf8 = means["fp8"] / means["int8"]
+    emit("table4/fp8_vs_int8_mean_err", 0.0,
+         f"{rf8:.2f}x (gate: <= {FP8_VS_INT8_GATE}x)")
+    if rf8 > FP8_VS_INT8_GATE:
+        print(f"FAIL: quant_error: fp8 mean error is {rf8:.2f}x int8's, "
+              f"gate is <= {FP8_VS_INT8_GATE}x", flush=True)
+        ok = False
+    return ok
 
 
 if __name__ == "__main__":

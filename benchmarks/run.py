@@ -9,7 +9,15 @@
                               exits non-zero if a sanitize=False scheduler
                               loses more than 2% tok/s vs the default run —
                               repro-san's disabled-mode overhead gate)
-  quant -> quant_bench       (per-format bytes/weight, decode us/call, errors)
+  quant -> quant_bench       (per-format bytes/weight, decode us/call, errors;
+                              writes BENCH_quant.json; exits non-zero if the
+                              mixed3 preset's weight bytes/step exceed 0.8x
+                              int4's)
+  kvquant -> kvquant_bench   (quantized KV pool: bytes/token per kv_quant
+                              format + paged/contiguous parity; writes
+                              BENCH_kvquant.json; exits non-zero below the
+                              1.8x-vs-float or above the 0.55x-vs-fp16
+                              pool-bytes gates)
   paged -> throughput        (paged vs contiguous slots: tok/s + resident KV
                               bytes; exits non-zero if paged residency does
                               not beat the contiguous footprint)
@@ -42,6 +50,7 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 def main() -> int:
     from benchmarks import (
         kernel_bench,
+        kvquant_bench,
         profile_forward,
         quant_bench,
         quant_error,
@@ -59,6 +68,7 @@ def main() -> int:
         "kernels": kernel_bench.run,
         "ragged": throughput.run_ragged,
         "quant": quant_bench.run,
+        "kvquant": kvquant_bench.run,
         "paged": throughput.run_paged,
         "spec": throughput.run_spec,
         "recurrent": throughput.run_recurrent,

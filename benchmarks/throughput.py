@@ -229,6 +229,24 @@ def paged_throughput() -> bool:
     emit("paged/measured_host/speedup", 0.0,
          f"{results['paged_blocks']/results['continuous_slots']:.2f}x "
          "paged vs contiguous slots")
+    import json
+    import os
+
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_paged.json")
+    with open(out_path, "w") as f:
+        json.dump({
+            "contiguous_bytes": int(cont_bytes),
+            "pool_alloc_bytes": int(pool_bytes),
+            "peak_live_bytes": int(peak_bytes),
+            "peak_live_blocks": int(paged.last_peak_blocks),
+            "block_size": int(block_size),
+            "num_blocks": int(paged.num_blocks),
+            "tok_s": {k: round(v, 2) for k, v in results.items()},
+            "paged_vs_contiguous_speedup": round(
+                results["paged_blocks"] / results["continuous_slots"], 4),
+        }, f, indent=2, sort_keys=True)
+        f.write("\n")
     # gate on the REAL device allocation, not the bookkeeping count — and
     # sanity-check the bookkeeping fits inside it
     if pool_bytes >= cont_bytes or peak_bytes > pool_bytes:

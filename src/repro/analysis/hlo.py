@@ -82,6 +82,9 @@ DTYPE_BITS = {
     "u32": 32, "s64": 64, "u64": 64, "f16": 16, "bf16": 16, "f32": 32,
     "f64": 64, "c64": 64, "c128": 128, "s4": 4, "u4": 4,
     "f8e4m3fn": 8, "f8e5m2": 8, "u1": 1, "s1": 1,
+    # remaining fp8 spellings XLA emits; keep prefixes ("f8e4m3") AFTER the
+    # longer variants — _SHAPE_RE alternation tries keys in insertion order
+    "f8e4m3b11fnuz": 8, "f8e4m3fnuz": 8, "f8e5m2fnuz": 8, "f8e4m3": 8,
 }
 
 _SHAPE_RE = re.compile(r"(" + "|".join(DTYPE_BITS) + r")\[([0-9,]*)\]")
@@ -284,7 +287,7 @@ _SLICE_CONVERT_BODY = {"parameter", "constant", "dynamic-slice", "slice",
 _UNPACK_BODY = _SLICE_CONVERT_BODY | {
     "broadcast", "shift-left", "shift-right-arithmetic",
     "shift-right-logical", "and", "or", "xor", "concatenate",
-    "reshape", "pad",
+    "reshape", "pad", "bitcast-convert",
 }
 
 _INT_DTYPES = {"s4", "u4", "s8", "u8", "s16", "u16", "s32", "u32",

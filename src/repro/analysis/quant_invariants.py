@@ -2,8 +2,10 @@
 
 The paper's compression (4.4 GB -> 1.1 GB) and the PR 3 format registry
 both live or die on arithmetic that nothing in the type system states:
-``bits * pack`` must fill the storage dtype exactly, ``qmax`` must be the
-symmetric range of ``bits``, packed formats must ship pack/unpack hooks and
+``bits * pack`` must fill ``pack_storage`` storage elements exactly (int4:
+4x2=8x1, int3: 3x8=8x3), ``qmax`` must be the symmetric range of ``bits``
+for integer grids (float grids record max-finite magnitude instead),
+packed formats must ship pack/unpack hooks and
 a GQMV kernel hook, and — the invariant `dist/sharding.py` only enforces at
 RUNTIME via ``validate_quant_partition`` — no tensor-parallel shard
 boundary may fall inside a pack group, or one storage byte would hold
@@ -99,12 +101,15 @@ class QuantInvariantsChecker(BaseChecker):
                           "two (group sizes are powers of two; any other "
                           "pack cannot tile a group)")
                 continue
-            if fmt.bits * fmt.pack != storage_bits:
+            pack_storage = getattr(fmt, "pack_storage", 1)
+            if fmt.bits * fmt.pack != storage_bits * pack_storage:
                 yield err(f"{tag} bits({fmt.bits}) x pack({fmt.pack}) = "
-                          f"{fmt.bits * fmt.pack} does not fill the "
-                          f"{storage_bits}-bit storage dtype — packed bytes "
-                          "would carry dead or truncated bits")
-            if fmt.qmax != 2 ** (fmt.bits - 1) - 1:
+                          f"{fmt.bits * fmt.pack} does not fill "
+                          f"pack_storage({pack_storage}) x {storage_bits}-bit "
+                          "storage elements — packed bytes would carry dead "
+                          "or truncated bits")
+            if getattr(fmt, "kind", "int") == "int" \
+                    and fmt.qmax != 2 ** (fmt.bits - 1) - 1:
                 yield err(f"{tag} qmax {fmt.qmax} != 2^{fmt.bits - 1}-1 = "
                           f"{2 ** (fmt.bits - 1) - 1} — the symmetric range "
                           "of Eq. 1 for this bit width")
@@ -139,6 +144,12 @@ class QuantInvariantsChecker(BaseChecker):
                         continue  # this (dim, tp) is not shardable; skip
                     shard = n // tp
                     gs = largest_pow2_group(shard, gs_pref, min_gs=16)
+                    if gs is None:
+                        # no pow2 group >= 16 divides this shard: the PTQ
+                        # driver leaves such leaves unquantized (policy.py
+                        # leaf_group_size -> None), so there is no packed
+                        # storage to straddle at this geometry
+                        continue
                     for fname, fmt in packed:
                         if shard % fmt.pack:
                             yield Finding(

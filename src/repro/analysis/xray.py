@@ -53,13 +53,19 @@ XRAY_ANCHOR = "src/repro/analysis/xray.py"
 DEQUANT_THRESHOLD = 1 << 16
 
 # bytes-per-step model-vs-HLO relative tolerance. Measured headroom on the
-# current tree (B=1, T=64): int8 +6%, int4/mixed +12% — the residual is
-# CPU-materialized activation/cache-slab traffic the TPU normalization
-# cannot fully remove. A preset streaming weights at the wrong width blows
-# through this by 2x or more.
+# current tree (B=1, T=64): int8 +3%, int4/mixed +6%, int3/mixed3 +7%,
+# fp8 +9%, kv-quant rows +2% — the residual is CPU-materialized
+# activation/cache-slab traffic the TPU normalization cannot fully remove.
+# A preset streaming weights at the wrong width blows through this by 2x
+# or more.
 BYTES_RTOL = 0.15
 
-BYTES_PRESETS = ("int8", "int4", "mixed")
+BYTES_PRESETS = ("int8", "int4", "mixed", "int3", "fp8", "mixed3")
+
+# quantized-KV decode programs: weight preset int8 (the paper baseline), the
+# cache stored at kv_quant width plus per-row f32 scale leaves — the bytes
+# model accounts cache leaves generically at their storage itemsize
+KV_QUANT_PRESETS = ("int8", "fp8")
 BYTES_ARCH = "tinyllama-1.1b"
 BYTES_BATCH = 1
 BYTES_CACHE_LEN = 64
@@ -136,9 +142,13 @@ def weight_dims_sigs(qparams) -> frozenset:
 def expected_decode_bytes(qparams, cache_struct, batch: int, vocab: int) -> float:
     """Registry-model HBM bytes for one decode step: every quantized leaf
     at its ``nbytes()`` storage size (the embedding table at ``batch``
-    gathered rows), float leaves in full, the cache once for attention
-    reads plus a read+write layer-slab commit per layer (the baseline
-    ``deferred_decode_cache=False`` dataflow), and the f32 logits write."""
+    gathered rows) plus its GQMV group-sums intermediate — the XLA oracle
+    materializes a scales-shaped s32/f32 buffer between the grouped dot and
+    the scale combine (dot write + combine read; the Pallas kernel keeps it
+    in VMEM, but the audited artifact is the CPU-compiled program) — float
+    leaves in full, the cache once for attention reads plus a read+write
+    layer-slab commit per layer (the baseline ``deferred_decode_cache=False``
+    dataflow), and the f32 logits write."""
     import jax
     import jax.numpy as jnp
     import jax.tree_util as jtu
@@ -152,9 +162,11 @@ def expected_decode_bytes(qparams, cache_struct, batch: int, vocab: int) -> floa
         p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         if isinstance(leaf, QuantizedTensor):
             nb = leaf.nbytes()
+            gsum = 2.0 * leaf.scales.size * 4   # group-sums: dot write + read
             if leaf_class(p) == "embed":
                 nb = nb * batch / leaf.logical_shape[0]   # row gather
-            total += nb
+                gsum = 0.0                      # gathered rows skip the GQMV
+            total += nb + gsum
         else:
             total += leaf.size * jnp.dtype(leaf.dtype).itemsize
     for leaf in jax.tree.leaves(cache_struct):
@@ -212,6 +224,34 @@ def _build_bytes_programs() -> list[XrayProgram]:
             expected_bytes=expected_decode_bytes(
                 qstruct, cstruct, BYTES_BATCH, cfg.vocab_size),
             fmt=fmt,
+        ))
+
+    # quantized-KV rows: int8 weights, cache at kv_quant storage width +
+    # per-row f32 scales. expected_decode_bytes sums cache leaves at their
+    # dtype itemsize, so the narrower pool and its scale overhead are both
+    # in the model — a decode path that silently dequantizes the cache to
+    # f32 slabs blows the bytes contract here.
+    qstruct = jax.eval_shape(
+        lambda p: quantize_params(p, cfg.group_size, formats="int8"), pstruct)
+    for kvq in KV_QUANT_PRESETS:
+        kcfg = dataclasses.replace(cfg, kv_quant=kvq)
+        kmodel = build(kcfg)
+        kdecode = jax.jit(kmodel.decode, donate_argnums=(2,))
+        kpath, kline = _anchor(kmodel.decode)
+        cstruct = jax.eval_shape(
+            lambda m=kmodel: m.init_cache(BYTES_BATCH, BYTES_CACHE_LEN,
+                                          kcfg.cdtype()))
+        hlo = kdecode.lower(qstruct, tok, cstruct, pos).compile().as_text()
+        progs.append(XrayProgram(
+            name=f"{BYTES_ARCH}/decode[int8+kv_{kvq}]", kind="decode",
+            hlo_text=hlo, path=kpath, line=kline,
+            cache_sigs=_cache_sigs(cstruct),
+            require_alias=True, require_dus=True,
+            weight_sigs=weight_dims_sigs(qstruct),
+            num_layers=cfg.num_layers,
+            expected_bytes=expected_decode_bytes(
+                qstruct, cstruct, BYTES_BATCH, cfg.vocab_size),
+            fmt=f"int8+kv_{kvq}",
         ))
     return progs
 

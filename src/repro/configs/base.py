@@ -84,6 +84,13 @@ class ModelConfig:
     # policy preset ("mixed": embed/classifier int8, attn/ffn int4). See
     # core/quant.py (registry) and core/policy.py (format maps).
     quant_format: str = "int8"
+    # KV-cache quantization: None keeps the float cache; "int8"/"fp8" store
+    # contiguous AND paged KV at storage width with per-row (head_dim-group)
+    # f32 scales in sibling leaves, dequantized inside attention. Threaded
+    # from InferenceEngine(kv_quant=...) / serve --kv-quant via the config so
+    # every model closure (init_cache, prefill, decode, decode_paged) sees it
+    # without signature churn. GQA layouts only (MLA keeps the latent cache).
+    kv_quant: Optional[str] = None
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
     sub_quadratic: bool = False             # eligible for long_500k

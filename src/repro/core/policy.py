@@ -91,8 +91,24 @@ MIXED_FORMAT_MAP: dict[str, str | None] = {
     "other": "int8",
 }
 
+# Sub-int4 frontier: same reasoning one notch further down. The accuracy-
+# critical embeddings/classifier stay int8; the bandwidth-dominant
+# attention/FFN streams drop to true 3-bit packing (0.375 B/weight, ~0.76x
+# the mixed/int4 decode traffic on the bench shapes — benchmarks/quant_bench
+# gates this). The quant-error gate (benchmarks/quant_error.py) picks this
+# map over an fp8-attn alternative: int3's extra quant error concentrates in
+# layers the gate shows tolerate it at GS<=256.
+MIXED3_FORMAT_MAP: dict[str, str | None] = {
+    "embed": "int8",
+    "classifier": "int8",
+    "attn": "int3",
+    "ffn": "int3",
+    "other": "int8",
+}
+
 FORMAT_POLICIES: dict[str, Mapping[str, str | None]] = {
     "mixed": MIXED_FORMAT_MAP,
+    "mixed3": MIXED3_FORMAT_MAP,
 }
 
 

@@ -15,11 +15,16 @@ as a :class:`QuantFormat` REGISTRY instead of hardwiring int8:
          bit-identical to the original ``quantize_groupwise``)
   int4   storage int8, 2 nibbles/byte packed along the last axis,
          range [-7, 7] — halves weight HBM traffic per decode step
+  int3   storage uint8, 8 values per 3 bytes (true 3-bit packing, no pow2
+         padding), range [-3, 3] — 0.375 B/weight, below the int4 floor
+  fp8    storage float8_e4m3fn, 1 value/byte, per-group scale S=absmax/448
+         (the e4m3 max-finite) — int8's byte cost with a float value grid
 
-A format is a small spec object: name, storage dtype, pack factor,
-``quantize(r, gs) -> QuantizedTensor``, ``dequantize``, nibble pack/unpack,
+A format is a small spec object: name, storage dtype, pack geometry
+(``pack`` logical elements per ``pack_storage`` storage elements),
+``quantize(r, gs) -> QuantizedTensor``, ``dequantize``, pack/unpack,
 bits-per-weight, and a kernel hook name consumed by ``kernels/ops.py``.
-Adding a new format (int2, fp8, ...) is one ``register_format`` call plus a
+Adding a new format (int2, mx4, ...) is one ``register_format`` call plus a
 kernel-hook entry — no edits to qlinear/policy/sharding/checkpoint.
 
 The quantized weight of a (m, n) matrix is stored like the paper's
@@ -62,8 +67,13 @@ __all__ = [
     "quantize",
     "quantize_groupwise",
     "quantize_int4",
+    "quantize_int3",
+    "quantize_fp8",
     "pack_int4",
     "unpack_int4",
+    "pack_int3",
+    "unpack_int3",
+    "FP8_MAX",
     "dequantize",
     "quantize_activation",
     "choose_group_size",
@@ -178,7 +188,8 @@ class QuantizedTensor:
     @property
     def logical_shape(self):
         s = self.qvalues.shape
-        return (*s[:-1], s[-1] * self.format.pack)
+        f = self.format
+        return (*s[:-1], s[-1] * f.pack // f.pack_storage)
 
     @property
     def num_groups(self):
@@ -216,21 +227,28 @@ class QuantFormat:
 
     ``kernel`` names the GQMV/GQMM kernel family in ``kernels/ops.py``
     (``KERNEL_HOOKS``); quant.py stays import-free of the kernels package.
-    ``pack``/``unpack_values`` convert between storage and logical int8
-    values (identity for unpacked formats); sharding relies on groups being
-    whole multiples of ``pack`` so a storage element never straddles groups.
+    ``pack``/``unpack_values`` convert between storage and logical values
+    (identity for unpacked formats). Pack geometry is a ratio: ``pack``
+    logical elements occupy ``pack_storage`` storage elements (int4: 2/1,
+    int3: 8/3 — eight 3-bit fields in three bytes). Sharding relies on
+    groups being whole multiples of ``pack`` so a pack unit never straddles
+    groups. ``kind`` is "int" for symmetric integer grids (the ``qmax`` law
+    applies) or "float" for fp8-style value grids (``qmax`` records the
+    max-finite magnitude instead).
     """
 
     name: str
     bits: int                      # stored bits per logical weight element
     storage_dtype: Any             # dtype of QuantizedTensor.qvalues
-    pack: int                      # logical elements per storage element
-    qmax: int                      # symmetric integer range [-qmax, qmax]
+    pack: int                      # logical elements per pack unit
+    qmax: int                      # symmetric range [-qmax, qmax]
     kernel: str                    # hook name consumed by kernels/ops.py
     quantize_fn: Callable = dataclasses.field(repr=False, default=None)
     dequantize_fn: Callable = dataclasses.field(repr=False, default=None)
     pack_fn: Callable = dataclasses.field(repr=False, default=None)
     unpack_fn: Callable = dataclasses.field(repr=False, default=None)
+    pack_storage: int = 1          # storage elements per pack unit
+    kind: str = "int"              # "int" | "float" value grid
 
     def quantize(self, r: jax.Array, group_size: int) -> "QuantizedTensor":
         if _NUMERICS["on"]:
@@ -249,7 +267,8 @@ class QuantFormat:
         return out
 
     def unpack_values(self, qvalues: jax.Array) -> jax.Array:
-        """Storage array -> logical int8 values (identity when pack == 1)."""
+        """Storage array -> logical values (int8 for integer formats, the
+        storage dtype itself for float formats; identity when pack == 1)."""
         return qvalues if self.unpack_fn is None else self.unpack_fn(qvalues)
 
     def pack_values(self, values: jax.Array) -> jax.Array:
@@ -409,6 +428,117 @@ def _dequantize_int4(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
     return out.reshape(vals.shape).astype(dtype)
 
 
+# ---------------------------------------------------------------------------
+# int3, true 3-bit packing: 8 values per 3 bytes (W3A8)
+# ---------------------------------------------------------------------------
+# Pow2-padding 3-bit fields to nibbles would store int3 at int4's byte cost
+# and erase the whole point; instead eight 3-bit two's-complement fields are
+# packed little-endian into one 24-bit word (3 uint8 storage bytes). pack=8
+# divides every power-of-two group size >= 8, so the whole-groups sharding
+# invariant holds with no new geometry at the policy layer.
+
+def pack_int3(q: jax.Array) -> jax.Array:
+    """int8 logical values in [-3, 3], (..., n) -> packed uint8 (..., n//8*3).
+
+    Each run of 8 elements becomes one 24-bit little-endian word: element i
+    occupies bits [3i, 3i+3) as a 3-bit two's-complement field; the word is
+    stored as 3 bytes (b0 = bits 0-7, b1 = 8-15, b2 = 16-23)."""
+    if q.shape[-1] % 8:
+        raise ValueError(f"int3 packing needs a last axis divisible by 8, got {q.shape}")
+    u = jnp.bitwise_and(q.astype(jnp.int32), 0x7)
+    u = u.reshape(*q.shape[:-1], q.shape[-1] // 8, 8)
+    w = jnp.sum(jnp.left_shift(u, jnp.arange(8, dtype=jnp.int32) * 3), axis=-1)
+    b = jnp.stack([w & 0xFF, (w >> 8) & 0xFF, (w >> 16) & 0xFF], axis=-1)
+    return b.astype(jnp.uint8).reshape(*q.shape[:-1], q.shape[-1] // 8 * 3)
+
+
+def unpack_int3(p: jax.Array) -> jax.Array:
+    """Packed uint8 (..., 3k) -> sign-extended int8 logical values (..., 8k).
+
+    Pure shift/mask/interleave: each 3-bit field of the little-endian 24-bit
+    group comes straight off its byte plane(s), and sign extension is the
+    ``(v << 5) >>a 5`` trick on a bitcast int8 view — no select/subtract.
+    This is not a style choice: the xray bytes audit (analysis/hlo.py
+    ``is_unpack_fusion``) only normalizes unpack fusions whose body is free
+    of arithmetic, the contract that the TPU dot reads the PACKED buffer.
+    An unpack with compares/subtracts is charged at full s32 width and
+    int3 decode would audit at ~8x its declared traffic.
+    """
+    if p.shape[-1] % 3:
+        raise ValueError(f"int3 storage last axis must divide by 3, got {p.shape}")
+    b = p.reshape(*p.shape[:-1], p.shape[-1] // 3, 3)
+    b0, b1, b2 = b[..., 0], b[..., 1], b[..., 2]
+    fields = [
+        b0 & 7,                                  # bits 0-2
+        (b0 >> 3) & 7,                           # bits 3-5
+        ((b0 >> 6) & 3) | ((b1 << 2) & 4),       # bits 6-8 straddle b0/b1
+        (b1 >> 1) & 7,                           # bits 9-11
+        (b1 >> 4) & 7,                           # bits 12-14
+        ((b1 >> 7) & 1) | ((b2 << 1) & 6),       # bits 15-17 straddle b1/b2
+        (b2 >> 2) & 7,                           # bits 18-20
+        (b2 >> 5) & 7,                           # bits 21-23
+    ]
+    u = jnp.stack(fields, axis=-1)               # (..., k, 8) uint8 in 0..7
+    v = jax.lax.bitcast_convert_type(u << 5, jnp.int8) >> 5
+    return v.reshape(*p.shape[:-1], p.shape[-1] // 3 * 8)
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def quantize_int3(r: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> QuantizedTensor:
+    """Symmetric packed-int3 group-wise quantization (Eq. 1 with b=3).
+
+    S = 2*max|r|/7 per group, round-clip to [-3, 3], pack 8-per-3-bytes:
+    0.375 B/weight, ~2.67x less weight HBM per decode step than int8 and
+    ~1.33x less than packed int4."""
+    if group_size % 8:
+        raise ValueError(f"int3 needs a group_size divisible by 8, got {group_size}")
+    q, scales = _group_quantize(r, group_size, qmax=3)
+    return QuantizedTensor(
+        qvalues=pack_int3(q), scales=scales, group_size=group_size, fmt="int3"
+    )
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def _dequantize_int3(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    vals = unpack_int3(qt.qvalues)
+    g = vals.reshape(*vals.shape[:-1], qt.num_groups, qt.group_size)
+    out = g.astype(jnp.float32) * qt.scales[..., None]
+    return out.reshape(vals.shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fp8 (e4m3, per-group scale): a float value grid at int8's byte cost
+# ---------------------------------------------------------------------------
+
+FP8_MAX = 448.0      # float8_e4m3fn max finite (no inf encoding in e4m3fn)
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def quantize_fp8(r: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> QuantizedTensor:
+    """Group-wise fp8 (e4m3): S = max|r|/448 maps each group onto the full
+    e4m3 exponent range; the storage cast rounds-to-nearest onto the float
+    grid. Same byte cost as int8 but a relative-error profile that follows
+    magnitude — the frontier choice for outlier-heavy layer classes."""
+    n = r.shape[-1]
+    _check_group_size(n, group_size)
+    g = r.reshape(*r.shape[:-1], n // group_size, group_size).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(g), axis=-1)
+    scales = absmax * (1.0 / FP8_MAX)
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = (g / safe[..., None]).astype(jnp.float8_e4m3fn)
+    return QuantizedTensor(
+        qvalues=q.reshape(r.shape), scales=scales.astype(jnp.float32),
+        group_size=group_size, fmt="fp8",
+    )
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def _dequantize_fp8(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    g = qt.qvalues.reshape(*qt.qvalues.shape[:-1], qt.num_groups, qt.group_size)
+    out = g.astype(jnp.float32) * qt.scales[..., None]
+    return out.reshape(qt.qvalues.shape).astype(dtype)
+
+
 register_format(QuantFormat(
     name="int8", bits=8, storage_dtype=jnp.int8, pack=1, qmax=127,
     kernel="gqmv_int8",
@@ -420,6 +550,19 @@ register_format(QuantFormat(
     kernel="gqmv_int4",
     quantize_fn=quantize_int4, dequantize_fn=_dequantize_int4,
     pack_fn=pack_int4, unpack_fn=unpack_int4,
+))
+
+register_format(QuantFormat(
+    name="int3", bits=3, storage_dtype=jnp.uint8, pack=8, pack_storage=3,
+    qmax=3, kernel="gqmv_int3",
+    quantize_fn=quantize_int3, dequantize_fn=_dequantize_int3,
+    pack_fn=pack_int3, unpack_fn=unpack_int3,
+))
+
+register_format(QuantFormat(
+    name="fp8", bits=8, storage_dtype=jnp.float8_e4m3fn, pack=1,
+    qmax=int(FP8_MAX), kernel="gqmv_fp8", kind="float",
+    quantize_fn=quantize_fp8, dequantize_fn=_dequantize_fp8,
 ))
 
 

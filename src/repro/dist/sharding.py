@@ -140,7 +140,8 @@ def validate_quant_partition(params, mesh, mode: str = "serve") -> None:
 
     For every QuantizedTensor in ``params``, any sharding of the trailing
     (storage/packed) qvalues axis must leave each shard with a whole number
-    of quantization groups — group_size // pack STORAGE elements per group.
+    of quantization groups — group_size // pack * pack_storage STORAGE
+    elements per group (int4: GS/2 bytes, int3: 3*GS/8 bytes).
     The PTQ policy guarantees this by construction (per-leaf group sizes
     divide n/tp); this check catches drift between policy and placement,
     e.g. a new packed format or a hand-built mesh that breaks the geometry.
@@ -161,7 +162,8 @@ def validate_quant_partition(params, mesh, mode: str = "serve") -> None:
             continue
         axes = last if isinstance(last, tuple) else (last,)
         ways = int(math.prod(sizes.get(a, 1) for a in axes))
-        per_group = leaf.group_size // get_format(leaf.fmt).pack
+        fmt = get_format(leaf.fmt)
+        per_group = leaf.group_size // fmt.pack * fmt.pack_storage
         dim = leaf.qvalues.shape[-1]
         if ways > 1 and (dim // ways) % per_group:
             raise ValueError(
@@ -204,9 +206,13 @@ def cache_spec(name: str, shape, *, mesh, batch: int) -> P:
     sizes = _sizes(mesh)
     ndim = len(shape)
     spec: list[Any] = [None] * ndim
-    if name.endswith("_pages"):
+    if name.endswith("_pages") or name.endswith("_scales"):
+        # Quantized-pool scale leaves (L, NB, BS, KV) follow their pages:
+        # kv heads -> model, block axis never sharded. Without this rule the
+        # batch search below could hand the BLOCK axis to the data axis.
         if ndim >= 2:
-            spec[-2] = _fit(shape[-2], MODEL_AXIS, sizes)
+            idx = -2 if name.endswith("_pages") else -1
+            spec[idx] = _fit(shape[idx], MODEL_AXIS, sizes)
         return P(*spec)
     parents = name.split("/")[:-1]
     # Locate the batch dim. Every cache leaf leads with at least one stack

@@ -21,7 +21,7 @@ are lane-aligned.
 Kernels are written for TPU (BlockSpec/VMEM) and validated on CPU with
 ``interpret=True`` against ``ref.py``.
 
-Two weight formats share the compute stages (see core/quant.py registry):
+Four weight formats share the compute stages (see core/quant.py registry):
 
   int8  wq streamed as int8 blocks (the paper's layout)
   int4  wq streamed PACKED (two nibbles per byte, half the HBM traffic of
@@ -29,6 +29,11 @@ Two weight formats share the compute stages (see core/quant.py registry):
         sign-extended to int8 nibble values in VMEM just before the group
         dot. Only the DMA'd bytes shrink; the dot-product and accumulate
         stages are byte-for-byte the int8 ones.
+  int3  wq streamed as true 3-bit packing (8 values per 3 uint8 bytes,
+        0.375 B/weight) and sign-extended in VMEM — the sub-int4 point of
+        the same streaming argument.
+  fp8   wq streamed as float8_e4m3fn bytes; the group dot runs in f32
+        (same VMEM blocks, float datapath instead of the int8 MACs).
 """
 
 from __future__ import annotations
@@ -39,7 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant import unpack_int4
+from repro.core.quant import unpack_int3, unpack_int4
 
 DEFAULT_BM = 256   # output rows per block
 DEFAULT_BN = 1024  # contraction columns per block (multiple of GS)
@@ -80,16 +85,21 @@ def _check_divides(dim: int, blk: int, axis: str, multiple_of: int = 1) -> int:
 
 def _gqmv_compute(wq, xq_ref, xs_ref, ws_ref, out_ref, *, group_size: int):
     """Dot-product + accumulate stages shared by every weight format; ``wq``
-    is the already-unpacked (bm, bn) int8 weight block in VMEM."""
+    is the already-unpacked (bm, bn) weight block in VMEM — int8 values for
+    the integer formats, float8 for fp8 (the dot then runs in f32)."""
     j = pl.program_id(1)           # n-block index (innermost grid dim)
     bm, bn = wq.shape
     ng = bn // group_size
+    integer = jnp.issubdtype(wq.dtype, jnp.integer)
 
-    # --- dot-product stage: int8 x int8 -> int32 group sums ----------------
+    # --- dot-product stage: int8 x int8 -> int32 group sums (fp8: f32) -----
     wg = wq.reshape(bm, ng, group_size).transpose(1, 0, 2)            # (g,bm,GS)
     xg = xq_ref[0].reshape(ng, group_size)                            # (g,GS)
+    if not integer:
+        wg, xg = wg.astype(jnp.float32), xg.astype(jnp.float32)
     group_sums = jax.lax.dot_general(
-        wg, xg, _INT8_GROUP_DOT, preferred_element_type=jnp.int32
+        wg, xg, _INT8_GROUP_DOT,
+        preferred_element_type=jnp.int32 if integer else jnp.float32,
     )                                                                 # (g,bm)
 
     # --- accumulate stage: fp32 scale and cross-group reduction ------------
@@ -116,10 +126,17 @@ def _gqmv_int4_kernel(xq_ref, xs_ref, wp_ref, ws_ref, out_ref, *, group_size: in
                   group_size=group_size)
 
 
+def _gqmv_int3_kernel(xq_ref, xs_ref, wp_ref, ws_ref, out_ref, *, group_size: int):
+    # 3 streamed bytes carry 8 weights; sign-extend the 3-bit fields in VMEM
+    _gqmv_compute(unpack_int3(wp_ref[...]), xq_ref, xs_ref, ws_ref, out_ref,
+                  group_size=group_size)
+
+
 def _gqmv_call(kernel, wq, ws, xq, xs, *, group_size, pack,
-               block_m, block_n, interpret):
-    """Shared pallas_call plumbing; ``pack`` is the weight-storage packing
-    factor (wq's trailing axis holds n // pack storage elements)."""
+               block_m, block_n, interpret, pack_storage=1):
+    """Shared pallas_call plumbing; pack geometry is ``pack`` logical
+    elements per ``pack_storage`` storage elements (wq's trailing axis holds
+    n // pack * pack_storage storage elements)."""
     m = wq.shape[0]
     n = xq.shape[-1]
     gmult = max(group_size, pack)
@@ -128,6 +145,7 @@ def _gqmv_call(kernel, wq, ws, xq, xs, *, group_size, pack,
         n, block_n or _pick_block(n, DEFAULT_BN, multiple_of=gmult), "n",
         multiple_of=gmult)
     ng = bn // group_size
+    bw = bn // pack * pack_storage
     grid = (m // bm, n // bn)
 
     return pl.pallas_call(
@@ -136,7 +154,7 @@ def _gqmv_call(kernel, wq, ws, xq, xs, *, group_size, pack,
         in_specs=[
             pl.BlockSpec((1, bn), lambda i, j: (0, j)),            # xq
             pl.BlockSpec((1, ng), lambda i, j: (0, j)),            # xs
-            pl.BlockSpec((bm, bn // pack), lambda i, j: (i, j)),   # wq (streamed)
+            pl.BlockSpec((bm, bw), lambda i, j: (i, j)),           # wq (streamed)
             pl.BlockSpec((bm, ng), lambda i, j: (i, j)),           # ws (streamed)
         ],
         out_specs=pl.BlockSpec((1, bm), lambda i, j: (0, i)),      # out row block
@@ -177,6 +195,40 @@ def gqmv_int4_pallas(
                       interpret=interpret)
 
 
+def gqmv_int3_pallas(
+    wq: jax.Array,   # uint8 PACKED (m, n // 8 * 3)
+    ws: jax.Array,   # f32 (m, n // GS)
+    xq: jax.Array,   # int8 (n,)
+    xs: jax.Array,   # f32 (n // GS,)
+    *,
+    group_size: int,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    return _gqmv_call(_gqmv_int3_kernel, wq, ws, xq, xs, group_size=group_size,
+                      pack=8, pack_storage=3, block_m=block_m, block_n=block_n,
+                      interpret=interpret)
+
+
+def gqmv_fp8_pallas(
+    wq: jax.Array,   # float8_e4m3fn (m, n)
+    ws: jax.Array,   # f32 (m, n // GS)
+    xq: jax.Array,   # int8 (n,)
+    xs: jax.Array,   # f32 (n // GS,)
+    *,
+    group_size: int,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    # fp8 storage needs no unpack stage; the shared compute switches to the
+    # f32 datapath off the weight dtype.
+    return _gqmv_call(_gqmv_kernel, wq, ws, xq, xs, group_size=group_size,
+                      pack=1, block_m=block_m, block_n=block_n,
+                      interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # GQMM: out (b, m) = X(q) (b, n) @ W(q)^T -- batched prefill / batched decode
 # ---------------------------------------------------------------------------
@@ -187,11 +239,15 @@ def _gqmm_compute(wq, xq_ref, xs_ref, ws_ref, out_ref, *, group_size: int):
     bb = xq_ref.shape[0]
     ng = bn // group_size
 
+    integer = jnp.issubdtype(wq.dtype, jnp.integer)
     wg = wq.reshape(bm, ng, group_size).transpose(1, 0, 2)            # (g,bm,GS)
     xg = xq_ref[...].reshape(bb, ng, group_size).transpose(1, 0, 2)   # (g,bb,GS)
-    # (g,bb,GS) x (g,bm,GS) -> (g,bb,bm) int32 group sums
+    if not integer:
+        wg, xg = wg.astype(jnp.float32), xg.astype(jnp.float32)
+    # (g,bb,GS) x (g,bm,GS) -> (g,bb,bm) int32 group sums (fp8: f32)
     group_sums = jax.lax.dot_general(
-        xg, wg, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.int32
+        xg, wg, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32 if integer else jnp.float32,
     )
     scaled = (
         group_sums.astype(jnp.float32)
@@ -219,8 +275,13 @@ def _gqmm_int4_kernel(xq_ref, xs_ref, wp_ref, ws_ref, out_ref, *, group_size: in
                   group_size=group_size)
 
 
+def _gqmm_int3_kernel(xq_ref, xs_ref, wp_ref, ws_ref, out_ref, *, group_size: int):
+    _gqmm_compute(unpack_int3(wp_ref[...]), xq_ref, xs_ref, ws_ref, out_ref,
+                  group_size=group_size)
+
+
 def _gqmm_call(kernel, wq, ws, xq, xs, *, group_size, pack,
-               block_b, block_m, block_n, interpret):
+               block_b, block_m, block_n, interpret, pack_storage=1):
     m = wq.shape[0]
     b, n = xq.shape
     gmult = max(group_size, pack)
@@ -230,6 +291,7 @@ def _gqmm_call(kernel, wq, ws, xq, xs, *, group_size, pack,
         n, block_n or _pick_block(n, DEFAULT_BN, multiple_of=gmult), "n",
         multiple_of=gmult)
     ng = bn // group_size
+    bw = bn // pack * pack_storage
     grid = (b // bb, m // bm, n // bn)
 
     return pl.pallas_call(
@@ -238,7 +300,7 @@ def _gqmm_call(kernel, wq, ws, xq, xs, *, group_size, pack,
         in_specs=[
             pl.BlockSpec((bb, bn), lambda ib, im, j: (ib, j)),          # xq
             pl.BlockSpec((bb, ng), lambda ib, im, j: (ib, j)),          # xs
-            pl.BlockSpec((bm, bn // pack), lambda ib, im, j: (im, j)),  # wq
+            pl.BlockSpec((bm, bw), lambda ib, im, j: (im, j)),          # wq
             pl.BlockSpec((bm, ng), lambda ib, im, j: (im, j)),          # ws
         ],
         out_specs=pl.BlockSpec((bb, bm), lambda ib, im, j: (ib, im)),
@@ -278,4 +340,38 @@ def gqmm_int4_pallas(
 ) -> jax.Array:
     return _gqmm_call(_gqmm_int4_kernel, wq, ws, xq, xs, group_size=group_size,
                       pack=2, block_b=block_b, block_m=block_m,
+                      block_n=block_n, interpret=interpret)
+
+
+def gqmm_int3_pallas(
+    wq: jax.Array,   # uint8 PACKED (m, n // 8 * 3)
+    ws: jax.Array,   # f32 (m, n // GS)
+    xq: jax.Array,   # int8 (b, n)
+    xs: jax.Array,   # f32 (b, n // GS)
+    *,
+    group_size: int,
+    block_b: int | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    return _gqmm_call(_gqmm_int3_kernel, wq, ws, xq, xs, group_size=group_size,
+                      pack=8, pack_storage=3, block_b=block_b, block_m=block_m,
+                      block_n=block_n, interpret=interpret)
+
+
+def gqmm_fp8_pallas(
+    wq: jax.Array,   # float8_e4m3fn (m, n)
+    ws: jax.Array,   # f32 (m, n // GS)
+    xq: jax.Array,   # int8 (b, n)
+    xs: jax.Array,   # f32 (b, n // GS)
+    *,
+    group_size: int,
+    block_b: int | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    return _gqmm_call(_gqmm_kernel, wq, ws, xq, xs, group_size=group_size,
+                      pack=1, block_b=block_b, block_m=block_m,
                       block_n=block_n, interpret=interpret)

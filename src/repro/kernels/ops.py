@@ -62,6 +62,14 @@ KERNEL_HOOKS: dict[str, KernelHook] = {
         gqmv_xla=_ref.gqmv_int4_ref, gqmm_xla=_ref.gqmm_int4_ref,
         gqmv_pallas=_pallas.gqmv_int4_pallas, gqmm_pallas=_pallas.gqmm_int4_pallas,
     ),
+    "gqmv_int3": KernelHook(
+        gqmv_xla=_ref.gqmv_int3_ref, gqmm_xla=_ref.gqmm_int3_ref,
+        gqmv_pallas=_pallas.gqmv_int3_pallas, gqmm_pallas=_pallas.gqmm_int3_pallas,
+    ),
+    "gqmv_fp8": KernelHook(
+        gqmv_xla=_ref.gqmv_fp8_ref, gqmm_xla=_ref.gqmm_fp8_ref,
+        gqmv_pallas=_pallas.gqmv_fp8_pallas, gqmm_pallas=_pallas.gqmm_fp8_pallas,
+    ),
 }
 
 
@@ -132,6 +140,8 @@ def paged_attention(
     *,
     scale: float,
     softcap: float | None = None,
+    k_scales: jax.Array | None = None,   # (NB, BS, KV) per-row dequant scales
+    v_scales: jax.Array | None = None,
     impl: str = "auto",
 ) -> jax.Array:
     """One paged decode-attention step -> ctx (b, KV*G*hd).
@@ -139,16 +149,20 @@ def paged_attention(
     Same backend dispatch as gqmv/gqmm: the XLA path gathers the virtual
     sequence through the block table (bit-exact vs the contiguous deferred
     decode on identity tables); the Pallas kernel streams only the live
-    physical blocks HBM->VMEM via scalar-prefetch index maps."""
+    physical blocks HBM->VMEM via scalar-prefetch index maps. With
+    ``k_scales``/``v_scales`` the pool holds quantized rows (int8/fp8) and
+    dequantization is fused into the attention read — the streamed KV bytes
+    stay at storage width."""
     impl = _resolve(impl)
     if impl == "xla":
         return _ref.paged_attention_ref(
             q, k_pages, v_pages, block_table, pos, k_new, v_new, mask,
-            scale=scale, softcap=softcap,
+            scale=scale, softcap=softcap, k_scales=k_scales, v_scales=v_scales,
         )
     return _paged.paged_attention_pallas(
         q, k_pages, v_pages, block_table, pos, k_new, v_new, mask,
-        scale=scale, softcap=softcap, interpret=(impl == "interpret"),
+        scale=scale, softcap=softcap, k_scales=k_scales, v_scales=v_scales,
+        interpret=(impl == "interpret"),
     )
 
 

@@ -29,23 +29,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
-                  mask_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  scale: float, softcap: float | None, bs: int, nb: int):
-    j = pl.program_id(2)                               # virtual block index
-
-    @pl.when(j == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    q = q_ref[0, 0].astype(jnp.float32)                # (g, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32)             # (bs, hd)
-    v = v_ref[0, :, 0].astype(jnp.float32)             # (bs, hd)
-    k_new = kn_ref[0, 0].astype(jnp.float32)           # (hd,)
-    v_new = vn_ref[0, 0].astype(jnp.float32)           # (hd,)
-
+def _attend(j, q, k, v, k_new, v_new, mask_ref, pos_ref, o_ref,
+            m_scr, l_scr, acc_scr, *,
+            scale: float, softcap: float | None, bs: int, nb: int):
+    """Online-softmax accumulate over one (g, bs) score tile; ``k``/``v`` are
+    the already-dequantized f32 block rows in VMEM (shared by the float and
+    quantized-pool kernels)."""
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (g, bs)
 
@@ -79,6 +68,51 @@ def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
+                  mask_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, softcap: float | None, bs: int, nb: int):
+    j = pl.program_id(2)                               # virtual block index
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)             # (bs, hd)
+    k_new = kn_ref[0, 0].astype(jnp.float32)           # (hd,)
+    v_new = vn_ref[0, 0].astype(jnp.float32)           # (hd,)
+    _attend(j, q, k, v, k_new, v_new, mask_ref, pos_ref, o_ref,
+            m_scr, l_scr, acc_scr, scale=scale, softcap=softcap, bs=bs, nb=nb)
+
+
+def _paged_quant_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                        kn_ref, vn_ref, mask_ref, o_ref, m_scr, l_scr,
+                        acc_scr, *,
+                        scale: float, softcap: float | None, bs: int, nb: int):
+    """Quantized-pool variant: the DMA'd K/V blocks are int8/fp8 storage rows
+    plus per-row f32 scales; dequantization happens here in VMEM, so the
+    HBM stream stays at storage width (the cache-side twin of the GQMV
+    unpack-in-VMEM argument)."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+    v = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+    k_new = kn_ref[0, 0].astype(jnp.float32)           # (hd,)
+    v_new = vn_ref[0, 0].astype(jnp.float32)           # (hd,)
+    _attend(j, q, k, v, k_new, v_new, mask_ref, pos_ref, o_ref,
+            m_scr, l_scr, acc_scr, scale=scale, softcap=softcap, bs=bs, nb=nb)
+
+
 def paged_attention_pallas(
     q: jax.Array,            # (b, KV, G, hd)
     k_pages: jax.Array,      # (NB, BS, KV, hd)
@@ -91,29 +125,44 @@ def paged_attention_pallas(
     *,
     scale: float,
     softcap: float | None = None,
+    k_scales: jax.Array | None = None,   # (NB, BS, KV) quantized-pool scales
+    v_scales: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     b, kv, g, hd = q.shape
     bs = k_pages.shape[1]
     mb = block_table.shape[1]
     mask = mask.reshape(b, mb, bs)
+    quant = k_scales is not None
 
     def kv_index(ib, ik, j, bt, pos_s):
         # scalar-prefetched block table picks the physical block to DMA
         # (index maps receive grid indices first, then the scalar refs)
         return (bt[ib, j], 0, ik, 0)
 
+    def scale_index(ib, ik, j, bt, pos_s):
+        return (bt[ib, j], 0, ik)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd), kv_index),
+        pl.BlockSpec((1, bs, 1, hd), kv_index),
+    ]
+    if quant:
+        # per-row f32 scales ride the same block-table DMA as their rows
+        in_specs += [
+            pl.BlockSpec((1, bs, 1), scale_index),
+            pl.BlockSpec((1, bs, 1), scale_index),
+        ]
+    in_specs += [
+        pl.BlockSpec((1, 1, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0)),
+        pl.BlockSpec((1, 1, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0)),
+        pl.BlockSpec((1, 1, bs), lambda ib, ik, j, bt, ps: (ib, j, 0)),
+    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                 # block_table, pos
         grid=(b, kv, mb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd), kv_index),
-            pl.BlockSpec((1, bs, 1, hd), kv_index),
-            pl.BlockSpec((1, 1, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0)),
-            pl.BlockSpec((1, 1, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0)),
-            pl.BlockSpec((1, 1, bs), lambda ib, ik, j, bt, ps: (ib, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, hd), lambda ib, ik, j, bt, ps: (ib, ik, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),     # running max
@@ -121,13 +170,17 @@ def paged_attention_pallas(
             pltpu.VMEM((g, hd), jnp.float32),    # output accumulator
         ],
     )
-    kernel = functools.partial(_paged_kernel, scale=scale, softcap=softcap,
-                               bs=bs, nb=mb)
+    kernel = functools.partial(
+        _paged_quant_kernel if quant else _paged_kernel,
+        scale=scale, softcap=softcap, bs=bs, nb=mb)
+    operands = [q, k_pages, v_pages]
+    if quant:
+        operands += [k_scales, v_scales]
+    operands += [k_new, v_new, mask]
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), pos.astype(jnp.int32),
-      q, k_pages, v_pages, k_new, v_new, mask)
+    )(block_table.astype(jnp.int32), pos.astype(jnp.int32), *operands)
     return out.reshape(b, kv * g * hd)

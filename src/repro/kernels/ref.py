@@ -20,7 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantizedTensor, unpack_int4
+from repro.core.quant import QuantizedTensor, unpack_int3, unpack_int4
 
 
 @partial(jax.jit, static_argnames=("group_size",))
@@ -112,6 +112,90 @@ def gqmm_int4_ref(
     return jnp.sum(scaled, axis=-1)
 
 
+@partial(jax.jit, static_argnames=("group_size",))
+def gqmv_int3_ref(
+    wp: jax.Array,   # uint8 packed (m, n // 8 * 3) — eight 3-bit fields per 3 bytes
+    ws: jax.Array,   # float32 (m, n // GS)
+    xq: jax.Array,   # int8 (n,) — activations stay int8 (W3A8)
+    xs: jax.Array,   # float32 (n // GS,)
+    *,
+    group_size: int,
+) -> jax.Array:
+    """Packed-int3 GQMV oracle: unpack the 3-bit fields to int8, then Alg. 1
+    math with the same combined-scale association as the Pallas kernel (see
+    gqmv_int4_ref for the bit-exactness argument)."""
+    wq = unpack_int3(wp)
+    m, n = wq.shape
+    ng = n // group_size
+    wg = wq.reshape(m, ng, group_size).astype(jnp.int32)
+    xg = xq.reshape(ng, group_size).astype(jnp.int32)
+    group_sums = jnp.einsum("mgk,gk->mg", wg, xg)               # int32 (m, ng)
+    scaled = group_sums.astype(jnp.float32) * (ws * xs[None, :])
+    return jnp.sum(scaled, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def gqmm_int3_ref(
+    wp: jax.Array,   # uint8 packed (m, n // 8 * 3)
+    ws: jax.Array,   # float32 (m, n // GS)
+    xq: jax.Array,   # int8 (b, n)
+    xs: jax.Array,   # float32 (b, n // GS)
+    *,
+    group_size: int,
+) -> jax.Array:
+    """Batched packed-int3 GQMV oracle (see gqmv_int3_ref)."""
+    wq = unpack_int3(wp)
+    m, n = wq.shape
+    b = xq.shape[0]
+    ng = n // group_size
+    wg = wq.reshape(m, ng, group_size).astype(jnp.int32)
+    xg = xq.reshape(b, ng, group_size).astype(jnp.int32)
+    group_sums = jnp.einsum("mgk,bgk->bmg", wg, xg)             # int32
+    scaled = (group_sums.astype(jnp.float32) * xs[:, None, :]) * ws[None]
+    return jnp.sum(scaled, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def gqmv_fp8_ref(
+    wq: jax.Array,   # float8_e4m3fn (m, n)
+    ws: jax.Array,   # float32 (m, n // GS)
+    xq: jax.Array,   # int8 (n,) — activations stay int8 (W8A8, float weights)
+    xs: jax.Array,   # float32 (n // GS,)
+    *,
+    group_size: int,
+) -> jax.Array:
+    """fp8-weight GQMV oracle: the group dot runs in f32 (no exact integer
+    stage), so kernel-vs-oracle comparisons are tolerance-based — f32 dot
+    reassociation across lanes is allowed to differ."""
+    m, n = wq.shape
+    ng = n // group_size
+    wg = wq.reshape(m, ng, group_size).astype(jnp.float32)
+    xg = xq.reshape(ng, group_size).astype(jnp.float32)
+    group_sums = jnp.einsum("mgk,gk->mg", wg, xg)               # f32 (m, ng)
+    scaled = group_sums * (ws * xs[None, :])
+    return jnp.sum(scaled, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("group_size",))
+def gqmm_fp8_ref(
+    wq: jax.Array,   # float8_e4m3fn (m, n)
+    ws: jax.Array,   # float32 (m, n // GS)
+    xq: jax.Array,   # int8 (b, n)
+    xs: jax.Array,   # float32 (b, n // GS)
+    *,
+    group_size: int,
+) -> jax.Array:
+    """Batched fp8-weight GQMV oracle (see gqmv_fp8_ref)."""
+    m, n = wq.shape
+    b = xq.shape[0]
+    ng = n // group_size
+    wg = wq.reshape(m, ng, group_size).astype(jnp.float32)
+    xg = xq.reshape(b, ng, group_size).astype(jnp.float32)
+    group_sums = jnp.einsum("mgk,bgk->bmg", wg, xg)             # f32
+    scaled = (group_sums * xs[:, None, :]) * ws[None]
+    return jnp.sum(scaled, axis=-1)
+
+
 def paged_attention_ref(
     q: jax.Array,            # (b, KV, G, hd) decode-step queries, grouped
     k_pages: jax.Array,      # (NB, BS, KV, hd) one layer's block pool
@@ -124,6 +208,8 @@ def paged_attention_ref(
     *,
     scale: float,
     softcap: float | None = None,
+    k_scales: jax.Array | None = None,   # (NB, BS, KV) quantized-pool scales
+    v_scales: jax.Array | None = None,
 ) -> jax.Array:
     """Block-table gather attention oracle for one decode step.
 
@@ -138,6 +224,13 @@ def paged_attention_ref(
     reshaped contiguous cache this is bit-exact against the contiguous
     deferred decode path (tests/test_paged.py).
 
+    With ``k_scales``/``v_scales`` the pool rows are quantized (int8/fp8,
+    one scale per (block row, kv head), group = head_dim) and the scales are
+    factored OUTSIDE the dots — ``(q . k_q) * k_s`` and
+    ``(attn * v_s) . v_q`` — the exact association of the contiguous
+    quantized decode path (models/attention.py::gqa_decode_deferred_quant),
+    so paged and contiguous quantized decode agree on identity tables.
+
     Returns ctx (b, KV * G * hd) in the contiguous path's head order.
     """
     b, kv, g, hd = q.shape
@@ -146,7 +239,14 @@ def paged_attention_ref(
     # gather (b, MB, BS, KV, hd) -> virtual (b, T, KV, hd)
     k = k_pages[block_table].reshape(b, mb * bs, kv, hd)
     v = v_pages[block_table].reshape(b, mb * bs, kv, hd)
+    quant = k_scales is not None
+    if quant:
+        k = k.astype(q.dtype)
+        ks = k_scales[block_table].reshape(b, mb * bs, kv)       # (b,T,KV)
+        vs = v_scales[block_table].reshape(b, mb * bs, kv)
     scores = jnp.einsum("bkgh,btkh->bkgt", q, k).astype(jnp.float32)
+    if quant:
+        scores = scores * ks.transpose(0, 2, 1)[:, :, None, :]   # (b,KV,1,T)
     cur = jnp.einsum("bkgh,bkh->bkg", q, k_new).astype(jnp.float32)
     barng = jnp.arange(b)
     scores = scores.at[barng, :, :, pos].set(cur)
@@ -154,13 +254,16 @@ def paged_attention_ref(
     if softcap:
         scores = softcap * jnp.tanh(scores / softcap)
     scores = scores + mask[:, None, None, :]
-    attn = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    attn = jax.nn.softmax(scores, axis=-1)
     # zero the current column before the value gather: the pool slot at pos
     # holds stale data (it is committed AFTER attention); the real
     # contribution is the explicit k_new/v_new term
-    attn_cur = attn[barng, :, :, pos][..., None]                 # (b,KV,G,1)
+    attn_cur = attn[barng, :, :, pos][..., None].astype(q.dtype)  # (b,KV,G,1)
     attn_z = attn.at[barng, :, :, pos].set(0.0)
-    ctx = jnp.einsum("bkgt,btkh->bkgh", attn_z, v)
+    if quant:
+        attn_z = attn_z * vs.transpose(0, 2, 1)[:, :, None, :]
+        v = v.astype(q.dtype)
+    ctx = jnp.einsum("bkgt,btkh->bkgh", attn_z.astype(q.dtype), v)
     ctx = ctx + attn_cur * v_new[:, :, None, :]
     return ctx.reshape(b, kv * g * hd)
 

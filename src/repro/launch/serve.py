@@ -32,6 +32,10 @@ def main(argv=None):
     ap.add_argument("--quantize-format", default=None,
                     help="registry format (int8, int4) or policy preset "
                          "(mixed); default: the arch config's quant_format")
+    ap.add_argument("--kv-quant", default=None, choices=["int8", "fp8"],
+                    help="store the KV cache quantized (per-row scales; "
+                         "dequantized in-kernel). Needs a paged-capable "
+                         "arch; incompatible with --spec-k")
     ap.add_argument("--sampler", default="greedy", choices=["greedy", "top_p"])
     ap.add_argument("--top-p", type=float, default=0.9,
                     help="nucleus mass for --sampler top_p")
@@ -87,9 +91,16 @@ def main(argv=None):
     quantize: bool | str = not args.no_quantize
     if quantize and args.quantize_format is not None:
         quantize = args.quantize_format
-    engine = InferenceEngine(model, params, cache_len=cache_len,
-                             quantize=quantize,
-                             sanitize=True if args.sanitize else None)
+    if spec_k and args.kv_quant:
+        ap.error("--kv-quant is incompatible with --spec-k (the verify pass "
+                 "rolls the cache write cursor back; quantized rows cannot "
+                 "be partially rewritten)")
+    try:
+        engine = InferenceEngine(model, params, cache_len=cache_len,
+                                 quantize=quantize, kv_quant=args.kv_quant,
+                                 sanitize=True if args.sanitize else None)
+    except ValueError as e:
+        ap.error(str(e))
     breakdown = format_breakdown(engine.params)
     print(f"arch: {cfg.arch_id}  quantized bytes fraction: "
           f"{engine.quantized_fraction:.3f}  "

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import flags
 from repro.core.qlinear import linear, split_fused
-from repro.core.quant import QuantizedTensor
+from repro.core.quant import FP8_MAX, QuantizedTensor
 from repro.dist import logical
 from repro.models.common import (
     NEG_INF,
@@ -370,11 +370,12 @@ def gqa_prefill(p, x, cfg: ModelConfig, cache_len: int, *, window=None, use_wind
         if lengths is not None:
             mask = mask[None] + length_mask(lengths, s)[:, None, :]   # (b, s, s)
         ctx = _mha(q, k, v, mask, cfg)
-    if flags.get("int8_kv_cache"):
+    kvq = kv_quant_format(cfg)
+    if kvq:
         pad = [(0, 0), (0, 0), (0, cache_len - s), (0, 0)]
         pad_s = [(0, 0), (0, 0), (0, cache_len - s)]
-        kq, ks = _quantize_rows(k.transpose(0, 2, 1, 3))  # (b,KV,s,hd)/(b,KV,s)
-        vq, vs = _quantize_rows(v.transpose(0, 2, 1, 3))
+        kq, ks = _quantize_rows(k.transpose(0, 2, 1, 3), kvq)  # (b,KV,s,hd)/(b,KV,s)
+        vq, vs = _quantize_rows(v.transpose(0, 2, 1, 3), kvq)
         return linear(p["wo"], ctx), (jnp.pad(kq, pad), jnp.pad(ks, pad_s),
                                       jnp.pad(vq, pad), jnp.pad(vs, pad_s))
     if flags.get("kvt_cache_layout"):
@@ -400,20 +401,45 @@ def gqa_decode(p, x, cache, pos, cfg: ModelConfig, *, window=None, use_window=No
     return linear(p["wo"], ctx[:, 0, :]), (k_cache, v_cache)
 
 
-def _quantize_rows(t: jax.Array):
-    """Symmetric int8 over the last axis (head_dim = one group), Eq. 1.
-    t: (..., hd) -> (int8 rows, f32 scales (...))."""
+# KV-cache quantization storage dtypes (cfg.kv_quant / serve --kv-quant).
+# One scale per (position, kv head) row, group = head_dim — the paper's
+# group-wise symmetric scheme (Eq. 1) applied to the cache stream.
+KV_STORE_DTYPES = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn}
+
+
+def kv_quant_format(cfg: ModelConfig) -> str | None:
+    """Active KV-cache quantization format for the GQA layouts: the
+    engine-threaded ``cfg.kv_quant`` or the legacy int8_kv_cache flag."""
+    kvq = cfg.kv_quant or ("int8" if flags.get("int8_kv_cache") else None)
+    if kvq is not None and kvq not in KV_STORE_DTYPES:
+        raise ValueError(
+            f"unknown kv_quant format {kvq!r}; supported: "
+            f"{sorted(KV_STORE_DTYPES)}")
+    return kvq
+
+
+def _quantize_rows(t: jax.Array, fmt: str = "int8"):
+    """Symmetric quantization over the last axis (head_dim = one group),
+    Eq. 1. t: (..., hd) -> (storage rows, f32 scales (...)). int8 rounds to
+    the integer grid; fp8 casts onto the e4m3 float grid after normalizing
+    the row absmax to FP8_MAX."""
     absmax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    if fmt == "fp8":
+        scales = absmax / FP8_MAX
+        safe = jnp.where(scales > 0, scales, 1.0)
+        q = (t.astype(jnp.float32) / safe[..., None]).astype(jnp.float8_e4m3fn)
+        return q, scales
     scales = absmax * (2.0 / 255.0)
     safe = jnp.where(scales > 0, scales, 1.0)
     q = jnp.clip(jnp.round(t.astype(jnp.float32) / safe[..., None]), -127, 127)
     return q.astype(jnp.int8), scales
 
 
-def gqa_decode_deferred_int8(p, x, cache, pos, cfg: ModelConfig, *, window=None,
-                             use_window=None):
-    """int8-KV-cache decode (paper's group-wise quantization applied to the
-    cache, kvt layout): scores = (q . k_q) * k_s; ctx = (attn * v_s) . v_q.
+def gqa_decode_deferred_quant(p, x, cache, pos, cfg: ModelConfig, *, window=None,
+                              use_window=None):
+    """Quantized-KV-cache decode (paper's group-wise quantization applied to
+    the cache, kvt layout, int8 or fp8 storage):
+    scores = (q . k_q) * k_s; ctx = (attn * v_s) . v_q.
     The per-position scales factor out of the sums exactly like the GQMV
     group scales factor out of Alg. 1's group sums."""
     kq_c, ks_c, vq_c, vs_c = cache      # (b,KV,T,hd) int8, (b,KV,T) f32
@@ -449,11 +475,16 @@ def gqa_decode_deferred_int8(p, x, cache, pos, cfg: ModelConfig, *, window=None,
     attn_cur = _col_at(attn, pos)
     ctx = ctx + attn_cur.astype(x.dtype) * v_new[:, 0][:, :, None, :]
     ctx = ctx.reshape(b, h * hd)
-    kq_n, ks_n = _quantize_rows(k_new[:, 0])                  # (b,kv,hd)/(b,kv)
-    vq_n, vs_n = _quantize_rows(v_new[:, 0])
+    kvq = kv_quant_format(cfg) or "int8"
+    kq_n, ks_n = _quantize_rows(k_new[:, 0], kvq)             # (b,kv,hd)/(b,kv)
+    vq_n, vs_n = _quantize_rows(v_new[:, 0], kvq)
     rows = (kq_n[:, :, None, :], ks_n[:, :, None],
             vq_n[:, :, None, :], vs_n[:, :, None])
     return linear(p["wo"], ctx), rows
+
+
+# Backwards-compat alias (the int8_kv_cache flag path predates cfg.kv_quant).
+gqa_decode_deferred_int8 = gqa_decode_deferred_quant
 
 
 def gqa_decode_deferred(p, x, cache, pos, cfg: ModelConfig, *, window=None,
@@ -612,13 +643,18 @@ def gqa_verify_paged(p, x, pages, block_table, pos, cfg: ModelConfig, *,
 
 
 def gqa_decode_paged(p, x, pages, block_table, pos, cfg: ModelConfig, *,
-                     window=None, use_window=None):
+                     window=None, use_window=None, scales=None):
     """Paged decode step: attention over the block pool through each row's
     block table (kernels/ops.py::paged_attention), current token handled
     explicitly so the pool is read-only here. x: (b, d_model); pages:
     (k_pages, v_pages) each (NB, BS, KV, hd); block_table (b, MB);
     pos (b,) int32 virtual positions. Returns (y, (k_new, v_new)) — the
-    caller commits the rows with commit_layers_paged after the layer scan."""
+    caller commits the rows with commit_layers_paged after the layer scan.
+
+    With cfg.kv_quant the pool rows are int8/fp8 storage and ``scales`` is
+    the (k_scales, v_scales) pool leaves (NB, BS, KV); dequantization is
+    fused into the attention read and the returned rows are quantized —
+    (k_q, k_s, v_q, v_s) — ready for the pool commit."""
     from repro.kernels import ops as _kops
 
     k_pages, v_pages = pages
@@ -635,13 +671,24 @@ def gqa_decode_paged(p, x, pages, block_table, pos, cfg: ModelConfig, *,
     pspec = (None, None, "tp" if tp_kv else None, None)
     k_pages = logical.constrain(k_pages, *pspec)
     v_pages = logical.constrain(v_pages, *pspec)
+    k_scales = v_scales = None
+    if scales is not None:
+        k_scales, v_scales = scales
+        k_scales = logical.constrain(k_scales, *pspec[:-1])
+        v_scales = logical.constrain(v_scales, *pspec[:-1])
     qg = q.reshape(b, kv_heads, g, hd)
     mask = _flag_decode_mask(t, pos, window, use_window)       # (b, t)
     ctx = _kops.paged_attention(
         qg, k_pages, v_pages, block_table, pos, k_new[:, 0], v_new[:, 0],
         mask, scale=_gqa_scale(cfg), softcap=cfg.attn_logit_softcap or None,
+        k_scales=k_scales, v_scales=v_scales,
     )
     ctx = logical.constrain(ctx, "dp", None)
+    kvq = cfg.kv_quant
+    if kvq:
+        kq, ks = _quantize_rows(k_new[:, 0], kvq)              # (b,KV,hd)/(b,KV)
+        vq, vs = _quantize_rows(v_new[:, 0], kvq)
+        return linear(p["wo"], ctx), (kq, ks, vq, vs)
     return linear(p["wo"], ctx), (k_new[:, 0], v_new[:, 0])
 
 

@@ -136,11 +136,13 @@ def lm_init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
             "krope": jnp.zeros((cfg.num_layers, batch, cache_len, cfg.mla.qk_rope_dim), dtype),
         }
     hd = cfg.resolved_head_dim
-    if flags.get("int8_kv_cache"):
+    kvq = attn.kv_quant_format(cfg)
+    if kvq:
+        sdt = attn.KV_STORE_DTYPES[kvq]
         qshape = (cfg.num_layers, batch, cfg.num_kv_heads, cache_len, hd)
         sshape = (cfg.num_layers, batch, cfg.num_kv_heads, cache_len)
-        return {"k_q": jnp.zeros(qshape, jnp.int8), "k_s": jnp.zeros(sshape, jnp.float32),
-                "v_q": jnp.zeros(qshape, jnp.int8), "v_s": jnp.zeros(sshape, jnp.float32)}
+        return {"k_q": jnp.zeros(qshape, sdt), "k_s": jnp.zeros(sshape, jnp.float32),
+                "v_q": jnp.zeros(qshape, sdt), "v_s": jnp.zeros(sshape, jnp.float32)}
     if flags.get("kvt_cache_layout"):
         shape = (cfg.num_layers, batch, cfg.num_kv_heads, cache_len, hd)
     else:
@@ -178,6 +180,17 @@ def lm_init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int, dtyp
         )
     hd = cfg.resolved_head_dim
     shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads, hd)
+    kvq = attn.kv_quant_format(cfg)
+    if kvq:
+        # quantized pool: blocks at storage width plus per-row f32 scale
+        # leaves named ``*_scales`` (group = head_dim; dist/sharding.py keeps
+        # the block axis whole and puts KV heads on the model axis)
+        sdt = attn.KV_STORE_DTYPES[kvq]
+        sshape = shape[:-1]
+        return {"k_pages": jnp.zeros(shape, sdt),
+                "k_scales": jnp.zeros(sshape, jnp.float32),
+                "v_pages": jnp.zeros(shape, sdt),
+                "v_scales": jnp.zeros(sshape, jnp.float32)}
     return {"k_pages": jnp.zeros(shape, dtype), "v_pages": jnp.zeros(shape, dtype)}
 
 
@@ -193,6 +206,7 @@ def lm_decode_paged(params, token, cache, block_table, pos, cfg: ModelConfig):
     if flags.get("kvt_cache_layout") or flags.get("int8_kv_cache"):
         raise ValueError("paged KV cache supports the base float KV layout "
                          "(kvt_cache_layout / int8_kv_cache flags off)")
+    kvq = attn.kv_quant_format(cfg)
     pos = jnp.asarray(pos, jnp.int32)
     if not pos.ndim:
         pos = jnp.full((token.shape[0],), pos, jnp.int32)
@@ -206,12 +220,19 @@ def lm_decode_paged(params, token, cache, block_table, pos, cfg: ModelConfig):
         new_cache = {}
 
         def attn_fn(h):
-            y, (k, v) = attn.gqa_decode_paged(
+            scales = ((layer_cache["k_scales"], layer_cache["v_scales"])
+                      if kvq else None)
+            y, rows = attn.gqa_decode_paged(
                 lp["attn"], h, (layer_cache["k_pages"], layer_cache["v_pages"]),
                 block_table, pos, cfg,
                 window=cfg.sliding_window, use_window=use_window,
+                scales=scales,
             )
-            new_cache["k"], new_cache["v"] = k, v
+            if kvq:
+                (new_cache["k"], new_cache["k_s"],
+                 new_cache["v"], new_cache["v_s"]) = rows
+            else:
+                new_cache["k"], new_cache["v"] = rows
             return y
 
         g = cfg.gemma_norms
@@ -236,6 +257,13 @@ def lm_decode_paged(params, token, cache, block_table, pos, cfg: ModelConfig):
         "v_pages": attn.commit_layers_paged(cache["v_pages"], new_rows["v"],
                                             block_table, pos),
     }
+    if kvq:
+        # scale rows (L, b, KV) land in the (L, NB, BS, KV) scale pool at the
+        # same (physical block, offset) as their quantized rows
+        new_cache["k_scales"] = attn.commit_layers_paged(
+            cache["k_scales"], new_rows["k_s"], block_table, pos)
+        new_cache["v_scales"] = attn.commit_layers_paged(
+            cache["v_scales"], new_rows["v_s"], block_table, pos)
     return _logits(params, x, cfg), new_cache
 
 
@@ -256,9 +284,10 @@ def _check_verify_layout(cfg: ModelConfig):
             f"{cfg.arch_id}: speculative verify covers the GQA layouts; the "
             "MLA latent cache keeps the single-token path (supports_spec=False)"
         )
-    if flags.get("kvt_cache_layout") or flags.get("int8_kv_cache"):
+    if flags.get("kvt_cache_layout") or attn.kv_quant_format(cfg):
         raise ValueError("speculative verify supports the base float KV "
-                         "layout (kvt_cache_layout / int8_kv_cache flags off)")
+                         "layout (kvt_cache_layout / int8_kv_cache flags and "
+                         "kv_quant off)")
 
 
 def lm_verify(params, tokens, cache, pos, cfg: ModelConfig):
@@ -354,7 +383,26 @@ def contiguous_to_paged(cache, block_size: int):
     """Reshape a contiguous (L, b, T, KV, hd) cache into a block pool plus
     the identity block tables: row i owns blocks [i*MB, (i+1)*MB). T must be
     a multiple of ``block_size``. The paged decode over this pool is
-    bit-exact against the contiguous deferred path (tests/test_paged.py)."""
+    bit-exact against the contiguous deferred path (tests/test_paged.py).
+
+    A quantized contiguous cache ({k_q, k_s, v_q, v_s}, kvt layout
+    (L, b, KV, T, ...)) maps to the quantized pool layout
+    ({k_pages, k_scales, v_pages, v_scales}, time-major blocks)."""
+    if "k_q" in cache:
+        kq = cache["k_q"]                                 # (L, b, KV, T, hd)
+        L, b, _, t = kq.shape[:4]
+        if t % block_size:
+            raise ValueError(f"cache_len {t} not a multiple of block_size {block_size}")
+        mb = t // block_size
+
+        def pool_kvt(leaf):                               # (L,b,KV,T,...) -> blocks
+            x = jnp.moveaxis(leaf, 3, 2)                  # (L,b,T,KV,...)
+            return x.reshape(L, b * mb, block_size, *x.shape[3:])
+
+        table = jnp.arange(b * mb, dtype=jnp.int32).reshape(b, mb)
+        return {"k_pages": pool_kvt(kq), "k_scales": pool_kvt(cache["k_s"]),
+                "v_pages": pool_kvt(cache["v_q"]),
+                "v_scales": pool_kvt(cache["v_s"])}, table
     k = cache["k"]
     L, b, t = k.shape[:3]
     if t % block_size:
@@ -391,7 +439,7 @@ def lm_prefill(params, tokens, cfg: ModelConfig, cache_len: int, frontend_embeds
                 lp["attn"], h, cfg, cache_len,
                 window=cfg.sliding_window, use_window=use_window, lengths=lengths,
             )
-            if flags.get("int8_kv_cache"):
+            if attn.kv_quant_format(cfg):
                 y, (cache_out["k_q"], cache_out["k_s"],
                     cache_out["v_q"], cache_out["v_s"]) = out
             else:
@@ -419,7 +467,7 @@ def lm_decode(params, token, cache, pos, cfg: ModelConfig):
     rows; they are committed with one donated dynamic-update-slice (scalar
     pos) or one per-row scatter (vector pos) at the end (§Perf decode
     optimization)."""
-    int8kv = bool(flags.get("int8_kv_cache")) and not cfg.mla
+    int8kv = attn.kv_quant_format(cfg) is not None and not cfg.mla
     kvt = (bool(flags.get("kvt_cache_layout")) or int8kv) and not cfg.mla
     deferred = bool(flags.get("deferred_decode_cache")) or kvt or (
         cfg.mla and (flags.get("deferred_decode_cache") or flags.get("kvt_cache_layout")
@@ -445,7 +493,7 @@ def lm_decode(params, token, cache, pos, cfg: ModelConfig):
             if int8kv:
                 c = (layer_cache["k_q"], layer_cache["k_s"],
                      layer_cache["v_q"], layer_cache["v_s"])
-                y, rows = attn.gqa_decode_deferred_int8(
+                y, rows = attn.gqa_decode_deferred_quant(
                     lp["attn"], h, c, pos, cfg,
                     window=cfg.sliding_window, use_window=use_window,
                 )

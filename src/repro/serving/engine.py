@@ -58,14 +58,39 @@ class InferenceEngine:
       "int8"/"int4"  one registry format uniformly (core/quant.py)
       "mixed"        the per-layer-class preset: embeddings/classifier int8,
                      attention/FFN projections packed int4
+      "mixed3"       the sub-int4 preset: attention/FFN at true 3-bit packing
       {class: fmt}   an explicit layer-class -> format map
                      (core/policy.py ``resolve_format_map``)
+
+    ``kv_quant`` quantizes the KV cache itself ("int8" or "fp8"): contiguous
+    and paged caches store rows at storage width with per-row f32 scale
+    leaves, dequantized inside attention (models/attention.py). GQA
+    decoder_lm families only; incompatible with speculative decode.
     """
 
     def __init__(self, model: Model, params, *, cache_len: int,
                  quantize: bool | str | Mapping[str, str | None] = False,
                  tp: int = 1, eos_id: int | None = None,
-                 sanitize: bool | None = None):
+                 sanitize: bool | None = None, kv_quant: str | None = None):
+        if kv_quant:
+            from repro.models.attention import KV_STORE_DTYPES
+            from repro.models.registry import build
+
+            if kv_quant not in KV_STORE_DTYPES:
+                raise ValueError(
+                    f"unknown kv_quant format {kv_quant!r}; supported: "
+                    f"{sorted(KV_STORE_DTYPES)}")
+            if not model.supports_paged:
+                # supports_paged == "GQA decoder_lm cache layouts": the same
+                # families whose contiguous/paged KV rows the quantized
+                # layout covers (MLA latent / recurrent-state caches do not)
+                raise ValueError(
+                    f"{model.cfg.arch_id}: kv_quant covers the GQA decoder_lm "
+                    "cache layouts only (no MLA/recurrent/encdec)")
+            if model.cfg.kv_quant != kv_quant:
+                # rebuild so every model closure (init_cache, prefill,
+                # decode, decode_paged) sees the threaded config
+                model = build(dataclasses.replace(model.cfg, kv_quant=kv_quant))
         self.model = model
         self.cfg = model.cfg
         self.cache_len = cache_len
@@ -236,6 +261,11 @@ class InferenceEngine:
             if spec_k < 2:
                 raise ValueError(f"spec_k must be >= 2 (got {spec_k}): a "
                                  "chunk is the current token plus >=1 draft")
+            if self.cfg.kv_quant:
+                raise ValueError(
+                    f"{self.cfg.arch_id}: speculative decode requires the "
+                    "float KV layout (kv_quant off) — the verify chunk "
+                    "scatters float rows the quantized cache cannot hold")
             if not self.model.supports_spec:
                 raise ValueError(
                     f"{self.cfg.arch_id}: model family has no speculative "

@@ -196,6 +196,15 @@ class PagedAdapter(CacheAdapter):
                 ell, bg = r.shape[:2]
                 rr = r.reshape(ell, bg, tables.shape[1], block_size, *r.shape[3:])
                 return pages.at[:, tables].set(rr)
+            if "k_q" in rows:
+                # quantized prefill rows arrive kvt-major (L, bg, KV, S[, hd]);
+                # swing the time axis forward so the same block reshape applies
+                # to storage rows and their per-row scale leaves alike
+                tm = lambda leaf: jnp.moveaxis(leaf, 3, 2)
+                return {"k_pages": put(cache["k_pages"], tm(rows["k_q"])),
+                        "k_scales": put(cache["k_scales"], tm(rows["k_s"])),
+                        "v_pages": put(cache["v_pages"], tm(rows["v_q"])),
+                        "v_scales": put(cache["v_scales"], tm(rows["v_s"]))}
             return {"k_pages": put(cache["k_pages"], rows["k"]),
                     "v_pages": put(cache["v_pages"], rows["v"])}
 

@@ -156,16 +156,36 @@ def test_quant_invariants_flags_non_pow2_pack():
 
 
 def test_quant_invariants_flags_pack_group_straddle():
+    """d_model=16 at tp=1 DOES get quantized (gs=16 is a valid pow2 group),
+    but a pack-32 format's storage element spans two shards — the straddle
+    branch must fire. Geometries with NO valid group (the old fake-6d) are
+    left unquantized by the policy and are rightly skipped now."""
+    wide = QuantFormat(name="int1x32", bits=1, storage_dtype=jnp.int8,
+                       pack=32, pack_storage=4, qmax=0, kernel="gqmv_int4",
+                       pack_fn=lambda q: q, unpack_fn=lambda p: p)
+    cfg = types.SimpleNamespace(
+        arch_id="fake-16d", group_size=256, d_model=16, q_dim=256,
+        kv_dim=256, d_ff=256, vocab_padded=256, moe=None, mla=None, ssm=None)
+    checker = QuantInvariantsChecker(
+        formats={"int1x32": wide}, configs=[cfg],
+        kernel_hooks={"gqmv_int4"})
+    findings = list(checker.check_project(ROOT))
+    assert len(findings) == 1
+    assert "d_model=16" in findings[0].message
+    assert "straddle" in findings[0].message
+
+
+def test_quant_invariants_skips_unquantizable_geometry():
+    """No pow2 group >= 16 divides any shard of d_model=6: the PTQ driver
+    leaves such leaves unquantized, so there is no packed storage to
+    straddle and the checker must stay silent."""
     cfg = types.SimpleNamespace(
         arch_id="fake-6d", group_size=256, d_model=6, q_dim=256, kv_dim=256,
         d_ff=256, vocab_padded=256, moe=None, mla=None, ssm=None)
     checker = QuantInvariantsChecker(
         formats={"int4": get_format("int4")}, configs=[cfg],
         kernel_hooks={"gqmv_int4"})
-    findings = list(checker.check_project(ROOT))
-    assert len(findings) == 1
-    assert "d_model=6" in findings[0].message
-    assert "straddle" in findings[0].message
+    assert list(checker.check_project(ROOT)) == []
 
 
 def test_quant_invariants_clean_on_real_registry():

@@ -103,8 +103,13 @@ def test_resolve_format_map():
     assert partial["attn"] == "int4"
     assert partial["classifier"] is None
     assert partial["ffn"] == "int8"   # unspecified -> paper baseline
+    uni3 = resolve_format_map("int3")
+    assert set(uni3.values()) == {"int3"}
+    m3 = resolve_format_map("mixed3")
+    assert m3["attn"] == m3["ffn"] == "int3"
+    assert m3["embed"] == m3["classifier"] == "int8"
     with pytest.raises(ValueError, match="unknown quant format"):
-        resolve_format_map("int3")
+        resolve_format_map("int2")
     with pytest.raises(ValueError, match="unknown layer classes"):
         resolve_format_map({"attnn": "int4"})
     with pytest.raises(TypeError):

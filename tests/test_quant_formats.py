@@ -6,17 +6,22 @@ import numpy as np
 import pytest
 
 from repro.core.quant import (
+    FP8_MAX,
     QuantizedTensor,
     available_formats,
     choose_group_size,
     dequantize,
     get_format,
     largest_pow2_group,
+    pack_int3,
     pack_int4,
     quantization_error_stats,
     quantize,
+    quantize_fp8,
     quantize_groupwise,
+    quantize_int3,
     quantize_int4,
+    unpack_int3,
     unpack_int4,
 )
 
@@ -123,6 +128,105 @@ def test_int4_error_stats_between_int8_and_naive():
 
 
 # ---------------------------------------------------------------------------
+# int3 packing (8 logical values per 3 storage bytes)
+# ---------------------------------------------------------------------------
+
+def test_int3_registry_entry():
+    assert {"int3", "fp8"} <= set(available_formats())
+    f3 = get_format("int3")
+    assert (f3.bits, f3.pack, f3.pack_storage, f3.qmax) == (3, 8, 3, 3)
+    assert f3.storage_dtype == jnp.uint8 and f3.kind == "int"
+    # the bit law the quant-invariants checker enforces
+    assert f3.bits * f3.pack == 8 * jnp.dtype(f3.storage_dtype).itemsize * f3.pack_storage
+
+
+def test_pack_unpack_int3_roundtrip_exact():
+    rng = np.random.default_rng(21)
+    q = jnp.asarray(rng.integers(-3, 4, size=(16, 64)).astype(np.int8))
+    p = pack_int3(q)
+    assert p.shape == (16, 24) and p.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(unpack_int3(p)), np.asarray(q))
+
+
+def test_pack_int3_bad_axis_raises():
+    with pytest.raises(ValueError, match="divisible by 8"):
+        pack_int3(jnp.zeros((4, 28), jnp.int8))
+    with pytest.raises(ValueError, match="divide by 3"):
+        unpack_int3(jnp.zeros((4, 28), jnp.uint8))
+
+
+def test_int3_quantize_shapes_and_range():
+    rng = np.random.default_rng(22)
+    r = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32))
+    qt = quantize_int3(r, 64)
+    assert qt.fmt == "int3"
+    assert qt.storage_shape == (8, 96)          # 8 values per 3 bytes
+    assert qt.shape == qt.logical_shape == (8, 256)
+    assert qt.scales.shape == (8, 4)
+    vals = np.asarray(unpack_int3(qt.qvalues))
+    assert vals.max() <= 3 and vals.min() >= -3
+    assert vals.max() == 3 or vals.min() == -3  # full range used per Eq. 1
+
+
+def test_int3_roundtrip_error_bound():
+    """|r_hat - r| <= S/2 per element, S = 2*max|r|/7 per group."""
+    rng = np.random.default_rng(23)
+    r = jnp.asarray(rng.normal(size=(64, 512)).astype(np.float32))
+    qt = quantize_int3(r, 128)
+    err = np.abs(np.asarray(dequantize(qt)) - np.asarray(r))
+    half = np.repeat(np.asarray(qt.scales), 128, axis=-1) / 2
+    assert np.all(err <= half + 1e-6)
+
+
+def test_int3_group_size_must_divide_pack():
+    with pytest.raises(ValueError, match="divisible by 8"):
+        quantize_int3(jnp.ones((4, 48)), 12)
+
+
+# ---------------------------------------------------------------------------
+# fp8 (e4m3 storage, per-group scale)
+# ---------------------------------------------------------------------------
+
+def test_fp8_registry_entry():
+    f8 = get_format("fp8")
+    assert (f8.bits, f8.pack, f8.pack_storage) == (8, 1, 1)
+    assert f8.kind == "float"
+    assert f8.storage_dtype == jnp.float8_e4m3fn
+
+
+def test_fp8_quantize_shapes_and_storage():
+    rng = np.random.default_rng(24)
+    r = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32))
+    qt = quantize_fp8(r, 64)
+    assert qt.fmt == "fp8"
+    assert qt.qvalues.dtype == jnp.float8_e4m3fn
+    assert qt.storage_shape == qt.logical_shape == (8, 256)
+    assert qt.scales.shape == (8, 4)
+    # group absmax maps onto the e4m3 grid endpoint
+    vals = np.abs(np.asarray(qt.qvalues.astype(jnp.float32)))
+    assert vals.max() == pytest.approx(FP8_MAX)
+
+
+def test_fp8_relative_error_follows_magnitude():
+    """e4m3 is a float grid: relative error is roughly flat across magnitudes
+    (vs int8 whose absolute step is constant within a group)."""
+    rng = np.random.default_rng(25)
+    r = jnp.asarray(rng.normal(size=(32, 512)).astype(np.float32))
+    qt = quantize_fp8(r, 128)
+    back = np.asarray(dequantize(qt))
+    w = np.asarray(r)
+    rel = np.abs(back - w) / np.maximum(np.abs(w), 1e-9)
+    # 3 mantissa bits -> worst-case relative step 2^-4 = 6.25% of the value
+    assert np.median(rel) < 0.0625
+
+
+def test_fp8_zero_group_safe():
+    qt = quantize_fp8(jnp.zeros((2, 64)), 32)
+    assert bool(jnp.all(jnp.isfinite(dequantize(qt))))
+    np.testing.assert_array_equal(np.asarray(dequantize(qt)), 0.0)
+
+
+# ---------------------------------------------------------------------------
 # QuantizedTensor aux / accounting
 # ---------------------------------------------------------------------------
 
@@ -138,8 +242,12 @@ def test_bits_per_weight():
     r = jnp.ones((64, 256))
     assert quantize(r, 256, "int8").bits_per_weight() == pytest.approx(8.125)
     assert quantize(r, 256, "int4").bits_per_weight() == pytest.approx(4.125)
-    # nbytes is true storage: packed int4 halves the qvalues bytes
+    assert quantize(r, 256, "int3").bits_per_weight() == pytest.approx(3.125)
+    assert quantize(r, 256, "fp8").bits_per_weight() == pytest.approx(8.125)
+    # nbytes is true storage: packed int4 halves the qvalues bytes,
+    # int3 stores 3 bytes per 8 weights
     assert quantize(r, 256, "int4").nbytes() == 64 * 128 + 4 * 64
+    assert quantize(r, 256, "int3").nbytes() == 64 * 96 + 4 * 64
 
 
 def test_quantize_under_eval_shape():
@@ -149,6 +257,11 @@ def test_quantize_under_eval_shape():
     assert isinstance(out, QuantizedTensor)
     assert out.qvalues.shape == (32, 128) and out.qvalues.dtype == jnp.int8
     assert out.scales.shape == (32, 4)
+    out3 = jax.eval_shape(lambda x: quantize_int3(x, 64), jnp.zeros((32, 256)))
+    assert out3.qvalues.shape == (32, 96) and out3.qvalues.dtype == jnp.uint8
+    out8 = jax.eval_shape(lambda x: quantize_fp8(x, 64), jnp.zeros((32, 256)))
+    assert out8.qvalues.dtype == jnp.float8_e4m3fn
+    assert out8.qvalues.shape == (32, 256)
 
 
 # ---------------------------------------------------------------------------

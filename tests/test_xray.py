@@ -165,7 +165,8 @@ def test_bytes_rows_within_tolerance_with_headroom():
     """Pin the contract margin: every preset's model-vs-HLO delta stays
     within tolerance (regression here means the traffic model drifted)."""
     rows = [p for p in catalog() if p.expected_bytes is not None]
-    assert {p.fmt for p in rows} == {"int8", "int4", "mixed"}
+    assert {p.fmt for p in rows} == {"int8", "int4", "mixed", "int3", "fp8",
+                                     "mixed3", "int8+kv_int8", "int8+kv_fp8"}
     for p in rows:
         rep = analyze(p.hlo_text)
         delta = abs(rep.hbm_bytes / p.expected_bytes - 1.0)
